@@ -1,0 +1,93 @@
+"""Shared benchmark utilities: toy/DiT denoisers, timing, CSV output.
+
+All benches run on the single CPU device with small denoisers — the metrics
+that transfer to TPU scale are the *paper's own hardware-independent units*
+(SRDS iterations, effective serial evals, total evals) plus CPU wall-clock
+ratios measured on identical hardware (the paper's Tables 2-4 structure).
+"""
+from __future__ import annotations
+
+import dataclasses as dc
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import (DiffusionSchedule, SolverConfig, SRDSConfig,
+                        make_schedule, resolve_blocks, sample_sequential,
+                        srds_sample, srds_stats)
+from repro.models.dit import dit_forward, init_dit
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def toy_denoiser(dim: int = 16, seed: int = 0):
+    """Smooth nonlinear eps model — fast enough for N=1024 trajectories."""
+    w1 = jax.random.normal(jax.random.PRNGKey(seed), (dim, dim)) * 0.4
+    w2 = jax.random.normal(jax.random.PRNGKey(seed + 1), (dim, dim)) * 0.4
+
+    def model_fn(x, t):
+        h = jnp.tanh(x @ w1) * (0.4 + 3e-4 * t)
+        return jnp.tanh(h @ w2 + x * 0.1)
+
+    return model_fn
+
+
+def small_dit(name: str = "srds-dit-cifar", layers: int = 2, d: int = 64,
+              img: int = 16, seed: int = 0):
+    """A tiny-but-real DiT denoiser (attention+adaLN) for image benches."""
+    cfg = dc.replace(get_arch(name), num_layers=layers, d_model=d,
+                     num_heads=4, num_kv_heads=4, head_dim=d // 4, d_ff=4 * d,
+                     patch_size=4, dtype="float32")
+    params = init_dit(cfg, jax.random.PRNGKey(seed))
+
+    def model_fn(x, t):
+        tb = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (x.shape[0],))
+        return dit_forward(cfg, params, x, tb, use_kernel=False)
+
+    return model_fn, cfg, img
+
+
+def timeit(fn: Callable, *args, repeats: int = 3) -> float:
+    """Median wall-clock seconds of a jitted call (post-warmup)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def run_pair(model_fn, sched, solver, x0, srds_cfg):
+    """Returns dict with sequential + SRDS results and timings."""
+    seq = jax.jit(lambda x: sample_sequential(model_fn, sched, solver, x))
+    srd = jax.jit(lambda x: srds_sample(model_fn, sched, solver, x, srds_cfg))
+    t_seq = timeit(seq, x0)
+    t_srds = timeit(srd, x0)
+    res = srd(x0)
+    ref = seq(x0)
+    err = float(jnp.mean(jnp.abs(res.sample - ref)))
+    iters = int(res.iterations)
+    st = srds_stats(sched, solver, srds_cfg, iters)
+    stp = srds_stats(sched, solver, srds_cfg, iters, pipelined=True)
+    seq_evals = sched.num_steps * solver.evals_per_step
+    return dict(t_seq=t_seq, t_srds=t_srds, err=err, iters=iters,
+                eff_serial=st.serial_evals, total=st.total_evals,
+                eff_serial_pipelined=stp.serial_evals,
+                seq_evals=seq_evals,
+                # the paper's latency metric: parallel-device speedup is
+                # bounded by seq_evals / eff_serial (CPU wall-clock on ONE
+                # core cannot show it; see EXPERIMENTS.md)
+                proj_speedup=seq_evals / max(st.serial_evals, 1),
+                proj_speedup_pipelined=seq_evals / max(stp.serial_evals, 1))

@@ -1,0 +1,22 @@
+"""Paper Prop 4 (Appendix B): block-size sweep — per-iteration cost
+k*(N/B + B) is minimized near B=sqrt(N); measured iterations included."""
+import jax, jax.numpy as jnp
+from repro.core import SolverConfig, SRDSConfig, make_schedule
+from .common import emit, run_pair, toy_denoiser
+
+
+def main():
+    model_fn = toy_denoiser()
+    x0 = jax.random.normal(jax.random.PRNGKey(5), (1, 16))
+    n = 256
+    sched = make_schedule("ddpm_linear", n)
+    for b in (4, 8, 16, 32, 64):
+        r = run_pair(model_fn, sched, SolverConfig("ddim"), x0,
+                     SRDSConfig(tol=1e-3, num_blocks=b))
+        emit(f"prop4/B{b}", r["t_srds"] * 1e6,
+             f"iters={r['iters']};eff_serial={r['eff_serial']};"
+             f"per_iter={n//b + b};err={r['err']:.1e}")
+
+
+if __name__ == "__main__":
+    main()

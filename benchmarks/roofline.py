@@ -1,0 +1,59 @@
+"""Aggregate experiments/dryrun/*.json into the roofline table
+(EXPERIMENTS.md §Roofline) and a machine-readable summary.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_cells(d: str):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c) -> str:
+    r = c["roofline"]
+    mem = c.get("memory_analysis", {})
+    peak = (mem.get("argument_bytes") or 0) + (mem.get("temp_bytes") or 0)
+    uf = r.get("useful_fraction")
+    return ("| {arch} | {shape} | {mesh} | {c:.4f} | {m:.4f} | {x:.4f} | "
+            "{dom} | {uf} | {peak:.1f} |").format(
+        arch=c["arch"], shape=c["shape"], mesh=c["mesh"],
+        c=r["compute_s"], m=r["memory_s"], x=r["collective_s"],
+        dom=r["dominant"].replace("_s", ""),
+        uf=f"{uf:.2f}" if uf else "-",
+        peak=peak / 2 ** 30)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", default=None, help="write markdown table here")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | useful_frac | peak_GiB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep] + [fmt_row(c) for c in cells]
+    out = "\n".join(lines)
+    print(out)
+    # quick aggregates
+    doms = {}
+    for c in cells:
+        doms[c["roofline"]["dominant"]] = doms.get(c["roofline"]["dominant"], 0) + 1
+    print(f"\n# {len(cells)} cells; dominant-term counts: {doms}")
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(out + "\n")
+
+
+if __name__ == "__main__":
+    main()

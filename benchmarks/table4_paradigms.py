@@ -1,0 +1,35 @@
+"""Paper Table 4: pipelined SRDS vs ParaDiGMS at thresholds 1e-3/1e-2/1e-1 —
+eff-serial evals (the hardware-independent latency unit) + CPU wall-clock
+on identical hardware."""
+import jax, jax.numpy as jnp
+from repro.core import (ParaDiGMSConfig, SolverConfig, SRDSConfig,
+                        make_schedule, paradigms_sample, sample_sequential,
+                        srds_stats)
+from .common import emit, run_pair, timeit, toy_denoiser
+
+
+def main():
+    model_fn = toy_denoiser()
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (1, 16))
+    for n, b in [(961, 31), (196, 14), (25, 5)]:
+        sched = make_schedule("ddpm_linear", n)
+        solver = SolverConfig("ddim")
+        r = run_pair(model_fn, sched, solver, x0,
+                     SRDSConfig(tol=1e-3, num_blocks=b))
+        pd = {}
+        for tol in (1e-3, 1e-2, 1e-1):
+            fn = jax.jit(lambda x, tol=tol: paradigms_sample(
+                model_fn, sched, solver, x[0],
+                ParaDiGMSConfig(window=min(n, 64), tol=tol)))
+            t = timeit(fn, x0)
+            res = fn(x0)
+            pd[tol] = (int(res.iterations), t)
+        emit(f"table4/ddim{n}", r["t_srds"] * 1e6,
+             f"srds_eff={r['eff_serial_pipelined']};"
+             f"srds_proj={r['proj_speedup_pipelined']:.2f}x;"
+             + ";".join(f"paradigms@{k:g}:eff={v[0]},proj={n/max(v[0],1):.2f}x"
+                        for k, v in pd.items()))
+
+
+if __name__ == "__main__":
+    main()

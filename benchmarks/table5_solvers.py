@@ -1,0 +1,25 @@
+"""Paper Table 5 (Appendix C): SRDS with other off-the-shelf solvers
+(DDPM-frozen-noise, DPM-Solver-2, DDIM)."""
+import jax, jax.numpy as jnp
+from repro.core import SolverConfig, SRDSConfig, make_schedule
+from .common import emit, run_pair, toy_denoiser
+
+
+def main():
+    model_fn = toy_denoiser()
+    x0 = jax.random.normal(jax.random.PRNGKey(3), (1, 16))
+    key = jax.random.PRNGKey(9)
+    cases = [("ddpm", 961), ("ddpm", 196), ("dpm2", 196), ("dpm2", 25),
+             ("ddim", 196), ("ddim", 25)]
+    for name, n in cases:
+        sched = make_schedule("ddpm_linear", n)
+        solver = SolverConfig(name, noise_key=key)
+        r = run_pair(model_fn, sched, solver, x0, SRDSConfig(tol=1e-3))
+        emit(f"table5/{name}{n}", r["t_srds"] * 1e6,
+             f"seq_evals={r['seq_evals']};eff_serial={r['eff_serial']};"
+             f"iters={r['iters']};err={r['err']:.1e};"
+             f"proj_speedup={r['proj_speedup_pipelined']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Table 6 (Appendix D): device scaling of the distributed SRDS
+sampler (1/2/4 fake devices, wall-clock per sample) vs ParaDiGMS."""
+import json, os, subprocess, sys
+from .common import emit
+
+CODE = r"""
+import jax, json, time
+import jax.numpy as jnp
+from repro.core import *
+from repro.core.pipelined import make_sharded_sampler
+
+D = {d}
+w = jax.random.normal(jax.random.PRNGKey(0), (16, 16)) * 0.4
+model_fn = lambda x, t: jnp.tanh(x @ w) * (0.4 + 3e-4 * t)
+mesh = jax.make_mesh((D,), ("time",), axis_types=(jax.sharding.AxisType.Auto,))
+sched = make_schedule("ddpm_linear", 100)
+x0 = jax.random.normal(jax.random.PRNGKey(1), (1, 16))
+samp = make_sharded_sampler(mesh, "time", model_fn, sched,
+                            SolverConfig("ddim"),
+                            SRDSConfig(tol=1e-4, num_blocks=20))
+res = samp(x0); jax.block_until_ready(res.sample)
+ts = []
+for _ in range(3):
+    t0 = time.perf_counter(); res = samp(x0)
+    jax.block_until_ready(res.sample); ts.append(time.perf_counter() - t0)
+print(json.dumps({{"t": sorted(ts)[1], "iters": int(res.iterations)}}))
+"""
+
+
+def main():
+    for d in (1, 2, 4):
+        env = dict(os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={d}",
+                   PYTHONPATH="src")
+        out = subprocess.run([sys.executable, "-c", CODE.format(d=d)],
+                             capture_output=True, text=True, env=env)
+        r = json.loads(out.stdout.strip().splitlines()[-1]) \
+            if out.returncode == 0 else {"t": -1, "iters": -1}
+        emit(f"table6/devices{d}", r["t"] * 1e6,
+             f"iters={r['iters']};wallclock_s={r['t']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Table 8 (Appendix F): tolerance ablation — iterations & effective
+serial evals vs tau; KID replaced by direct error against the sequential
+solve (the approximation-free metric)."""
+import jax, jax.numpy as jnp
+from repro.core import SolverConfig, SRDSConfig, make_schedule
+from .common import emit, run_pair, small_dit
+
+
+def main():
+    model_fn, cfg, img = small_dit(layers=1, d=32, img=16, seed=5)
+    x0 = jax.random.normal(jax.random.PRNGKey(4), (1, img, img, 3))
+    sched = make_schedule("ddpm_linear", 1024)
+    for tau in (1e-2, 1e-3, 1e-4):
+        r = run_pair(model_fn, sched, SolverConfig("ddim"), x0,
+                     SRDSConfig(tol=tau, num_blocks=32))
+        emit(f"table8/tau{tau:g}", r["t_srds"] * 1e6,
+             f"iters={r['iters']};eff_serial={r['eff_serial']};"
+             f"total={r['total']};err_vs_seq={r['err']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""End-to-end driver: train a DiT diffusion model with the full production
+stack — data pipeline, AdamW, checkpoint/restart, fault-tolerant loop —
+then sample from it with SRDS.
+
+Presets:
+  --preset cpu   ~1M-param DiT, 300 steps   (default; minutes on this box)
+  --preset full  the ~100M srds-dit-cifar, a few hundred steps (use on a
+                 real accelerator; same code path)
+
+  PYTHONPATH=src python examples/train_diffusion.py --preset cpu
+"""
+import argparse
+import dataclasses as dc
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_arch
+from repro.core import (SolverConfig, SRDSConfig, make_schedule,
+                        sample_sequential, srds_sample)
+from repro.data import DataConfig, make_stream
+from repro.models.dit import dit_forward, init_dit
+from repro.optim import AdamWConfig, init_opt_state, warmup_cosine
+from repro.runtime import LoopConfig, PreemptionSignal, train_loop
+from repro.train import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="cpu", choices=["cpu", "full"])
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt", default="/tmp/srds_dit_ckpt")
+    args = ap.parse_args()
+
+    base = get_arch("srds-dit-cifar")
+    if args.preset == "cpu":
+        cfg = dc.replace(base, num_layers=3, d_model=96, num_heads=4,
+                         num_kv_heads=4, head_dim=24, d_ff=384, patch_size=4,
+                         dtype="float32")
+        steps = args.steps or 300
+        batch = 16
+    else:
+        cfg = base   # 12L/768d ~100M params, the paper-scale benchmark model
+        steps = args.steps or 300
+        batch = 64
+
+    key = jax.random.PRNGKey(0)
+    params = init_dit(cfg, key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"DiT {cfg.name} [{args.preset}]: {n_params:,} params, "
+          f"{steps} steps, batch {batch}")
+    opt = init_opt_state(params)
+    opt_cfg = AdamWConfig(lr=1e-3, schedule=warmup_cosine(1e-3, 30, steps))
+    step = jax.jit(make_train_step(cfg, opt_cfg, loss_kind="diffusion",
+                                   use_kernel=False),
+                   donate_argnums=(0, 1))
+    stream = make_stream(cfg, DataConfig(global_batch=batch, seq_len=0))
+    ck = Checkpointer(args.ckpt)
+    hist = []
+
+    def log(s, m):
+        hist.append(m["loss"])
+        print(f"  step {s}: mse={m['loss']:.4f} lr={m['lr']:.2e} "
+              f"({m['step_time_s']:.2f}s/step)")
+
+    params, opt, _ = train_loop(step, params, opt, stream, key, ck,
+                                LoopConfig(total_steps=steps, ckpt_every=100,
+                                           log_every=25),
+                                preemption=PreemptionSignal(install_sigterm=True),
+                                metrics_cb=log)
+    print(f"loss: {hist[0]:.4f} -> {hist[-1]:.4f}")
+
+    # SRDS sampling from the trained model
+    def model_fn(x, t):
+        tb = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (x.shape[0],))
+        return dit_forward(cfg, params, x, tb, use_kernel=False)
+
+    size = 32 if args.preset == "full" else 32
+    sched = make_schedule("ddpm_linear", 100)
+    x0 = jax.random.normal(jax.random.PRNGKey(9), (2, size, size, 3))
+    ref = sample_sequential(model_fn, sched, SolverConfig("ddim"), x0)
+    res = srds_sample(model_fn, sched, SolverConfig("ddim"), x0,
+                      SRDSConfig(tol=1e-3))
+    print(f"SRDS on the trained model: {int(res.iterations)} refinements, "
+          f"err vs sequential {float(jnp.mean(jnp.abs(res.sample-ref))):.2e}")
+    print("sample stats:",
+          f"min={float(res.sample.min()):.2f} max={float(res.sample.max()):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Sharded, elastic, async checkpointing (no external deps).
+
+Layout:  <dir>/step_<N>/
+             manifest.json     — treedef, shapes, dtypes, step, metadata
+             host<k>.npz       — this host's gathered leaf arrays
+         <dir>/LATEST          — atomic pointer (written last = commit)
+
+Properties:
+  * atomic commit: data goes to ``step_N.tmp`` then a single rename + the
+    LATEST pointer update, so a preemption mid-save never corrupts the
+    previous checkpoint (restore ignores .tmp dirs);
+  * elastic restore: leaves are saved *unsharded* (fully gathered); restore
+    applies whatever shardings the new mesh prescribes — scale-up/down and
+    re-toplogy are tested in tests/test_checkpoint.py;
+  * async: ``save_async`` snapshots to host RAM synchronously (cheap) and
+    writes in a worker thread; ``wait()`` joins before the next save.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+
+def _leaf_key(i: int) -> str:
+    return f"leaf_{i:05d}"
+
+
+def _to_storable(a: np.ndarray) -> np.ndarray:
+    """npz cannot round-trip ml_dtypes (bf16/fp8): store a bit-view."""
+    if a.dtype == ml_dtypes.bfloat16:
+        return a.view(np.uint16)
+    if a.dtype in (ml_dtypes.float8_e4m3fn, ml_dtypes.float8_e5m2):
+        return a.view(np.uint8)
+    return a
+
+
+def _from_storable(a: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str == "bfloat16":
+        return a.view(ml_dtypes.bfloat16)
+    if dtype_str.startswith("float8"):
+        return a.view(getattr(ml_dtypes, dtype_str))
+    return a
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[Future] = None
+
+    # ---- save ------------------------------------------------------------
+
+    def _write(self, step: int, flat_np, treedef_str, meta):
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {
+            "step": step,
+            "treedef": treedef_str,
+            "leaves": [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                       for a in flat_np],
+            "meta": meta or {},
+            "hosts": jax.process_count(),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        np.savez(os.path.join(tmp, f"host{jax.process_index()}.npz"),
+                 **{_leaf_key(i): _to_storable(a)
+                    for i, a in enumerate(flat_np)})
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                   os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def _snapshot(self, tree):
+        flat, treedef = jax.tree.flatten(tree)
+        # gather to host (unsharded view) — elastic restore needs full arrays
+        flat_np = [np.asarray(jax.device_get(x)) for x in flat]
+        return flat_np, str(treedef)
+
+    def save(self, step: int, tree, meta: Optional[dict] = None):
+        self.wait()
+        flat_np, td = self._snapshot(tree)
+        self._write(step, flat_np, td, meta)
+
+    def save_async(self, step: int, tree, meta: Optional[dict] = None):
+        self.wait()
+        flat_np, td = self._snapshot(tree)          # sync host snapshot
+        self._pending = self._pool.submit(self._write, step, flat_np, td, meta)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ---- restore -----------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            steps = self.all_steps()
+            return steps[-1] if steps else None
+        with open(p) as f:
+            return int(f.read().strip())
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of ``template`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: matching pytree of NamedSharding
+        for elastic placement (None -> default device)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, f"host{jax.process_index()}.npz"))
+        flat_t, treedef = jax.tree.flatten(template)
+        assert len(flat_t) == len(manifest["leaves"]), \
+            f"leaf count mismatch: ckpt {len(manifest['leaves'])} vs template {len(flat_t)}"
+        flat_s = (jax.tree.leaves(shardings) if shardings is not None
+                  else [None] * len(flat_t))
+        out = []
+        for i, (t, s) in enumerate(zip(flat_t, flat_s)):
+            a = _from_storable(data[_leaf_key(i)],
+                               manifest["leaves"][i]["dtype"])
+            if tuple(a.shape) != tuple(t.shape):
+                raise ValueError(f"shape mismatch leaf {i}: {a.shape} vs {t.shape}")
+            a = a.astype(t.dtype)
+            out.append(jax.device_put(a, s) if s is not None else jnp.asarray(a))
+        return jax.tree.unflatten(treedef, out), manifest["step"], manifest["meta"]

@@ -1,0 +1,22 @@
+"""Architecture configs (one module per assigned arch + the paper's own)."""
+import importlib
+
+from .base import (SHAPES, ArchConfig, ShapeConfig, arch_names, get_arch,
+                   register_arch, shape_cells)
+
+_MODULES = [
+    "stablelm_3b", "qwen1_5_32b", "qwen3_8b", "qwen3_14b", "phi3_vision",
+    "rwkv6_1_6b", "hymba_1_5b", "arctic_480b", "kimi_k2", "hubert_xlarge",
+    "srds_dit",
+]
+
+_loaded = False
+
+
+def load_all():
+    global _loaded
+    if _loaded:
+        return
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _loaded = True

@@ -1,0 +1,210 @@
+"""Architecture + shape configuration schema and registry."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One architecture from the assigned pool (or the paper's own DiT).
+
+    Exact published dimensions go in the fields; TP-padding (heads/vocab to
+    multiples of the model-axis size) is *derived*, never baked in, so the
+    logical arch stays faithful to the source.
+    """
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio | dit
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    causal: bool = True              # False => encoder-only
+    window: Optional[int] = None     # sliding-window attention size
+    rope_theta: float = 10_000.0
+
+    # block wiring
+    block: str = "attn_mlp"          # attn_mlp | rwkv6 | hymba
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "swiglu"              # swiglu | gelu
+
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_dense_residual: bool = False  # arctic: dense MLP in parallel with MoE
+    moe_capacity_factor: float = 1.25
+
+    # SSM / RWKV
+    ssm_state: int = 0               # hymba per-head SSM state size
+    ssm_d_inner: int = 0             # hymba SSM inner width (0 -> d_model)
+    rwkv_head_dim: int = 64
+
+    # modality frontends (STUBS: input_specs feeds precomputed embeddings)
+    frontend: Optional[str] = None   # vision | audio
+    num_prefix_embeds: int = 0       # image patches spliced as a prefix
+
+    # DiT specifics
+    patch_size: int = 0
+    in_channels: int = 0
+
+    dtype: str = "bfloat16"
+    source: str = ""                 # provenance tag from the assignment
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def padded_heads(self, model_parallel: int) -> Tuple[int, int]:
+        """(q_heads, kv_heads) padded so TP over ``model_parallel`` divides.
+
+        Order matters: q heads are padded to a multiple of the TP degree
+        first, then kv heads to the smallest divisor of the padded q count
+        that is >= the original (keeps the GQA group ratio integral).
+        Examples at TP16: hymba 25/5 -> 32/8; qwen1.5 40/40 -> 48/48;
+        arctic 56/8 -> 64/8; qwen3 32/8 unchanged (kv replicates).
+        """
+        hq, hkv = self.num_heads, self.num_kv_heads
+        if hq % model_parallel:
+            hq = _round_up(hq, model_parallel)
+        if hq % hkv:
+            hkv = min(d for d in range(hkv, hq + 1) if hq % d == 0)
+        return hq, hkv
+
+    def padded_vocab(self, model_parallel: int) -> int:
+        return _round_up(self.vocab_size, max(128, model_parallel))
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence mixing (SSM / SWA hybrid / linear attn)."""
+        return self.block in ("rwkv6", "hymba") or self.window is not None
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for roofline
+        MODEL_FLOPS=6ND accounting."""
+        d = self.d_model
+        hd = self.resolved_head_dim
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+        if self.block == "rwkv6":
+            per_layer = 4 * d * d + 2 * d * self.d_ff + d * d  # tmix + cmix
+        elif self.block == "hymba":
+            din = self.ssm_d_inner or d
+            ssm = d * 2 * din + din * (2 * self.ssm_state + 2) + din * d
+            mlp = 3 * d * self.d_ff if self.act == "swiglu" else 2 * d * self.d_ff
+            per_layer = attn + ssm + mlp
+        else:
+            mlp_mult = 3 if self.act == "swiglu" else 2
+            per_layer = attn + mlp_mult * d * self.d_ff
+            if self.moe_experts:
+                per_layer += self.moe_experts * mlp_mult * d * self.moe_d_ff + d * self.moe_experts
+                if not self.moe_dense_residual:
+                    per_layer -= mlp_mult * d * self.d_ff  # MoE replaces dense
+        embed = self.vocab_size * d * (1 if self.is_encoder_only else 2)
+        return self.num_layers * per_layer + embed
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of experts)."""
+        if not self.moe_experts:
+            return self.param_count()
+        mlp_mult = 3 if self.act == "swiglu" else 2
+        inactive = (self.moe_experts - self.moe_top_k) * mlp_mult * self.d_model * self.moe_d_ff
+        return self.param_count() - self.num_layers * inactive
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            num_layers=2,
+            d_model=64,
+            num_heads=max(2, min(4, self.num_heads)),
+            num_kv_heads=max(1, min(2, self.num_kv_heads)),
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            moe_experts=min(self.moe_experts, 4),
+            moe_d_ff=64 if self.moe_experts else 0,
+            moe_top_k=min(self.moe_top_k, 2),
+            ssm_state=min(self.ssm_state, 8),
+            ssm_d_inner=64 if self.block == "hymba" else 0,
+            rwkv_head_dim=16,
+            window=min(self.window, 32) if self.window else None,
+            num_prefix_embeds=min(self.num_prefix_embeds, 4),
+            patch_size=min(self.patch_size, 2) if self.patch_size else 0,
+            dtype="float32",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell from the assignment."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+_ARCHS = {}
+
+
+def register_arch(cfg: ArchConfig) -> ArchConfig:
+    _ARCHS[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _ARCHS:
+        # late import so `configs.<arch>` modules self-register
+        from repro import configs as _c  # noqa: F401
+        _c.load_all()
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_ARCHS)}")
+    return _ARCHS[name]
+
+
+def arch_names():
+    from repro import configs as _c
+    _c.load_all()
+    return sorted(_ARCHS)
+
+
+def shape_cells(arch: ArchConfig):
+    """The runnable (arch x shape) cells per the assignment's skip rules."""
+    cells = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not arch.supports_long_context:
+            continue  # full-attention archs skip 500k decode (see DESIGN.md)
+        if s.is_decode and arch.is_encoder_only:
+            continue  # encoder-only: no decode step
+        cells.append(s)
+    return cells

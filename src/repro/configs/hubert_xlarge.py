@@ -1,0 +1,13 @@
+"""hubert-xlarge [audio] — encoder-only, conv frontend STUBBED
+(input_specs provides precomputed frame embeddings) —
+[arXiv:2106.07447; unverified]."""
+from .base import ArchConfig, register_arch
+
+HUBERT_XLARGE = register_arch(ArchConfig(
+    name="hubert-xlarge", family="audio",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+    d_ff=5120, vocab_size=504,
+    causal=False, act="gelu", norm="layernorm",
+    frontend="audio",
+    source="arXiv:2106.07447; unverified",
+))

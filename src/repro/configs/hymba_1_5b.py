@@ -1,0 +1,13 @@
+"""hymba-1.5b [hybrid] — parallel attn+mamba heads, SWA —
+[arXiv:2411.13676; hf].  All layers SWA (SSM path carries global context);
+heads padded 25->32 / kv 5->8 only when TP requires (derived, see base)."""
+from .base import ArchConfig, register_arch
+
+HYMBA_1_5B = register_arch(ArchConfig(
+    name="hymba-1.5b", family="hybrid",
+    num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+    d_ff=5504, vocab_size=32001, head_dim=64,
+    block="hymba", ssm_state=16, ssm_d_inner=1600,
+    window=1024, act="swiglu", norm="rmsnorm",
+    source="arXiv:2411.13676; hf",
+))

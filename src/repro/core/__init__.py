@@ -1,0 +1,14 @@
+"""SRDS core: schedules, solvers, sequential/parareal/pipelined samplers."""
+from .schedules import DiffusionSchedule, make_schedule
+from .solvers import SolverConfig, solve, solver_step, solver_names
+from .sequential import SampleStats, sample_sequential, sequential_stats
+from .parareal import SRDSConfig, SRDSResult, resolve_blocks, srds_sample, srds_stats
+from .paradigms import ParaDiGMSConfig, ParaDiGMSResult, paradigms_sample, paradigms_stats
+
+__all__ = [
+    "DiffusionSchedule", "make_schedule",
+    "SolverConfig", "solve", "solver_step", "solver_names",
+    "SampleStats", "sample_sequential", "sequential_stats",
+    "SRDSConfig", "SRDSResult", "resolve_blocks", "srds_sample", "srds_stats",
+    "ParaDiGMSConfig", "ParaDiGMSResult", "paradigms_sample", "paradigms_stats",
+]

@@ -1,0 +1,283 @@
+"""Distributed SRDS: shard_map block-parallel and wavefront-pipelined samplers.
+
+Two TPU-native implementations of the paper's parallelism:
+
+``srds_sharded_local``
+    Algorithmically identical to :func:`repro.core.parareal.srds_sample`, but
+    the parareal blocks live on a mesh axis: each device(-group) runs the
+    fine solves for its own blocks; boundary values are exchanged with one
+    ``all_gather`` per refinement and the (cheap) coarse sweep is computed
+    redundantly on every device.  Supports >1 block per device and the
+    SRDS-native straggler-mitigation mask (stale fine results are accepted
+    for straggling blocks; correctness is preserved because convergence is
+    still gated on the final-sample residual and exactness re-enters as soon
+    as the block computes again).
+
+``srds_pipelined_local``
+    The paper's wavefront pipeline (Fig. 4) at *model-eval granularity*:
+    one block per device; at superstep ``s`` device ``i`` performs fine
+    sub-step ``j=(s-i) mod S`` of refinement ``p=(s-i)//S + 1``; the coarse
+    eval is **batched into the same model call** as the fine eval (paper
+    §3.4: "the coarse solver is simply a DDIM-step with a larger time-step,
+    so it can be batched with fine solves").  Boundary values ride a ring
+    ``lax.ppermute`` — this replaces the paper's torch.multiprocessing
+    coordinator (their footnote 4) with the ICI-native pattern.  Effective
+    serial evals ≈ k·S + B - 1, reproducing the paper's Table 3 pipelining
+    gain (e.g. N=25: 9 supersteps for k=1).
+
+Both functions are written against a *local* (per-shard) view and must be
+called inside ``shard_map``; ``make_*_sampler`` wrappers build the jitted
+SPMD program for a given mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .parareal import SRDSConfig, SRDSResult, _norm, resolve_blocks
+from .schedules import DiffusionSchedule
+from .solvers import ModelFn, SolverConfig, solve, solver_step
+
+
+# --------------------------------------------------------------------------
+# Block-parallel (non-wavefront) distributed SRDS
+# --------------------------------------------------------------------------
+
+def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
+                       solver: SolverConfig, x_init: jnp.ndarray,
+                       axis: str, cfg: SRDSConfig,
+                       straggler_fn: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None):
+    """Per-shard body. x_init is replicated; returns replicated outputs.
+
+    ``straggler_fn(p) -> (B,) bool`` marks blocks whose fine solve is treated
+    as dropped at refinement ``p`` (stale result substituted).
+    """
+    n = sched.num_steps
+    d = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    b_total, s_steps = resolve_blocks(n, cfg.num_blocks)
+    if b_total % d != 0:
+        raise ValueError(f"num_blocks={b_total} not divisible by axis size {d}")
+    b_local = b_total // d
+    max_iters = cfg.max_iters if cfg.max_iters is not None else b_total
+
+    my_starts = (me * b_local + jnp.arange(b_local, dtype=jnp.int32)) * s_steps
+    all_starts = jnp.arange(b_total, dtype=jnp.int32) * s_steps
+
+    def G(x, i0):
+        return solve(model_fn, sched, solver, x, i0, 1, s_steps)
+
+    def F(x, i0):
+        return solve(model_fn, sched, solver, x, i0, s_steps, 1)
+
+    # coarse init: sequential sweep, computed redundantly on every device
+    def init_body(x, i0):
+        g = G(x, i0)
+        return g, g
+
+    _, x_tail = jax.lax.scan(init_body, x_init, all_starts)       # (B, ...)
+    prev_coarse = x_tail
+
+    class Carry(NamedTuple):
+        p: jnp.ndarray
+        x_tail: jnp.ndarray       # (B, ...) replicated running trajectory
+        prev_coarse: jnp.ndarray  # (B, ...)
+        y_prev: jnp.ndarray       # (B, ...) last fine results (straggler reuse)
+        delta: jnp.ndarray
+        history: jnp.ndarray
+
+    def cond(c: Carry):
+        return jnp.logical_and(c.p < max_iters, c.delta >= cfg.tol)
+
+    def body(c: Carry) -> Carry:
+        heads = jnp.concatenate([x_init[None], c.x_tail[:-1]], axis=0)
+        my_heads = jax.lax.dynamic_slice_in_dim(heads, me * b_local, b_local)
+        # ---- local fine solves (the parallel part) ----
+        y_local = jax.vmap(F)(my_heads, my_starts)                 # (B_local, ...)
+        y = jax.lax.all_gather(y_local, axis, tiled=True)          # (B, ...)
+        if straggler_fn is not None:
+            mask = straggler_fn(c.p).reshape((-1,) + (1,) * (y.ndim - 1))
+            y = jnp.where(jnp.logical_and(mask, c.p > 0), c.y_prev, y)
+        # ---- redundant coarse sweep (cheap: B coarse evals) ----
+        def sweep(x_cur, inp):
+            y_i, prev_i, i0 = inp
+            cur = G(x_cur, i0)
+            x_next = y_i + cur - prev_i
+            return x_next, (x_next, cur)
+
+        _, (new_tail, cur_all) = jax.lax.scan(sweep, x_init, (y, c.prev_coarse, all_starts))
+        delta = _norm(new_tail[-1] - c.x_tail[-1], cfg.norm)
+        history = c.history.at[c.p].set(delta)
+        return Carry(c.p + 1, new_tail, cur_all, y, delta, history)
+
+    init = Carry(jnp.int32(0), x_tail, prev_coarse, x_tail,
+                 jnp.float32(jnp.inf), jnp.full((max_iters,), jnp.inf, jnp.float32))
+    out = jax.lax.while_loop(cond, body, init)
+    return out.x_tail[-1], out.p, out.delta, out.history
+
+
+def make_sharded_sampler(mesh, axis: str, model_fn: ModelFn,
+                         sched: DiffusionSchedule, solver: SolverConfig,
+                         cfg: SRDSConfig, straggler_fn=None):
+    """jit-compiled SPMD sampler: x_init (replicated) -> SRDSResult."""
+    def local(x_init):
+        s, p, d, h = srds_sharded_local(model_fn, sched, solver, x_init, axis,
+                                        cfg, straggler_fn)
+        return s, p, d, h
+
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=P(), out_specs=(P(), P(), P(), P()),
+                       check_vma=False)
+
+    @jax.jit
+    def sample(x_init):
+        s, p, d, h = fn(x_init)
+        return SRDSResult(sample=s, iterations=p, final_delta=d,
+                          delta_history=h, trajectory=None)
+
+    return sample
+
+
+# --------------------------------------------------------------------------
+# Wavefront-pipelined SRDS (paper Fig. 4, eval-granular)
+# --------------------------------------------------------------------------
+
+class _WaveCarry(NamedTuple):
+    s: jnp.ndarray             # superstep counter
+    z: jnp.ndarray             # running fine-solve state
+    x_new: jnp.ndarray         # latest left-boundary value x_i^p
+    prev_coarse: jnp.ndarray   # G(x_i^{p-1})
+    out_last: jnp.ndarray      # device's last completed block output
+    delta: jnp.ndarray         # last residual on device B-1 (replicated scalar)
+    p_done: jnp.ndarray        # completed refinements (device-local)
+    done: jnp.ndarray          # converged flag (replicated)
+
+
+def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
+                         solver: SolverConfig, x_init: jnp.ndarray,
+                         axis: str, cfg: SRDSConfig):
+    """Per-shard wavefront body; one parareal block per device along ``axis``.
+
+    Every superstep performs exactly ONE model call on a 2-sample batch
+    (fine slot + coarse slot) per device — the paper's unit of "effective
+    serial evals".  The coarse slot is live only on block-boundary and init
+    supersteps; it is evaluated unconditionally to keep SPMD lockstep (cost:
+    a 2x smaller micro-batch would not be faster on the MXU anyway).
+    """
+    n = sched.num_steps
+    d = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    if n % d != 0:
+        raise ValueError(f"N={n} must be divisible by device count {d}")
+    s_steps = n // d                       # fine steps per block
+    max_iters = cfg.max_iters if cfg.max_iters is not None else d
+    max_supersteps = max_iters * s_steps + d + 2
+    right = [(i, (i + 1) % d) for i in range(d)]
+
+    block_i0 = me * s_steps                # my block's first grid index
+
+    def batched_eval(z, j, x_coarse):
+        """One lockstep model call advancing fine slot and coarse slot."""
+        fine_i0 = block_i0 + j
+        # Stack the two slots on a fresh leading axis; solver_step below
+        # will broadcast its per-slot grid indices.
+        stacked = jnp.stack([z, x_coarse], axis=0)
+        i0 = jnp.stack([fine_i0, block_i0])
+        i1 = jnp.stack([fine_i0 + 1, block_i0 + s_steps])
+
+        def one(slot, a, b):
+            return solver_step(model_fn, sched, solver, slot, a, b)
+
+        out = jax.vmap(one)(stacked, i0, i1)
+        return out[0], out[1]              # fine-advanced z, coarse result
+
+    def body(c: _WaveCarry) -> _WaveCarry:
+        rel = c.s - me
+        active = rel >= 0
+        j = jnp.where(active, rel % s_steps, 0)
+        p = jnp.where(active, rel // s_steps + 1, 0)
+        is_first = jnp.logical_and(active, j == 0)
+        is_last = jnp.logical_and(active, j == s_steps - 1)
+        is_init = jnp.logical_and(is_first, p == 1)
+
+        # fine input: at j==0 restart from the boundary value x_i^{p-1}
+        z_in = jnp.where(is_first, c.x_new, c.z)
+        z_out, coarse_out = batched_eval(z_in, j, c.x_new)
+
+        # --- init superstep: coarse_out = G(x_i^0): seed prev_coarse, send
+        # --- last superstep:  coarse_out = G(x_i^p): predictor-corrector
+        prev_eff = jnp.where(is_init, coarse_out, c.prev_coarse)
+        out_block = z_out + coarse_out - prev_eff
+        send_val = jnp.where(is_last, out_block,
+                             jnp.where(is_init, coarse_out, c.out_last))
+        send_flag = jnp.logical_or(is_init, is_last)
+
+        new_prev_coarse = jnp.where(jnp.logical_or(is_init, is_last),
+                                    coarse_out, c.prev_coarse)
+        # out_last tracks x_{i+1}^p (x_{i+1}^0 after the init eval), so the
+        # tail device's p=1 residual compares against x_B^0 per Alg. 1.
+        new_out_last = jnp.where(is_last, out_block,
+                                 jnp.where(is_init, coarse_out, c.out_last))
+        new_p_done = jnp.where(is_last, p, c.p_done)
+
+        # convergence residual on the final block
+        is_tail = me == d - 1
+        resid = _norm(out_block - c.out_last, cfg.norm)
+        delta = jnp.where(jnp.logical_and(is_tail, is_last), resid, c.delta)
+        local_conv = jnp.where(
+            jnp.logical_and(is_tail, is_last),
+            (delta < cfg.tol).astype(jnp.float32), 0.0)
+        done = jax.lax.psum(local_conv, axis) > 0.0
+
+        # ring exchange of boundary values (one sample per neighbor pair)
+        recv_val = jax.lax.ppermute(send_val, axis, right)
+        recv_flag = jax.lax.ppermute(send_flag.astype(jnp.float32), axis, right)
+        take = jnp.logical_and(recv_flag > 0, me > 0)
+        x_new = jnp.where(take, recv_val, c.x_new)
+        x_new = jnp.where(me == 0, x_init, x_new)   # x_0 is the fixed IC
+
+        return _WaveCarry(c.s + 1, jnp.where(active, z_out, c.z), x_new,
+                          jnp.where(active, new_prev_coarse, c.prev_coarse),
+                          jnp.where(active, new_out_last, c.out_last),
+                          delta, jnp.where(active, new_p_done, c.p_done), done)
+
+    def cond(c: _WaveCarry):
+        return jnp.logical_and(c.s < max_supersteps, jnp.logical_not(c.done))
+
+    init = _WaveCarry(s=jnp.int32(0), z=x_init, x_new=x_init,
+                      prev_coarse=jnp.zeros_like(x_init),
+                      out_last=jnp.zeros_like(x_init),
+                      delta=jnp.float32(jnp.inf), p_done=jnp.int32(0),
+                      done=jnp.asarray(False))
+    c = jax.lax.while_loop(cond, body, init)
+
+    # broadcast the tail device's answer to every shard
+    sample = jax.lax.psum(
+        jnp.where(me == d - 1, c.out_last, jnp.zeros_like(c.out_last)), axis)
+    iters = jax.lax.psum(jnp.where(me == d - 1, c.p_done, 0), axis)
+    supersteps = c.s
+    return sample, iters, c.delta, supersteps
+
+
+def make_pipelined_sampler(mesh, axis: str, model_fn: ModelFn,
+                           sched: DiffusionSchedule, solver: SolverConfig,
+                           cfg: SRDSConfig):
+    def local(x_init):
+        return srds_pipelined_local(model_fn, sched, solver, x_init, axis, cfg)
+
+    fn = jax.shard_map(local, mesh=mesh, in_specs=P(),
+                       out_specs=(P(), P(), P(), P()), check_vma=False)
+
+    @jax.jit
+    def sample(x_init):
+        s, p, dlt, steps = fn(x_init)
+        return SRDSResult(sample=s, iterations=p, final_delta=dlt,
+                          delta_history=jnp.full((1,), jnp.inf, jnp.float32),
+                          trajectory=None), steps
+
+    return sample

@@ -1,0 +1,121 @@
+"""Noise schedules on the *reversed* grid used throughout the paper.
+
+Grid convention (matches SRDS paper §2): index ``i = 0`` is pure Gaussian
+noise, ``i = N`` is the clean sample.  A schedule materializes, for every
+grid point, the cumulative signal level ``alpha_bar`` (ᾱ) and the model
+conditioning time ``t_model`` (what gets fed to the denoiser's time
+embedding — by convention the *traditional* diffusion timestep, so that
+pretrained-style denoisers condition identically).
+
+All solvers in :mod:`repro.core.solvers` are defined between arbitrary grid
+indices, so the same schedule serves the fine solver (stride 1), the coarse
+solver (stride ``N/B``) and the sequential reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+_SCHEDULES = {}
+
+
+def register_schedule(name):
+    def deco(fn):
+        _SCHEDULES[name] = fn
+        return fn
+
+    return deco
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionSchedule:
+    """Discretized schedule on the reversed grid.
+
+    Attributes:
+      ab:       (N+1,) float32 — ᾱ at each grid point; ab[0] ≈ 0 (noise),
+                ab[N] ≈ 1 (data).
+      t_model:  (N+1,) float32 — conditioning time per grid point
+                (monotonically decreasing: t_model[0] is the noisiest).
+      kind:     schedule family name (for checkpoint metadata).
+    """
+
+    ab: jnp.ndarray
+    t_model: jnp.ndarray
+    kind: str = "ddpm_linear"
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.ab.shape[0]) - 1
+
+    def sigma(self, i) -> jnp.ndarray:
+        """VE-space sigma at grid index i: sqrt((1-ab)/ab)."""
+        a = jnp.take(self.ab, i)
+        return jnp.sqrt((1.0 - a) / a)
+
+    def gather(self, i) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(alpha_bar, t_model) at (possibly traced) grid index ``i``."""
+        return jnp.take(self.ab, i), jnp.take(self.t_model, i)
+
+
+def _ddpm_alpha_bar(t_train: int, beta_start: float, beta_end: float) -> np.ndarray:
+    betas = np.linspace(beta_start, beta_end, t_train, dtype=np.float64)
+    return np.cumprod(1.0 - betas)
+
+
+def _cosine_alpha_bar(t_train: int, s: float = 0.008) -> np.ndarray:
+    ts = np.arange(t_train + 1, dtype=np.float64) / t_train
+    f = np.cos((ts + s) / (1 + s) * np.pi / 2) ** 2
+    ab = f[1:] / f[0]
+    return np.clip(ab, 1e-5, 0.999999)
+
+
+@register_schedule("ddpm_linear")
+def ddpm_linear(num_steps: int, t_train: int = 1000, beta_start: float = 1e-4,
+                beta_end: float = 0.02) -> DiffusionSchedule:
+    """DDPM linear-β schedule subsampled to ``num_steps`` grid intervals."""
+    ab_full = _ddpm_alpha_bar(t_train, beta_start, beta_end)
+    # Traditional timesteps, highest-noise first; grid index i maps to
+    # traditional step t_trad[i].  i=0 -> t_train-1 (max noise), i=N -> 0.
+    t_trad = np.round(np.linspace(t_train - 1, 0, num_steps + 1)).astype(np.int64)
+    ab = ab_full[t_trad]
+    return DiffusionSchedule(
+        ab=jnp.asarray(ab, dtype=jnp.float32),
+        t_model=jnp.asarray(t_trad, dtype=jnp.float32),
+        kind="ddpm_linear",
+    )
+
+
+@register_schedule("cosine")
+def cosine(num_steps: int, t_train: int = 1000) -> DiffusionSchedule:
+    ab_full = _cosine_alpha_bar(t_train)
+    t_trad = np.round(np.linspace(t_train - 1, 0, num_steps + 1)).astype(np.int64)
+    ab = ab_full[t_trad]
+    return DiffusionSchedule(
+        ab=jnp.asarray(ab, dtype=jnp.float32),
+        t_model=jnp.asarray(t_trad, dtype=jnp.float32),
+        kind="cosine",
+    )
+
+
+@register_schedule("karras")
+def karras(num_steps: int, sigma_min: float = 0.002, sigma_max: float = 80.0,
+           rho: float = 7.0) -> DiffusionSchedule:
+    """Karras et al. (2022) σ-grid, expressed as ᾱ via VP<->VE: ab = 1/(1+σ²)."""
+    steps = np.arange(num_steps + 1, dtype=np.float64) / num_steps
+    sig = (sigma_max ** (1 / rho) + steps * (sigma_min ** (1 / rho) - sigma_max ** (1 / rho))) ** rho
+    sig[-1] = sigma_min  # keep strictly positive so VE transform stays finite
+    ab = 1.0 / (1.0 + sig ** 2)
+    return DiffusionSchedule(
+        ab=jnp.asarray(ab, dtype=jnp.float32),
+        t_model=jnp.asarray(sig, dtype=jnp.float32),
+        kind="karras",
+    )
+
+
+def make_schedule(kind: str, num_steps: int, **kw) -> DiffusionSchedule:
+    if kind not in _SCHEDULES:
+        raise ValueError(f"unknown schedule {kind!r}; have {sorted(_SCHEDULES)}")
+    return _SCHEDULES[kind](num_steps, **kw)

@@ -1,0 +1,38 @@
+"""Sequential N-step reference sampler (the paper's baseline & ground truth).
+
+SRDS is *approximation-free*: its output must equal this sampler's output
+(Prop 1).  Every equivalence test in the suite compares against this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .schedules import DiffusionSchedule
+from .solvers import ModelFn, SolverConfig, solve
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleStats:
+    """Eval accounting in the paper's units.
+
+    ``serial_evals``: model evaluations on the critical path ("Eff. Serial
+    Evals" in Tables 1-3 — simultaneous parallel evals count once).
+    ``total_evals``: all model evaluations performed.
+    """
+
+    serial_evals: int
+    total_evals: int
+    iterations: int = 0
+
+
+def sample_sequential(model_fn: ModelFn, sched: DiffusionSchedule,
+                      cfg: SolverConfig, x_init: jnp.ndarray) -> jnp.ndarray:
+    """The plain N-step solve: x_N = F(...F(F(x_0)))."""
+    return solve(model_fn, sched, cfg, x_init, 0, sched.num_steps, 1)
+
+
+def sequential_stats(sched: DiffusionSchedule, cfg: SolverConfig) -> SampleStats:
+    n = sched.num_steps * cfg.evals_per_step
+    return SampleStats(serial_evals=n, total_evals=n)

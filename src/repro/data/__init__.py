@@ -1,0 +1,2 @@
+from .pipeline import (AudioStream, DataConfig, ImageStream, LMStream,
+                       VLMStream, make_stream)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for SRDS hot spots (validated in interpret mode).
+
+flash_attention: backbone attention (fwd+bwd, causal/SWA/GQA)
+rwkv6_scan:      RWKV6 WKV recurrence (chunked, VMEM-resident state)
+elementwise:     fused DDIM step + fused Parareal update/residual
+ops:             jit-ready dispatch wrappers;  ref: pure-jnp oracles
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

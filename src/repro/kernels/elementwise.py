@@ -1,0 +1,85 @@
+"""Fused elementwise Pallas kernels for the sampler's inner loop.
+
+Between denoiser calls the sampler is elementwise-bound; fusing the DDIM
+update (5 reads/1 write naive -> 2 reads/1 write fused) and the Parareal
+predictor-corrector (+ residual reduction, saving a separate full pass for
+the convergence norm) removes HBM round-trips on the latency-critical path.
+
+Layout: the ops wrapper flattens/pads operands to (rows, 128) — the TPU
+native lane width — and tiles rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _ddim_kernel(x_ref, e_ref, ab_ref, o_ref):
+    a = ab_ref[0, 0]
+    b = ab_ref[0, 1]
+    x = x_ref[...].astype(jnp.float32)
+    e = e_ref[...].astype(jnp.float32)
+    x0 = (x - jnp.sqrt(1.0 - a) * e) * jax.lax.rsqrt(a)
+    o_ref[...] = (jnp.sqrt(b) * x0 + jnp.sqrt(1.0 - b) * e).astype(o_ref.dtype)
+
+
+def ddim_fused_pallas(x2d, eps2d, ab, *, block_rows=256, interpret=False):
+    """x2d/eps2d: (R, 128); ab: (1, 2) [alpha_bar_from, alpha_bar_to]."""
+    r = x2d.shape[0]
+    br = min(block_rows, r)
+    return pl.pallas_call(
+        _ddim_kernel,
+        grid=(pl.cdiv(r, br),),
+        in_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+        name="srds_ddim_fused",
+    )(x2d, eps2d, ab)
+
+
+def _parareal_kernel(y_ref, c_ref, p_ref, o_ref, r_ref):
+    y = y_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    o_ref[...] = (y + c - p).astype(o_ref.dtype)
+    r_ref[0, 0] = jnp.sum(jnp.abs(c - p))
+
+
+def parareal_update_pallas(y2d, c2d, p2d, *, block_rows=256, interpret=False):
+    """Fused out = y + cur - prev with per-tile L1(cur - prev) partials.
+
+    Returns (out (R, 128), partials (tiles, 1) f32) — caller sums partials.
+    """
+    r = y2d.shape[0]
+    br = min(block_rows, r)
+    tiles = pl.cdiv(r, br)
+    return pl.pallas_call(
+        _parareal_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(y2d.shape, y2d.dtype),
+            jax.ShapeDtypeStruct((tiles, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        name="srds_parareal_update",
+    )(y2d, c2d, p2d)

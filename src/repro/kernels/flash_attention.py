@@ -1,0 +1,309 @@
+"""Flash attention Pallas-TPU kernels (forward + backward).
+
+TPU-native design decisions (vs a CUDA port):
+  * online-softmax accumulators live in VMEM scratch and are carried across
+    the *innermost sequential grid dimension* (TPU grids iterate the last
+    axis sequentially per core — the idiomatic replacement for a CUDA
+    thread-block loop over KV tiles);
+  * tiles default to (128, 128): the MXU systolic array is 128x128, and the
+    lane dimension (head_dim) should be a multiple of 128 for full MXU
+    utilization — the ops wrapper pads head_dim when needed;
+  * GQA is handled in the BlockSpec index_map (kv head = q head // group),
+    so grouped KV is never materialized/repeated in HBM;
+  * causal and sliding-window masking skip fully-masked KV tiles with
+    ``pl.when`` (no MXU work issued for skipped tiles).
+
+Forward saves the per-row logsumexp; backward recomputes probabilities
+tile-by-tile (two kernels: dQ over KV tiles; dK/dV over Q tiles).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _row_valid(bsz, start, limit):
+    """(bsz, 1) bool mask for ragged-tile padding rows."""
+    idx = start + jax.lax.broadcasted_iota(jnp.int32, (bsz, 1), 0)
+    return idx < limit
+
+
+def _clean(x, valid):
+    """Zero padded rows with where (interpret mode poisons OOB reads with
+    NaN, and NaN * 0 == NaN — multiplication cannot scrub them)."""
+    return jnp.where(valid, x, 0.0)
+
+
+def _mask(bq, bk, iq, ik, sq, sk, causal, window):
+    """Boolean keep-mask for a (bq, bk) tile; positions right-aligned.
+
+    Also masks ragged-tile padding rows/cols (q >= sq or k >= sk)."""
+    qraw = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    qpos = qraw + (sk - sq)
+    keep = jnp.logical_and(qraw < sq, kpos < sk)
+    if causal:
+        keep = jnp.logical_and(keep, kpos <= qpos)
+    if window is not None:
+        keep = jnp.logical_and(keep, kpos > qpos - window)
+    return keep
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc, m_sc, l_sc, *,
+                scale, causal, window, sq, sk, bq, bk):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    # tile skipping: causal / sliding-window tiles with no live entry
+    q_last = iq * bq + bq - 1 + (sk - sq)
+    k_first = ik * bk
+    live = True
+    if causal:
+        live = k_first <= q_last
+    if window is not None:
+        q_first = iq * bq + (sk - sq)
+        k_last = ik * bk + bk - 1
+        live = jnp.logical_and(live, k_last > q_first - window)
+
+    @pl.when(live)
+    def _compute():
+        kv_valid = _row_valid(bk, ik * bk, sk)
+        q = _clean(q_ref[0].astype(jnp.float32), _row_valid(bq, iq * bq, sq))
+        k = _clean(k_ref[0].astype(jnp.float32), kv_valid)
+        v = _clean(v_ref[0].astype(jnp.float32), kv_valid)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        keep = _mask(bq, bk, iq, ik, sq, sk, causal, window)
+        s = jnp.where(keep, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        # guard fully-masked rows: m_new == NEG_INF would give exp(0) == 1
+        p = jnp.where(keep, jnp.exp(s - m_new[:, None]), 0.0)
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=1)
+        acc[...] = acc[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_sc[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)          # fully-masked rows -> 0
+        o_ref[0] = (acc[...] / l_safe[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = m_sc[...] + jnp.log(l_safe)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=None, scale=None,
+                        block_q=128, block_k=128, interpret=False):
+    """q: (BH, Sq, D) already flattened over batch*q_heads; k/v: (BKV, Sk, D).
+
+    ``group = BH // BKV`` kv-sharing factor (GQA) resolved via index_map.
+    Returns (o (BH, Sq, D), lse (BH, Sq)).
+    """
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    group = bh // bkv
+    scale = float(scale) if scale is not None else float(d) ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    grid = (bh, pl.cdiv(sq, bq), pl.cdiv(sk, bk))
+
+    kernel = functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                               window=window, sq=sq, sk=sk, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik, g=group: (b // g, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik, g=group: (b // g, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bq), lambda b, iq, ik: (b, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="srds_flash_fwd",
+    )(q, k, v)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               dq_acc, *, scale, causal, window, sq, sk, bq, bk):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q_last = iq * bq + bq - 1 + (sk - sq)
+    live = (ik * bk <= q_last) if causal else True
+    if window is not None:
+        q_first = iq * bq + (sk - sq)
+        live = jnp.logical_and(live, ik * bk + bk - 1 > q_first - window)
+
+    @pl.when(live)
+    def _compute():
+        q_valid = _row_valid(bq, iq * bq, sq)
+        kv_valid = _row_valid(bk, ik * bk, sk)
+        q = _clean(q_ref[0].astype(jnp.float32), q_valid)
+        k = _clean(k_ref[0].astype(jnp.float32), kv_valid)
+        v = _clean(v_ref[0].astype(jnp.float32), kv_valid)
+        do = _clean(do_ref[0].astype(jnp.float32), q_valid)
+        lse = jnp.where(q_valid[:, 0], lse_ref[0], 0.0)
+        delta = jnp.where(q_valid[:, 0], delta_ref[0], 0.0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        keep = _mask(bq, bk, iq, ik, sq, sk, causal, window)
+        s = jnp.where(keep, s, NEG_INF)
+        p = jnp.where(keep, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = jnp.where(keep, p * (dp - delta[:, None]) * scale, 0.0)
+        dq_acc[...] += jax.lax.dot(ds, k, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        dq_ref[0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *,
+                scale, causal, window, sq, sk, bq, bk):
+    ik = pl.program_id(1)
+    iq = pl.program_id(2)
+    nq = pl.num_programs(2)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_last = iq * bq + bq - 1 + (sk - sq)
+    live = (ik * bk <= q_last) if causal else True
+    if window is not None:
+        q_first = iq * bq + (sk - sq)
+        live = jnp.logical_and(live, ik * bk + bk - 1 > q_first - window)
+
+    @pl.when(live)
+    def _compute():
+        q_valid = _row_valid(bq, iq * bq, sq)
+        kv_valid = _row_valid(bk, ik * bk, sk)
+        q = _clean(q_ref[0].astype(jnp.float32), q_valid)
+        k = _clean(k_ref[0].astype(jnp.float32), kv_valid)
+        v = _clean(v_ref[0].astype(jnp.float32), kv_valid)
+        do = _clean(do_ref[0].astype(jnp.float32), q_valid)
+        lse = jnp.where(q_valid[:, 0], lse_ref[0], 0.0)
+        delta = jnp.where(q_valid[:, 0], delta_ref[0], 0.0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        keep = _mask(bq, bk, iq, ik, sq, sk, causal, window)
+        s = jnp.where(keep, s, NEG_INF)
+        p = jnp.where(keep, jnp.exp(s - lse[:, None]), 0.0)   # (bq, bk)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = jnp.where(keep, p * (dp - delta[:, None]) * scale, 0.0)
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(iq == nq - 1)
+    def _finalize():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=None,
+                        scale=None, block_q=128, block_k=128, interpret=False):
+    """Returns (dq (BH,Sq,D), dk_g (BH,Sk,D), dv_g (BH,Sk,D)).
+
+    dk/dv are produced per *q-head* (GQA groups not yet reduced); the ops
+    wrapper sums over the group dimension — keeping the kernel free of
+    cross-grid-cell reductions.
+    """
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    group = bh // bkv
+    scale = float(scale) if scale is not None else float(d) ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    kq = functools.partial(_dq_kernel, scale=scale, causal=causal,
+                           window=window, sq=sq, sk=sk, bq=bq, bk=bk)
+    dq = pl.pallas_call(
+        kq,
+        grid=(bh, pl.cdiv(sq, bq), pl.cdiv(sk, bk)),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik, g=group: (b // g, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik, g=group: (b // g, ik, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bq), lambda b, iq, ik: (b, iq)),
+            pl.BlockSpec((1, bq), lambda b, iq, ik: (b, iq)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="srds_flash_dq",
+    )(q, k, v, do, lse, delta)
+
+    kkv = functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                            window=window, sq=sq, sk=sk, bq=bq, bk=bk)
+    dk, dv = pl.pallas_call(
+        kkv,
+        grid=(bh, pl.cdiv(sk, bk), pl.cdiv(sq, bq)),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, ik, iq: (b, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, ik, iq, g=group: (b // g, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, ik, iq, g=group: (b // g, ik, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, ik, iq: (b, iq, 0)),
+            pl.BlockSpec((1, bq), lambda b, ik, iq: (b, iq)),
+            pl.BlockSpec((1, bq), lambda b, ik, iq: (b, iq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, d), lambda b, ik, iq: (b, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, ik, iq: (b, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sk, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, sk, d), q.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, d), jnp.float32),
+                        pltpu.VMEM((bk, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="srds_flash_dkv",
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv

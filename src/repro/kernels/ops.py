@@ -1,0 +1,174 @@
+"""Public jit-ready wrappers around the Pallas kernels.
+
+Dispatch policy: kernels run compiled on TPU and in ``interpret=True`` mode
+elsewhere (this container is CPU-only — interpret mode executes the kernel
+body in Python, validating semantics against :mod:`repro.kernels.ref`).
+Set ``repro.kernels.ops.FORCE_REF = True`` to bypass kernels entirely (used
+by models on hot training paths where the interpreted kernel would dominate
+CPU test time).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .elementwise import LANES, ddim_fused_pallas, parareal_update_pallas
+from .flash_attention import flash_attention_bwd, flash_attention_fwd
+from .rwkv6_scan import rwkv6_wkv_pallas
+
+FORCE_REF = False
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# Flash attention (custom_vjp; Pallas fwd + Pallas bwd)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, scale, block_q, block_k):
+    o, _ = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               scale=scale, block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+    return o
+
+
+def _flash_fwd(q, k, v, causal, window, scale, block_q, block_k):
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 scale=scale, block_q=block_q, block_k=block_k,
+                                 interpret=_interpret())
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, window, scale, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    dq, dk_g, dv_g = flash_attention_bwd(
+        q, k, v, o, lse, do, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=_interpret())
+    group = q.shape[0] // k.shape[0]
+    if group > 1:  # reduce GQA groups: (BH,...) -> (BKV,...)
+        dk_g = dk_g.reshape(k.shape[0], group, *k.shape[1:]).sum(axis=1)
+        dv_g = dv_g.reshape(v.shape[0], group, *v.shape[1:]).sum(axis=1)
+    return dq, dk_g.astype(k.dtype), dv_g.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: Optional[int] = None,
+              scale: Optional[float] = None, block_q: int = 128,
+              block_k: int = 128, use_kernel: Optional[bool] = None):
+    """(B, Hq, Sq, D) x (B, Hkv, Sk, D) -> (B, Hq, Sq, D). GQA via Hq%Hkv==0."""
+    if use_kernel is None:
+        use_kernel = not FORCE_REF
+    if not use_kernel:
+        return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    scale = float(scale) if scale is not None else float(d) ** -0.5
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, sk, d)
+    vf = v.reshape(b * hkv, sk, d)
+    o = _flash(qf, kf, vf, causal, window, scale, block_q, block_k)
+    return o.reshape(b, hq, sq, d)
+
+
+# --------------------------------------------------------------------------
+# RWKV6 WKV (kernel fwd; ref-autodiff bwd)
+# --------------------------------------------------------------------------
+
+def _pick_chunk(t: int, target: int = 32) -> int:
+    for c in range(min(target, t), 0, -1):
+        if t % c == 0:
+            return c
+    return 1
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def _wkv(r, k, v, w, u, s0):
+    out, _ = ref.rwkv6_wkv(r, k, v, w, u, s0)
+    return out
+
+
+def _wkv_fwd(r, k, v, w, u, s0):
+    return _wkv(r, k, v, w, u, s0), (r, k, v, w, u, s0)
+
+
+def _wkv_bwd(res, dout):
+    r, k, v, w, u, s0 = res
+    _, vjp = jax.vjp(lambda *a: ref.rwkv6_wkv(*a)[0], r, k, v, w, u, s0)
+    return vjp(dout)
+
+
+_wkv.defvjp(_wkv_fwd, _wkv_bwd)
+
+
+def rwkv6_wkv(r, k, v, w, u, state=None, *, chunk: Optional[int] = None,
+              use_kernel: Optional[bool] = None):
+    """r,k,w: (B,H,T,Dk); v: (B,H,T,Dv); u: (H,Dk); state: (B,H,Dk,Dv).
+
+    Returns (out (B,H,T,Dv), final_state).  Kernel forward; reference
+    autodiff backward (training uses the pure-JAX chunked path in models).
+    """
+    bsz, h, t, dk = r.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((bsz, h, dk, dv), jnp.float32)
+    if use_kernel is None:
+        use_kernel = not FORCE_REF
+    if not use_kernel:
+        return ref.rwkv6_wkv(r, k, v, w, u, state)
+    c = chunk or _pick_chunk(t)
+    flat = lambda x: x.reshape(bsz * h, *x.shape[2:])
+    u_t = jnp.tile(u, (bsz, 1))
+    out, s_fin = rwkv6_wkv_pallas(flat(r), flat(k), flat(v), flat(w), u_t,
+                                  flat(state), chunk=c, interpret=_interpret())
+    return (out.reshape(bsz, h, t, dv),
+            s_fin.reshape(bsz, h, dk, dv))
+
+
+# --------------------------------------------------------------------------
+# Fused elementwise ops
+# --------------------------------------------------------------------------
+
+def _to_2d(x):
+    n = x.size
+    rows = -(-n // LANES)
+    pad = rows * LANES - n
+    flat = x.reshape(-1)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, LANES), n
+
+
+def ddim_fused(x, eps, a, b, *, use_kernel: Optional[bool] = None):
+    if use_kernel is None:
+        use_kernel = not FORCE_REF
+    if not use_kernel:
+        return ref.ddim_fused(x, eps, a, b)
+    x2, n = _to_2d(x)
+    e2, _ = _to_2d(eps)
+    ab = jnp.stack([jnp.asarray(a, jnp.float32),
+                    jnp.asarray(b, jnp.float32)]).reshape(1, 2)
+    o = ddim_fused_pallas(x2, e2, ab, interpret=_interpret())
+    return o.reshape(-1)[:n].reshape(x.shape)
+
+
+def parareal_update(y, cur, prev, *, use_kernel: Optional[bool] = None):
+    """Returns (y + cur - prev, sum|cur - prev|) fused in one pass."""
+    if use_kernel is None:
+        use_kernel = not FORCE_REF
+    if not use_kernel:
+        return ref.parareal_update(y, cur, prev)
+    y2, n = _to_2d(y)
+    c2, _ = _to_2d(cur)
+    p2, _ = _to_2d(prev)
+    o, partials = parareal_update_pallas(y2, c2, p2, interpret=_interpret())
+    return o.reshape(-1)[:n].reshape(y.shape), jnp.sum(partials)

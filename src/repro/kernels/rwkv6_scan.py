@@ -1,0 +1,95 @@
+"""RWKV6 (Finch) WKV recurrence — Pallas TPU kernel.
+
+Chunked design: grid = (batch*heads, T/chunk); the (Dk, Dv) recurrent state
+lives in VMEM scratch and is carried across the sequential chunk axis (TPU
+grids execute the innermost axis in order — the state never round-trips to
+HBM between chunks, unlike a naive scan over pallas_calls).
+
+Inside a chunk the recurrence is evaluated with an in-kernel ``lax.scan``
+over timesteps (matvec per step).  We deliberately chose the *sequential*
+intra-chunk form over the parallel "chunked linear attention" form: RWKV6's
+data-dependent decays make the parallel form's decay-ratio factors
+``exp(cumlog[t] - cumlog[i])`` overflow fp32 for strongly-decaying channels
+(the reason fla-style GPU kernels need secondary renormalization).  With
+head dims of 64, the per-step matvec (64x64) is VPU work either way and the
+kernel stays memory-bound on r/k/v/w streaming — which the chunked state
+residency addresses.  (See EXPERIMENTS.md §Perf for the measurement.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                state, *, chunk, dk, dv):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)        # (C, Dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)        # (Dk,)
+    dec = jnp.exp(-jnp.exp(w))              # (C, Dk)
+
+    def step(s, inp):
+        r_t, k_t, v_t, dec_t = inp
+        a = k_t[:, None] * v_t[None, :]                       # (Dk, Dv)
+        out = (r_t[None, :] @ (s + u[:, None] * a))[0]        # (Dv,)
+        s = dec_t[:, None] * s + a
+        return s, out
+
+    s_fin, outs = jax.lax.scan(step, state[...], (r, k, v, dec))
+    o_ref[0] = outs.astype(o_ref.dtype)
+    state[...] = s_fin
+
+    @pl.when(c == nc - 1)
+    def _final():
+        sT_ref[0] = s_fin.astype(sT_ref.dtype)
+
+
+def rwkv6_wkv_pallas(r, k, v, w, u, s0, *, chunk=32, interpret=False):
+    """r,k,w: (BH, T, Dk); v: (BH, T, Dv); u: (BH, Dk); s0: (BH, Dk, Dv).
+
+    Returns (out (BH, T, Dv), final_state (BH, Dk, Dv)).  ``T % chunk == 0``
+    (the ops wrapper picks a divisor).
+    """
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    grid = (bh, t // chunk)
+    kern = functools.partial(_wkv_kernel, chunk=chunk, dk=dk, dv=dv)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dk), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dv), v.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="srds_rwkv6_wkv",
+    )(r, k, v, w, u, s0)

@@ -1,0 +1,369 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first backend init). Everything below is ordinary.
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+# the production mesh, prove memory fits, and extract the roofline terms.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch stablelm-3b --shape train_4k --mesh pod1
+#   python -m repro.launch.dryrun --arch srds-dit-sd2 --shape sample --mesh pod1
+#   python -m repro.launch.dryrun --list
+#
+# Writes experiments/dryrun/<arch>__<shape>__<mesh>[__<tag>].json with:
+#   flops / bytes-accessed / peak-memory per device (cost & memory analysis),
+#   per-collective byte counts parsed from the post-SPMD HLO, the roofline
+#   terms (TPU v5e constants), and the dominant bottleneck.
+# (module docstring deliberately after the XLA_FLAGS lines — see above)
+
+import argparse
+import json
+import re
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch, shape_cells
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import specs as sp
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models.transformer import ParallelCtx, decode_step, init_params, prefill
+from repro.optim.adamw import AdamWConfig, init_opt_state, warmup_cosine
+from repro.parallel.sharding import (batch_shardings, cache_shardings,
+                                     opt_state_shardings, param_shardings)
+from repro.train.steps import make_train_step
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum output-shape bytes of every collective op in post-SPMD HLO.
+
+    Approximation documented in EXPERIMENTS.md: bytes == op output size
+    (for all-gather this counts the gathered result; for all-reduce the
+    reduced tensor; close enough for a three-term roofline)."""
+    out = {c: {"count": 0, "bytes": 0.0} for c in COLLECTIVES}
+    shape_re = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.*?) (all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", ls)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = 0.0
+        for dt, dims in shape_re.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+    return out
+
+
+def build_parallel(cfg: ArchConfig, mesh, *, unroll: bool = False) -> ParallelCtx:
+    multi = "pod" in mesh.axis_names
+    return ParallelCtx(
+        mesh=mesh,
+        batch_axes=("pod", "data") if multi else ("data",),
+        model_axis="model",
+        data_axis="data",
+        use_ep=cfg.moe_experts > 0,
+        sp=True,
+        model_parallel=dict(zip(mesh.axis_names, mesh.devices.shape))["model"],
+        moe_chunk=8_192,
+        scan_unroll=unroll,
+    )
+
+
+def lower_cell(cfg: ArchConfig, shape: Optional[ShapeConfig], mesh, *,
+               sample_blocks: int = 16, overrides: Optional[dict] = None,
+               unroll: bool = False):
+    """Build + lower + compile the step for one cell. Returns (lowered,
+    compiled, meta).  ``unroll=True`` is the ANALYSIS form: scans unrolled so
+    cost_analysis/collective counts cover every loop iteration (XLA counts
+    while bodies once); the scanned form is the deployment artifact whose
+    memory_analysis we report."""
+    par = build_parallel(cfg, mesh, unroll=unroll)
+    if overrides:
+        import dataclasses as dc
+        par = dc.replace(par, **{k: v for k, v in overrides.items()
+                                 if hasattr(par, k)})
+    p_specs = sp.param_specs(cfg, par)
+    p_sh = param_shardings(cfg, mesh, p_specs, par, fsdp=par.fsdp)
+
+    if shape is None:  # SRDS sample step for DiT cells
+        return _lower_srds_sample(cfg, mesh, par, p_specs, p_sh, sample_blocks,
+                                  unroll=unroll)
+
+    b_specs = sp.batch_specs(cfg, shape)
+    b_sh = batch_shardings(mesh, b_specs, par.batch_axes)
+
+    if shape.kind == "train":
+        opt_specs = jax.eval_shape(init_opt_state, p_specs)
+        o_sh = opt_state_shardings(cfg, mesh, opt_specs, par)
+        opt_cfg = AdamWConfig(schedule=warmup_cosine(3e-4, 100, 10_000),
+                              bf16_grad_sync=par.bf16_grad_sync)
+        loss_kind = "diffusion" if cfg.family == "dit" else "lm"
+        step = make_train_step(cfg, opt_cfg, parallel=par, remat=True,
+                               loss_kind=loss_kind, use_kernel=False)
+        jitted = jax.jit(step, donate_argnums=(0, 1),
+                         in_shardings=(p_sh, o_sh, b_sh, NamedSharding(mesh, P())),
+                         out_shardings=(p_sh, o_sh, None))
+        lowered = jitted.lower(p_specs, opt_specs, b_specs,
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+    elif shape.kind == "prefill":
+        c_specs = sp.cache_specs(cfg, shape, par)
+        c_sh = cache_shardings(cfg, mesh, c_specs, par)
+
+        def fn(params, batch):
+            return prefill(cfg, params, batch, parallel=par, use_kernel=False)
+
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                         out_shardings=(None, c_sh))
+        lowered = jitted.lower(p_specs, b_specs)
+    else:  # decode
+        c_specs = sp.cache_specs(cfg, shape, par)
+        c_sh = cache_shardings(cfg, mesh, c_specs, par)
+
+        def fn(params, batch, cache, pos):
+            return decode_step(cfg, params, batch, cache, pos, parallel=par,
+                               use_kernel=False)
+
+        jitted = jax.jit(fn, donate_argnums=(2,),
+                         in_shardings=(p_sh, b_sh, c_sh, NamedSharding(mesh, P())),
+                         out_shardings=(None, c_sh))
+        lowered = jitted.lower(p_specs, b_specs, c_specs,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+    t0 = time.time()
+    compiled = lowered.compile()
+    return lowered, compiled, {"compile_s": time.time() - t0}
+
+
+def _lower_srds_sample(cfg, mesh, par, p_specs, p_sh, num_blocks,
+                       unroll: bool = False):
+    """Paper-representative cell: the SRDS sampler itself on the mesh —
+    parareal blocks sharded over `data`, denoiser TP over `model`."""
+    from repro.core import SolverConfig, SRDSConfig, make_schedule
+    from repro.core.parareal import srds_sample
+    from repro.models.dit import dit_forward
+
+    size = {"srds-dit-cifar": 32, "srds-dit-lsun": 128,
+            "srds-dit-sd2": 64}.get(cfg.name, 32)
+    n_steps = num_blocks * num_blocks
+    sched = make_schedule("ddpm_linear", n_steps)
+    if par.model_axis is None:
+        # no-TP variant (§Perf): denoiser replicated, `model` mesh axis
+        # repurposed for the sample batch — denoiser evals become fully
+        # local, the only traffic left is parareal boundary exchange.
+        batch = 16
+        block_sh = NamedSharding(mesh, P("data", "model", None, None, None))
+    else:
+        batch = 8
+        block_sh = NamedSharding(mesh, P("data", None, None, None, None))
+
+    def sample_step(params, x0):
+        def model_fn(x, t):
+            tb = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (x.shape[0],))
+            return dit_forward(cfg, params, x, tb, use_kernel=False,
+                               unroll=unroll)
+
+        res = srds_sample(model_fn, sched,
+                          SolverConfig("ddim", unroll=unroll), x0,
+                          SRDSConfig(tol=1e-3, num_blocks=num_blocks,
+                                     max_iters=4, block_sharding=block_sh,
+                                     fixed_iters=unroll))
+        return res.sample, res.iterations
+
+    x_spec = jax.ShapeDtypeStruct((batch, size, size, cfg.in_channels),
+                                  jnp.float32)
+    jitted = jax.jit(sample_step,
+                     in_shardings=(p_sh, NamedSharding(mesh, P())),
+                     out_shardings=None)
+    lowered = jitted.lower(p_specs, x_spec)
+    t0 = time.time()
+    compiled = lowered.compile()
+    return lowered, compiled, {"compile_s": time.time() - t0}
+
+
+def analyze(cfg: ArchConfig, shape_name: str, mesh, lowered, compiled,
+            meta) -> dict:
+    n_dev = mesh.devices.size
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+    coll = parse_collective_bytes(compiled.as_text())
+    coll_bytes = sum(v["bytes"] for v in coll.values())
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    shape = SHAPES.get(shape_name)
+    if shape is not None:
+        tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+        mult = 6 if shape.kind == "train" else 2
+        model_flops = mult * cfg.active_param_count() * tokens
+    else:
+        model_flops = None
+
+    return {
+        "arch": cfg.name, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "devices": n_dev,
+        "flops_per_device": flops,
+        "bytes_accessed_per_device": bytes_acc,
+        "memory_analysis": mem_d,
+        "collectives": coll,
+        "collective_bytes_per_device": coll_bytes,
+        "roofline": dict(terms, dominant=dominant,
+                         model_flops_global=model_flops,
+                         useful_fraction=(model_flops / (flops * n_dev))
+                         if model_flops and flops else None),
+        **meta,
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             tag: str = "", overrides: Optional[dict] = None,
+             skip_analysis_pass: bool = False) -> dict:
+    cfg = get_arch(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    shape = None if shape_name == "sample" else SHAPES[shape_name]
+    # pass 1 — deployment form (scan-over-layers): memory proof
+    lowered, compiled, meta = lower_cell(cfg, shape, mesh, overrides=overrides)
+    result = analyze(cfg, shape_name, mesh, lowered, compiled, meta)
+    if not skip_analysis_pass:
+        # pass 2 — analysis form: XLA counts while-loop bodies ONCE, so the
+        # scanned numbers above undercount.  All layer stacks are homogeneous
+        # => every cost metric is affine in L: lower UNROLLED at L=1 and L=2
+        # and extrapolate total(L) = f(1) + (L-1) * (f(2) - f(1)).  Exact for
+        # matmul/collective costs (validated against a full 32-layer unroll,
+        # see EXPERIMENTS.md §Dry-run methodology); the CE/moe chunk scans
+        # unroll fully inside each probe.
+        import dataclasses as dc
+        L = cfg.num_layers
+        probes = []
+        for lprobe in ([1, 2] if L > 2 else [L]):
+            cfg_p = dc.replace(cfg, num_layers=lprobe)
+            lo2, co2, meta2 = lower_cell(cfg_p, shape, mesh,
+                                         overrides=overrides, unroll=True)
+            probes.append(analyze(cfg_p, shape_name, mesh, lo2, co2, meta2))
+        result["scanned_flops_per_device"] = result["flops_per_device"]
+        result["scanned_collectives"] = result["collectives"]
+        if len(probes) == 1:
+            ana = probes[0]
+            result["flops_per_device"] = ana["flops_per_device"]
+            result["bytes_accessed_per_device"] = ana["bytes_accessed_per_device"]
+            result["collectives"] = ana["collectives"]
+            result["collective_bytes_per_device"] = ana["collective_bytes_per_device"]
+        else:
+            f1, f2 = probes
+
+            def ext(a, b):
+                return a + (L - 1) * (b - a)
+
+            result["flops_per_device"] = ext(f1["flops_per_device"],
+                                             f2["flops_per_device"])
+            result["bytes_accessed_per_device"] = ext(
+                f1["bytes_accessed_per_device"], f2["bytes_accessed_per_device"])
+            coll = {}
+            for kind in f1["collectives"]:
+                coll[kind] = {
+                    "count": int(ext(f1["collectives"][kind]["count"],
+                                     f2["collectives"][kind]["count"])),
+                    "bytes": ext(f1["collectives"][kind]["bytes"],
+                                 f2["collectives"][kind]["bytes"]),
+                }
+            result["collectives"] = coll
+            result["collective_bytes_per_device"] = sum(
+                v["bytes"] for v in coll.values())
+        # recompute roofline with extrapolated numbers
+        n_dev = mesh.devices.size
+        compute_s = result["flops_per_device"] / PEAK_FLOPS_BF16
+        memory_s = result["bytes_accessed_per_device"] / HBM_BW
+        collective_s = result["collective_bytes_per_device"] / ICI_BW
+        terms = {"compute_s": compute_s, "memory_s": memory_s,
+                 "collective_s": collective_s}
+        mf = result["roofline"]["model_flops_global"]
+        result["roofline"] = dict(
+            terms, dominant=max(terms, key=terms.get),
+            model_flops_global=mf,
+            useful_fraction=(mf / (result["flops_per_device"] * n_dev))
+            if mf and result["flops_per_device"] else None)
+        result["analysis_compile_s"] = sum(p_["compile_s"] for p_ in probes)
+    result["tag"] = tag
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"[dryrun] OK {arch} x {shape_name} x {mesh_name} "
+          f"compile={meta['compile_s']:.1f}s dominant={result['roofline']['dominant']}")
+    print(json.dumps({k: result[k] for k in
+                      ("flops_per_device", "bytes_accessed_per_device",
+                       "collective_bytes_per_device")}, indent=1))
+    print("memory_analysis:", json.dumps(result["memory_analysis"]))
+    print("cost_analysis flops:", result["flops_per_device"])
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=False)
+    ap.add_argument("--shape", default="train_4k",
+                    help="train_4k|prefill_32k|decode_32k|long_500k|sample")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ParallelCtx overrides, e.g. sp=False moe_chunk=4096")
+    args = ap.parse_args()
+
+    if args.list:
+        from repro.configs import arch_names
+        for a in arch_names():
+            cfg = get_arch(a)
+            cells = ([s.name for s in shape_cells(cfg)]
+                     if cfg.family != "dit" else ["sample"])
+            print(f"{a}: {cells}")
+        return
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=")
+        overrides[k] = ({"True": True, "False": False, "None": None}[v]
+                        if v in ("True", "False", "None")
+                        else (int(v) if v.isdigit() else v))
+    run_cell(args.arch, args.shape, args.mesh, args.out, args.tag,
+             overrides or None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell —
+weak-type-correct, shardable, zero allocation."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.models.transformer import LOCAL, ParallelCtx, init_params, make_dense_cache
+
+S = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Inputs for the step this shape lowers (train/prefill: full sequence;
+    decode: one token — the cache is separate, see cache_specs)."""
+    b = shape.global_batch
+    s = shape.seq_len
+    if cfg.family == "dit":
+        size = {"srds-dit-cifar": 32, "srds-dit-lsun": 128,
+                "srds-dit-sd2": 64}.get(cfg.name, 32)
+        return {"images": S((b, size, size, cfg.in_channels), jnp.float32)}
+    if shape.is_decode:
+        if cfg.frontend == "audio":
+            return {"features": S((b, 1, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": S((b, 1), jnp.int32)}
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend == "audio":
+        out["features"] = S((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = S((b, s), jnp.int32)
+        if cfg.frontend == "vision":
+            out["image_embeds"] = S((b, cfg.num_prefix_embeds, cfg.d_model),
+                                    jnp.bfloat16)
+    if shape.kind == "train":
+        out["labels"] = S((b, s), jnp.int32)
+        if cfg.frontend == "audio":
+            out["mask"] = S((b, s), jnp.bool_)
+    return out
+
+
+def param_specs(cfg: ArchConfig, parallel: ParallelCtx = LOCAL):
+    if cfg.family == "dit":
+        from repro.models.dit import init_dit
+        return jax.eval_shape(lambda k: init_dit(cfg, k),
+                              jax.random.PRNGKey(0))
+    return jax.eval_shape(lambda k: init_params(cfg, k, parallel),
+                          jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig,
+                parallel: ParallelCtx = LOCAL):
+    # decode: the input cache; prefill: the output cache layout
+    return jax.eval_shape(
+        lambda: make_dense_cache(cfg, shape.global_batch, shape.seq_len,
+                                 parallel))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                parallel: ParallelCtx = LOCAL):
+    """Everything the lowered step needs, keyed by argument name."""
+    specs = {"batch": batch_specs(cfg, shape)}
+    if shape.is_decode:
+        specs["cache"] = cache_specs(cfg, shape, parallel)
+        specs["pos"] = S((), jnp.int32)
+    return specs

@@ -1,0 +1,14 @@
+"""Model zoo: unified transformer (dense/MoE/RWKV6/Hymba), DiT denoiser,
+modality stubs; all pure-functional param-dict models."""
+from .transformer import (LOCAL, ParallelCtx, decode_step, embed_inputs,
+                          forward_train, init_params, make_dense_cache,
+                          prefill)
+from .dit import (dit_forward, init_dit, init_time_conditioned,
+                  make_denoiser, time_conditioned_forward)
+
+__all__ = [
+    "LOCAL", "ParallelCtx", "decode_step", "embed_inputs", "forward_train",
+    "init_params", "make_dense_cache", "prefill",
+    "dit_forward", "init_dit", "init_time_conditioned", "make_denoiser",
+    "time_conditioned_forward",
+]

@@ -1,0 +1,144 @@
+"""Hymba block (arXiv:2411.13676): parallel attention + Mamba-style SSM
+heads within one layer, outputs normalized and mean-fused.
+
+Adaptations (documented in DESIGN.md):
+  * all layers use sliding-window attention (the SSM path carries global
+    context — Hymba's own argument); the paper's three full-attention
+    layers are dropped so the layer stack stays homogeneous for
+    scan-over-layers (compile-time at 512 devices) and long_500k memory
+    stays O(window);
+  * the SSM is a diagonal selective SSM (data-dependent dt/B/C, learned
+    A < 0, skip D) without the depthwise conv — conv state handling adds a
+    second decode cache for marginal modelling value at dry-run fidelity.
+
+Decode state: (ssm_h (B, d_inner, n), ring KV cache of size window).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_mlp, apply_norm, attention_decode, attention_full
+
+
+class HymbaCache(NamedTuple):
+    ssm_h: jnp.ndarray      # (B, d_inner, n)
+    k_ring: jnp.ndarray     # (B, W, Hkv, Dh)
+    v_ring: jnp.ndarray     # (B, W, Hkv, Dh)
+    ring_pos: jnp.ndarray   # (W,) absolute position stored in each slot (-1 empty)
+
+
+def init_ssm(key, d_model, d_inner, n_state, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d_model)
+    si = 1.0 / math.sqrt(d_inner)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d_model, 2 * d_inner)) * s).astype(dtype),
+        "w_dt": (jax.random.normal(ks[1], (d_inner, 1)) * si).astype(jnp.float32),
+        "b_dt": jnp.full((1,), -2.0, jnp.float32),   # softplus(-2) ~ 0.12
+        "w_B": (jax.random.normal(ks[2], (d_inner, n_state)) * si).astype(jnp.float32),
+        "w_C": (jax.random.normal(ks[3], (d_inner, n_state)) * si).astype(jnp.float32),
+        # explicit f32: under jax_enable_x64 (set by some test modules)
+        # linspace would otherwise produce f64 params and poison the f32
+        # selective-scan carry
+        "A_log": (jnp.log(jnp.linspace(1.0, float(n_state), n_state,
+                                       dtype=jnp.float32))[None, :]
+                  * jnp.ones((d_inner, 1), jnp.float32)),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "w_out": (jax.random.normal(ks[4], (d_inner, d_model)) * si).astype(dtype),
+    }
+
+
+def _ssm_scan(p, xs, h0):
+    """Selective scan. xs: (B, S, d_inner) f32; h0: (B, d_inner, n).
+
+    h_t = exp(A * dt_t) h_{t-1} + dt_t * B_t * x_t ;  y_t = (h_t C_t) + D x_t
+    """
+    a = -jnp.exp(p["A_log"])                                  # (din, n)
+    dt = jax.nn.softplus(xs @ p["w_dt"] + p["b_dt"])          # (B,S,1)
+    bb = xs @ p["w_B"]                                        # (B,S,n)
+    cc = xs @ p["w_C"]                                        # (B,S,n)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                             # (B,din),(B,1),(B,n)
+        decay = jnp.exp(a[None] * dt_t[:, :, None])           # (B,din,n)
+        h = decay * h + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + p["D"] * x_t
+        return h, y
+
+    inps = tuple(jnp.moveaxis(t, 1, 0) for t in (xs, dt, bb, cc))
+    h_fin, ys = jax.lax.scan(step, h0, inps)
+    return jnp.moveaxis(ys, 0, 1), h_fin                      # (B,S,din)
+
+
+def ssm_forward(p, x, h0=None):
+    """x: (B,S,d). Returns (out (B,S,d), h_fin)."""
+    b, s, _ = x.shape
+    d_inner = p["w_in"].shape[1] // 2
+    n = p["w_B"].shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((b, d_inner, n), jnp.float32)
+    zx = x @ p["w_in"]
+    z, xs = jnp.split(zx, 2, axis=-1)
+    ys, h_fin = _ssm_scan(p, xs.astype(jnp.float32), h0)
+    ys = ys.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return ys @ p["w_out"], h_fin
+
+
+def hymba_mix_full(p, x, cfg_attn, norm_kind, h0=None, use_kernel=None):
+    """Parallel attn+SSM mixer (train/prefill). Returns (out, (kv, h_fin))."""
+    attn_out, kv = attention_full(p["attn"], x, **cfg_attn, use_kernel=use_kernel)
+    ssm_out, h_fin = ssm_forward(p["ssm"], x, h0)
+    fused = 0.5 * (apply_norm(p["n_attn"], attn_out, norm_kind)
+                   + apply_norm(p["n_ssm"], ssm_out, norm_kind))
+    return fused, kv, h_fin
+
+
+def ring_update(cache: HymbaCache, k_new, v_new, pos, window):
+    slot = pos % window
+    k_ring = jax.lax.dynamic_update_slice_in_dim(cache.k_ring, k_new.astype(cache.k_ring.dtype), slot, axis=1)
+    v_ring = jax.lax.dynamic_update_slice_in_dim(cache.v_ring, v_new.astype(cache.v_ring.dtype), slot, axis=1)
+    ring_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.ring_pos, jnp.asarray([pos], cache.ring_pos.dtype), slot, axis=0)
+    return k_ring, v_ring, ring_pos
+
+
+def hymba_mix_decode(p, x, cache: HymbaCache, pos, *, num_heads, num_kv_heads,
+                     head_dim, window, theta, norm_kind):
+    """Single-token decode with ring KV + SSM state."""
+    from .layers import project_qkv
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = project_qkv(p["attn"], x, num_heads, num_kv_heads,
+                                  head_dim, positions, theta)
+    k_ring, v_ring, ring_pos = ring_update(cache, k_new, v_new, pos, window)
+    group = num_heads // num_kv_heads
+    qf = q.astype(jnp.float32).reshape(b, 1, num_kv_heads, group, head_dim)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qf,
+                        k_ring.astype(jnp.float32)) / math.sqrt(head_dim)
+    valid = jnp.logical_and(ring_pos >= 0,
+                            jnp.logical_and(ring_pos <= pos,
+                                            ring_pos > pos - window))
+    logits = jnp.where(valid[None, None, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", probs, v_ring.astype(jnp.float32))
+    attn_out = o.reshape(b, 1, num_heads * head_dim).astype(x.dtype) @ p["attn"]["wo"]
+
+    ssm_out, h_fin = ssm_forward(p["ssm"], x, cache.ssm_h)
+    fused = 0.5 * (apply_norm(p["n_attn"], attn_out, norm_kind)
+                   + apply_norm(p["n_ssm"], ssm_out, norm_kind))
+    return fused, HymbaCache(ssm_h=h_fin, k_ring=k_ring, v_ring=v_ring,
+                             ring_pos=ring_pos)
+
+
+def init_hymba_cache(batch, d_inner, n_state, window, num_kv_heads, head_dim,
+                     dtype=jnp.bfloat16):
+    return HymbaCache(
+        ssm_h=jnp.zeros((batch, d_inner, n_state), jnp.float32),
+        k_ring=jnp.zeros((batch, window, num_kv_heads, head_dim), dtype),
+        v_ring=jnp.zeros((batch, window, num_kv_heads, head_dim), dtype),
+        ring_pos=jnp.full((window,), -1, jnp.int32),
+    )

@@ -1,0 +1,223 @@
+"""Shared model layers: norms, rotary, attention (GQA/qk-norm/bias/SWA),
+MLPs.  Pure-functional: params are plain dict pytrees; every init_* returns
+params and every apply takes (params, x, ...).
+
+Attention routes through the Pallas flash kernel on TPU and the jnp oracle
+elsewhere (``repro.kernels.ops.FORCE_REF`` or explicit ``use_kernel``);
+decode-time single-token attention uses a dedicated masked path (matvec
+bound, no kernel needed).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(key, dim, kind="rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xf * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def init_attention(key, d_model, num_heads, num_kv_heads, head_dim, *,
+                   qkv_bias=False, qk_norm=False, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d_model, num_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, num_kv_heads * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, num_kv_heads * head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (num_heads * head_dim, d_model)) * s).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    if qk_norm:
+        p["q_norm"] = init_norm(key, head_dim)
+        p["k_norm"] = init_norm(key, head_dim)
+    return p
+
+
+def project_qkv(p, x, num_heads, num_kv_heads, head_dim, positions, theta,
+                qk_norm=False):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, s, num_kv_heads, head_dim)
+    v = v.reshape(b, s, num_kv_heads, head_dim)
+    if qk_norm:
+        q = apply_norm(p["q_norm"], q)
+        k = apply_norm(p["k_norm"], k)
+    if theta is not None:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attention_full(p, x, *, num_heads, num_kv_heads, head_dim, causal=True,
+                   window=None, theta=10_000.0, qk_norm=False,
+                   positions=None, use_kernel=None, chunk_kv=None,
+                   unroll=False):
+    """Full-sequence attention (training / prefill). x: (B, S, d).
+
+    ``chunk_kv``: pure-JAX flash (online softmax over KV tiles) — the
+    memory-faithful stand-in for the Pallas kernel on non-TPU backends."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = project_qkv(p, x, num_heads, num_kv_heads, head_dim, positions,
+                          theta, qk_norm)
+    qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    if chunk_kv is not None and not use_kernel:
+        o = kref.attention_chunked(qt, kt, vt, causal=causal, window=window,
+                                   chunk=chunk_kv, unroll=unroll)
+    else:
+        o = kops.attention(qt, kt, vt, causal=causal, window=window,
+                           use_kernel=use_kernel)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, num_heads * head_dim)
+    return o @ p["wo"], (k, v)
+
+
+def attention_decode(p, x, k_cache, v_cache, pos, *, num_heads, num_kv_heads,
+                     head_dim, window=None, theta=10_000.0, qk_norm=False):
+    """Single-token decode. x: (B, 1, d); caches: (B, S_max, Hkv, D);
+    pos: scalar current position.  Returns (out (B,1,d), k_new, v_new).
+
+    Pure masked softmax (matvec-bound; the Pallas kernel brings nothing at
+    Sq=1 — the flash-decoding win at scale comes from KV-sequence sharding,
+    handled in repro/serve via shard_map LSE-combine).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = project_qkv(p, x, num_heads, num_kv_heads, head_dim,
+                                  positions, theta, qk_norm)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    s_max = k_cache.shape[1]
+    group = num_heads // num_kv_heads
+    qf = q.astype(jnp.float32).reshape(b, 1, num_kv_heads, group, head_dim)
+    kf = k_cache.astype(jnp.float32)                     # (B, S, Hkv, D)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qf, kf) / math.sqrt(head_dim)
+    kpos = jnp.arange(s_max)
+    valid = kpos <= pos
+    if window is not None:
+        valid = jnp.logical_and(valid, kpos > pos - window)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", probs, v_cache.astype(jnp.float32))
+    o = o.reshape(b, 1, num_heads * head_dim).astype(x.dtype)
+    return o @ p["wo"], k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, act="swiglu", dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    p = {"w_up": (jax.random.normal(ks[0], (d_model, d_ff)) * s_in).astype(dtype),
+         "w_down": (jax.random.normal(ks[1], (d_ff, d_model)) * s_out).astype(dtype)}
+    if act == "swiglu":
+        p["w_gate"] = (jax.random.normal(ks[2], (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def apply_mlp(p, x, act="swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+        h = h * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu((x @ p["w_up"]).astype(jnp.float32)).astype(x.dtype)
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# embeddings
+# --------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d_model, dtype=jnp.bfloat16):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed(p, tokens):
+    return p["table"][tokens]
+
+
+def init_unembed(key, d_model, vocab, dtype=jnp.bfloat16):
+    s = 1.0 / math.sqrt(d_model)
+    return {"w": (jax.random.normal(key, (d_model, vocab)) * s).astype(dtype)}
+
+
+def unembed(p, x):
+    return (x @ p["w"]).astype(jnp.float32)
+
+
+def sinusoidal_time_embed(t: jnp.ndarray, dim: int, max_period=10_000.0):
+    """t: (B,) float -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)

@@ -1,0 +1,200 @@
+"""Mixture-of-Experts layer with hand-written expert parallelism.
+
+Two execution paths sharing one parameter layout:
+
+``moe_local``
+    Single-shard reference: top-k routing, stable-sort by expert,
+    ``jax.lax.ragged_dot`` grouped matmuls, unsort + combine.  Used by smoke
+    tests and as the oracle for the EP path.
+
+``moe_ep_local``
+    Expert parallelism for the production mesh, written for ``shard_map``:
+    experts are sharded over the ``data`` axis (E_local = E / D) and each
+    expert's FFN width over the ``model`` axis.  Tokens are exchanged with a
+    capacity-bounded ``all_to_all`` (send buffer (D, C, d)); the token axis
+    is processed in chunks (lax.scan) to bound the a2a buffer — at
+    kimi-k2 scale an unchunked dispatch would need ~9 GB of transient HBM
+    per device, chunking holds it near C_chunk*k*cf/D * d.
+
+Routing semantics (both paths): softmax router, top-k, weights renormalized
+over the selected experts, capacity drop in the EP path accounted in the
+returned aux (dropped tokens contribute their residual stream unchanged —
+standard dropping behaviour).  Router gradients flow through the combine
+weights (no aux-loss-free tricks; a load-balance aux loss is returned).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_moe(key, d_model, num_experts, d_ff, top_k, act="swiglu",
+             dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, num_experts)) * s_in
+                   ).astype(jnp.float32),
+        "w_up": (jax.random.normal(ks[1], (num_experts, d_model, d_ff)) * s_in
+                 ).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (num_experts, d_ff, d_model)) * s_out
+                   ).astype(dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = (jax.random.normal(ks[3], (num_experts, d_model, d_ff))
+                       * s_in).astype(dtype)
+    return p
+
+
+def _route(router_w, x_flat, top_k):
+    logits = (x_flat.astype(jnp.float32) @ router_w)            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_v, top_i = jax.lax.top_k(probs, top_k)                  # (T, k)
+    top_v = top_v / jnp.sum(top_v, axis=-1, keepdims=True)
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    e = router_w.shape[1]
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(top_i[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot, axis=0)
+    aux = e * jnp.sum(me * ce)
+    return top_v, top_i, aux
+
+
+def _expert_ffn(xs, w_gate, w_up, w_down, group_sizes, act):
+    if act == "swiglu":
+        g = jax.lax.ragged_dot(xs, w_gate, group_sizes)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xs.dtype)
+        h = h * jax.lax.ragged_dot(xs, w_up, group_sizes)
+    else:
+        h = jax.lax.ragged_dot(xs, w_up, group_sizes)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(xs.dtype)
+    return jax.lax.ragged_dot(h, w_down, group_sizes)
+
+
+def moe_local(p, x, top_k, act="swiglu"):
+    """Single-shard MoE. x: (..., d). Returns (out, aux_loss)."""
+    shape = x.shape
+    d = shape[-1]
+    x_flat = x.reshape(-1, d)
+    t = x_flat.shape[0]
+    e = p["router"].shape[1]
+
+    top_v, top_i, aux = _route(p["router"], x_flat, top_k)
+    flat_e = top_i.reshape(-1)                                  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    tok = order // top_k
+    xs = x_flat[tok]                                            # (T*k, d)
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+    ys = _expert_ffn(xs, p.get("w_gate"), p["w_up"], p["w_down"],
+                     group_sizes, act)
+    # unsort: scatter back to assignment order
+    inv = jnp.argsort(order, stable=True)
+    ys = ys[inv].reshape(t, top_k, d)
+    out = jnp.sum(ys * top_v[..., None].astype(ys.dtype), axis=1)
+    return out.reshape(shape), aux
+
+
+# --------------------------------------------------------------------------
+# Expert-parallel path (inside shard_map)
+# --------------------------------------------------------------------------
+
+def moe_ep_local(p_local, x_local, top_k, *, num_experts, data_axis,
+                 model_axis: Optional[str], capacity_factor=1.25,
+                 chunk_tokens=8_192, act="swiglu", unroll: bool = False,
+                 fixed_capacity: bool = False, expert_slack: float = 2.0):
+    """Expert-parallel MoE body (call inside shard_map).
+
+    p_local: expert weights already sliced: w_up (E_local, d, f_local) etc;
+             router replicated (d, E).
+    x_local: (T_local, d) this shard's tokens.
+    Returns (out (T_local, d), aux_loss_local).
+    """
+    d_sz = jax.lax.axis_size(data_axis)
+    e_local = num_experts // d_sz
+    t_local, d_model = x_local.shape
+    chunk = min(chunk_tokens, t_local)
+    n_chunks = -(-t_local // chunk)
+    pad = n_chunks * chunk - t_local
+    x_pad = jnp.pad(x_local, ((0, pad), (0, 0))) if pad else x_local
+    cap = int(max(1, math.ceil(chunk * top_k / d_sz * capacity_factor)))
+
+    def one_chunk(carry, x_c):
+        top_v, top_i, aux = _route(p_local["router"], x_c, top_k)
+        a_e = top_i.reshape(-1)                          # (A,) A = chunk*k
+        a_tok = jnp.arange(a_e.shape[0], dtype=jnp.int32) // top_k
+        dest = a_e // e_local                            # destination shard
+        local_e = a_e % e_local
+        # position within destination (capacity-bounded)
+        onehot = jax.nn.one_hot(dest, d_sz, dtype=jnp.int32)
+        pos = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=1)
+        keep = pos < cap
+        slot_dest = jnp.where(keep, dest, d_sz)          # OOB -> dropped
+        # scatter into send buffers
+        send_x = jnp.zeros((d_sz, cap, d_model), x_c.dtype)
+        send_e = jnp.full((d_sz, cap), e_local, jnp.int32)   # pad-expert id
+        send_x = send_x.at[slot_dest, pos].set(x_c[a_tok], mode="drop")
+        send_e = send_e.at[slot_dest, pos].set(local_e, mode="drop")
+        # all-to-all over the expert/data axis
+        recv_x = jax.lax.all_to_all(send_x, data_axis, 0, 0, tiled=True)
+        recv_e = jax.lax.all_to_all(send_e, data_axis, 0, 0, tiled=True)
+        rx = recv_x.reshape(d_sz * cap, d_model)
+        re_ = recv_e.reshape(-1)
+        # local grouped FFN: sort by local expert (pad-expert sorts last)
+        order = jnp.argsort(re_, stable=True)
+        xs = rx[order]
+        gs = jnp.bincount(re_, length=e_local + 1).astype(jnp.int32)
+        w_gate = p_local.get("w_gate")
+        if fixed_capacity:
+            # fixed per-expert capacity windows (TPU grouped-matmul style):
+            # dynamic-slice a cap_e-row window per expert and run a dense
+            # (E_l, cap_e, d) x (E_l, d, f) batched matmul.  Avoids
+            # jax.lax.ragged_dot, whose CPU lowering computes every group
+            # for every row (E_l x FLOPs inflation — see EXPERIMENTS.md);
+            # rows beyond cap_e are dropped (standard capacity semantics).
+            rows = xs.shape[0]
+            cap_e = int(math.ceil(rows / max(e_local, 1) * expert_slack))
+            starts = jnp.cumsum(gs) - gs                       # (E_l+1,)
+            idx = (starts[:e_local, None]
+                   + jnp.arange(cap_e)[None, :])               # (E_l, cap_e)
+            within = jnp.arange(cap_e)[None, :] < gs[:e_local, None]
+            idx_c = jnp.minimum(idx, rows - 1)
+            xg = jnp.where(within[..., None], xs[idx_c], 0)    # (E_l,cap_e,d)
+            if act == "swiglu":
+                g = jnp.einsum("ecd,edf->ecf", xg, w_gate)
+                h = jax.nn.silu(g.astype(jnp.float32)).astype(xg.dtype)
+                h = h * jnp.einsum("ecd,edf->ecf", xg, p_local["w_up"])
+            else:
+                h = jnp.einsum("ecd,edf->ecf", xg, p_local["w_up"])
+                h = jax.nn.gelu(h.astype(jnp.float32)).astype(xg.dtype)
+            yg = jnp.einsum("ecf,efd->ecd", h, p_local["w_down"])
+            ys = jnp.zeros((rows, d_model), yg.dtype)
+            ys = ys.at[jnp.where(within, idx_c, rows + 1)].set(
+                jnp.where(within[..., None], yg, 0), mode="drop")
+        else:
+            # append a zero pad-expert so group_sizes cover all rows
+            def pad_w(w):
+                return (None if w is None else
+                        jnp.concatenate([w, jnp.zeros_like(w[:1])], axis=0))
+            ys = _expert_ffn(xs, pad_w(w_gate), pad_w(p_local["w_up"]),
+                             pad_w(p_local["w_down"]), gs, act)
+        if model_axis is not None:   # f sharded over model: partial sums
+            ys = jax.lax.psum(ys, model_axis)
+        inv = jnp.argsort(order, stable=True)
+        ys = ys[inv].reshape(d_sz, cap, d_model)
+        back = jax.lax.all_to_all(ys, data_axis, 0, 0, tiled=True)
+        # gather results for kept assignments; dropped -> 0
+        y_a = jnp.where(keep[:, None], back[slot_dest.clip(0, d_sz - 1), pos], 0)
+        y_a = y_a.reshape(chunk, top_k, d_model)
+        out_c = jnp.sum(y_a * top_v[..., None].astype(y_a.dtype), axis=1)
+        return carry + aux, out_c
+
+    aux_total, out = jax.lax.scan(one_chunk, jnp.float32(0.0),
+                                  x_pad.reshape(n_chunks, chunk, d_model),
+                                  unroll=unroll)
+    out = out.reshape(n_chunks * chunk, d_model)[:t_local]
+    return out, aux_total / n_chunks

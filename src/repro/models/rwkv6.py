@@ -1,0 +1,138 @@
+"""RWKV6 "Finch" block: data-dependent token-shift + WKV recurrence with
+data-dependent per-channel decay, and the squared-ReLU channel-mix.
+
+Faithful to arXiv:2404.05892 structure (ddlerp token shift via a low-rank
+MLP producing the five r/k/v/w/g mixes; decay logits via a LoRA on top of a
+per-channel base; bonus ``u``; per-head groupnorm; silu gate).  The WKV
+recurrence runs through :func:`repro.kernels.ops.rwkv6_wkv` (Pallas kernel
+on TPU / oracle elsewhere) for inference, and the pure-jnp scan for
+training (kernel bwd = ref autodiff anyway).
+
+State per layer (decode): (x_prev_tmix (B,d), wkv (B,H,dk,dk), x_prev_cmix (B,d)).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+LORA_R = 32
+
+
+class RWKVState(NamedTuple):
+    x_tmix: jnp.ndarray    # (B, d)
+    wkv: jnp.ndarray       # (B, H, dk, dk)
+    x_cmix: jnp.ndarray    # (B, d)
+
+
+def init_rwkv_block(key, d_model, head_dim, d_ff, norm_kind="rmsnorm",
+                    dtype=jnp.bfloat16):
+    from .layers import init_norm
+    h = d_model // head_dim
+    ks = jax.random.split(key, 13)
+    s = 1.0 / math.sqrt(d_model)
+    n = lambda k, shp, sc=s: (jax.random.normal(k, shp) * sc).astype(dtype)
+    tmix = {
+        # token-shift ddlerp
+        "mu_base": jnp.zeros((d_model,), dtype),
+        "mu_rkvwg": jnp.zeros((5, d_model), dtype),
+        "A_mix": n(ks[0], (d_model, 5 * LORA_R)),
+        "B_mix": n(ks[1], (5, LORA_R, d_model), 1.0 / math.sqrt(LORA_R)),
+        # projections
+        "wr": n(ks[2], (d_model, d_model)),
+        "wk": n(ks[3], (d_model, d_model)),
+        "wv": n(ks[4], (d_model, d_model)),
+        "wg": n(ks[5], (d_model, d_model)),
+        "wo": n(ks[6], (d_model, d_model)),
+        # decay: base + lora; bonus u
+        "w_base": jnp.zeros((d_model,), jnp.float32) - 0.5,
+        "A_w": n(ks[7], (d_model, LORA_R)),
+        "B_w": n(ks[8], (LORA_R, d_model), 1.0 / math.sqrt(LORA_R)),
+        "u": (jax.random.normal(ks[9], (h, head_dim)) * 0.3).astype(jnp.float32),
+        "gn_scale": jnp.ones((d_model,), jnp.float32),
+    }
+    cmix = {
+        "mu_ck": jnp.zeros((d_model,), dtype),
+        "mu_cr": jnp.zeros((d_model,), dtype),
+        "wk_c": n(ks[10], (d_model, d_ff)),
+        "wv_c": n(ks[11], (d_ff, d_model), 1.0 / math.sqrt(d_ff)),
+        "wr_c": n(ks[12], (d_model, d_model)),
+    }
+    return {"ln1": init_norm(ks[0], d_model, norm_kind),
+            "ln2": init_norm(ks[1], d_model, norm_kind),
+            "tmix": tmix, "cmix": cmix}
+
+
+def _shift(x, x_prev):
+    """x: (B,S,d); x_prev: (B,d) carried from the previous segment."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _group_norm(x, scale, h, eps=1e-5):
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32).reshape(b, s, h, d // h)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf.reshape(b, s, d) * scale).astype(x.dtype)
+
+
+def time_mix(p, x, state: RWKVState, head_dim, *, use_kernel=None):
+    """x: (B, S, d). Returns (out, new_state_parts)."""
+    b, s, d = x.shape
+    h = d // head_dim
+    xp = _shift(x, state.x_tmix)
+    xx = xp - x
+    base = x + xx * p["mu_base"]
+    z = jnp.tanh(base @ p["A_mix"]).reshape(b, s, 5, LORA_R)
+    mixes = p["mu_rkvwg"][None, None] + jnp.einsum(
+        "bsfr,frd->bsfd", z, p["B_mix"].astype(z.dtype)).astype(x.dtype)
+    xr, xk, xv, xw, xg = [x + xx * mixes[:, :, i] for i in range(5)]
+
+    r = (xr @ p["wr"]).reshape(b, s, h, head_dim).transpose(0, 2, 1, 3)
+    k = (xk @ p["wk"]).reshape(b, s, h, head_dim).transpose(0, 2, 1, 3)
+    v = (xv @ p["wv"]).reshape(b, s, h, head_dim).transpose(0, 2, 1, 3)
+    g = xg @ p["wg"]
+    w_logit = p["w_base"] + jnp.tanh(xw.astype(jnp.float32) @ p["A_w"].astype(jnp.float32)) @ p["B_w"].astype(jnp.float32)
+    # clamp for numerical sanity of exp(-exp(w))
+    w_logit = jnp.clip(w_logit, -8.0, 4.0).reshape(b, s, h, head_dim).transpose(0, 2, 1, 3)
+
+    wkv, s_fin = kops.rwkv6_wkv(r, k, v, w_logit, p["u"], state.wkv,
+                                use_kernel=use_kernel)
+    wkv = wkv.transpose(0, 2, 1, 3).reshape(b, s, d)
+    out = _group_norm(wkv, p["gn_scale"], h)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(out.dtype)
+    return out @ p["wo"], x[:, -1], s_fin
+
+
+def channel_mix(p, x, state: RWKVState):
+    xp = _shift(x, state.x_cmix)
+    xk = x + (xp - x) * p["mu_ck"]
+    xr = x + (xp - x) * p["mu_cr"]
+    kk = jnp.square(jax.nn.relu((xk @ p["wk_c"]).astype(jnp.float32))).astype(x.dtype)
+    out = jax.nn.sigmoid((xr @ p["wr_c"]).astype(jnp.float32)).astype(x.dtype) * (kk @ p["wv_c"])
+    return out, x[:, -1]
+
+
+def rwkv_block(p, x, state: RWKVState, head_dim, norm_fn, *, use_kernel=None):
+    """Full pre-norm RWKV6 block. Returns (x_out, new_state)."""
+    h1, xt, wkv = time_mix(p["tmix"], norm_fn(p["ln1"], x), state, head_dim,
+                           use_kernel=use_kernel)
+    x = x + h1
+    h2, xc = channel_mix(p["cmix"], norm_fn(p["ln2"], x), state)
+    x = x + h2
+    return x, RWKVState(x_tmix=xt, wkv=wkv, x_cmix=xc)
+
+
+def init_rwkv_state(batch, d_model, head_dim, dtype=jnp.bfloat16):
+    h = d_model // head_dim
+    return RWKVState(
+        x_tmix=jnp.zeros((batch, d_model), dtype),
+        wkv=jnp.zeros((batch, h, head_dim, head_dim), jnp.float32),
+        x_cmix=jnp.zeros((batch, d_model), dtype),
+    )

@@ -1,0 +1,386 @@
+"""Unified backbone: dense / MoE / RWKV6 / Hymba blocks behind one
+functional API, with scan-over-layers (stacked params) so the HLO stays
+one-layer-sized for the 512-device dry-run compile.
+
+Modes:
+  * ``forward_train``  — full-sequence, returns (logits, aux)
+  * ``prefill``        — full-sequence, returns (last_logits, cache)
+  * ``decode_step``    — one token against a cache, returns (logits, cache)
+
+Expert parallelism, sequence parallelism and batch sharding are injected via
+``ParallelCtx`` (None => single-device semantics, used by all smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from . import hymba as hym
+from . import rwkv6 as rwk
+from .layers import (_dtype, apply_mlp, apply_norm, attention_decode,
+                     attention_full, embed, init_attention, init_embedding,
+                     init_mlp, init_norm, init_unembed, unembed)
+from .moe import init_moe, moe_ep_local, moe_local
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Any = None
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: Optional[str] = "model"
+    data_axis: str = "data"
+    use_ep: bool = False
+    sp: bool = False                 # sequence-parallel residual stream
+    moe_capacity: float = 1.25
+    moe_chunk: int = 8_192
+    model_parallel: int = 1          # TP degree (for head/vocab padding)
+    # Analysis mode: fully unroll scan-over-layers (and downstream scans) so
+    # compiled.cost_analysis() counts every iteration — XLA counts while-loop
+    # bodies ONCE (verified; see EXPERIMENTS.md §Dry-run methodology).
+    scan_unroll: bool = False
+    # ---- beyond-paper perf knobs (EXPERIMENTS.md §Perf) ----
+    attn_chunk_kv: Optional[int] = None   # pure-JAX flash attention tile
+    ce_masksum: bool = False              # CE gold-logit via mask-sum (no
+                                          # vocab all-gather)
+    moe_fixed_capacity: bool = False      # fixed per-expert windows (no
+                                          # ragged_dot; TPU grouped-matmul)
+    remat_policy: str = "dots"            # dots | nothing (full recompute)
+    bf16_grad_sync: bool = False          # keep grads bf16 through the DP
+                                          # all-reduce (clip via f32 scalar)
+    fsdp: bool = False                    # shard large dense params on data
+    kv_cache_dtype: str = "bfloat16"      # decode cache dtype (fp8 option)
+
+
+LOCAL = ParallelCtx()
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_block(cfg: ArchConfig, key, hq, hkv, dtype):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    if cfg.block == "rwkv6":
+        return rwk.init_rwkv_block(key, cfg.d_model, cfg.rwkv_head_dim,
+                                   cfg.d_ff, cfg.norm, dtype)
+    p = {
+        "ln1": init_norm(ks[0], cfg.d_model, cfg.norm),
+        "ln2": init_norm(ks[1], cfg.d_model, cfg.norm),
+        "attn": init_attention(ks[2], cfg.d_model, hq, hkv, hd,
+                               qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+                               dtype=dtype),
+    }
+    if cfg.block == "hymba":
+        d_inner = cfg.ssm_d_inner or cfg.d_model
+        p["ssm"] = hym.init_ssm(ks[3], cfg.d_model, d_inner, cfg.ssm_state, dtype)
+        p["n_attn"] = init_norm(ks[4], cfg.d_model, cfg.norm)
+        p["n_ssm"] = init_norm(ks[5], cfg.d_model, cfg.norm)
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+        return p
+    if cfg.moe_experts:
+        p["moe"] = init_moe(ks[3], cfg.d_model, cfg.moe_experts, cfg.moe_d_ff,
+                            cfg.moe_top_k, cfg.act, dtype)
+        if cfg.moe_dense_residual:
+            p["mlp"] = init_mlp(ks[4], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[4], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key, parallel: ParallelCtx = LOCAL):
+    dtype = _dtype(cfg.dtype)
+    mp = parallel.model_parallel
+    hq, hkv = cfg.padded_heads(mp)
+    vocab = cfg.padded_vocab(mp)
+    k_embed, k_blocks, k_out, k_ln = jax.random.split(key, 4)
+    block_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: _init_block(cfg, k, hq, hkv, dtype))(block_keys)
+    params = {"blocks": blocks, "ln_f": init_norm(k_ln, cfg.d_model, cfg.norm)}
+    if cfg.frontend != "audio":       # audio stub feeds features directly
+        params["embed"] = init_embedding(k_embed, vocab, cfg.d_model, dtype)
+    params["unembed"] = init_unembed(k_out, cfg.d_model, vocab, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# block application (full sequence)
+# --------------------------------------------------------------------------
+
+def _constrain(x, parallel: ParallelCtx, spec):
+    if parallel.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(parallel.mesh, spec))
+
+
+def _residual_spec(parallel: ParallelCtx):
+    seq = parallel.model_axis if parallel.sp else None
+    return P(parallel.batch_axes, seq, None)
+
+
+def _apply_moe(cfg: ArchConfig, p_moe, h, parallel: ParallelCtx):
+    if not parallel.use_ep:
+        return moe_local(p_moe, h, cfg.moe_top_k, cfg.act)
+    b, s, d = h.shape
+    mesh = parallel.mesh
+    e_spec = P(parallel.data_axis, None,
+               parallel.model_axis if parallel.model_axis else None)
+    in_specs = (P(parallel.batch_axes, None, None),
+                {"router": P(), "w_up": e_spec, "w_down": P(
+                    parallel.data_axis,
+                    parallel.model_axis if parallel.model_axis else None, None)}
+                | ({"w_gate": e_spec} if "w_gate" in p_moe else {}))
+
+    def body(h_loc, p_loc):
+        t = h_loc.shape[0] * h_loc.shape[1]
+        out, aux = moe_ep_local(
+            p_loc, h_loc.reshape(t, d), cfg.moe_top_k,
+            num_experts=cfg.moe_experts, data_axis=parallel.data_axis,
+            model_axis=parallel.model_axis,
+            capacity_factor=parallel.moe_capacity,
+            chunk_tokens=parallel.moe_chunk, act=cfg.act,
+            unroll=parallel.scan_unroll,
+            fixed_capacity=parallel.moe_fixed_capacity)
+        aux = jax.lax.pmean(aux, parallel.batch_axes)
+        return out.reshape(h_loc.shape), aux
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=(P(parallel.batch_axes, None, None), P()),
+                       check_vma=False)
+    return fn(h, p_moe)
+
+
+def _block_full(cfg: ArchConfig, p, x, state, parallel: ParallelCtx,
+                hq, hkv, use_kernel):
+    """One block, full-sequence.  Returns (x, cache_out, aux)."""
+    hd = cfg.resolved_head_dim
+    aux = jnp.float32(0.0)
+    if cfg.block == "rwkv6":
+        x, st = rwk.rwkv_block(p, x, state, cfg.rwkv_head_dim,
+                               lambda pn, v: apply_norm(pn, v, cfg.norm),
+                               use_kernel=use_kernel)
+        return x, st, aux
+    attn_kwargs = dict(num_heads=hq, num_kv_heads=hkv, head_dim=hd,
+                       causal=cfg.causal, window=cfg.window,
+                       theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                       chunk_kv=parallel.attn_chunk_kv,
+                       unroll=parallel.scan_unroll)
+    if cfg.block == "hymba":
+        h_in = apply_norm(p["ln1"], x, cfg.norm)
+        fused, kv, h_fin = hym.hymba_mix_full(
+            {"attn": p["attn"], "ssm": p["ssm"], "n_attn": p["n_attn"],
+             "n_ssm": p["n_ssm"]}, h_in, attn_kwargs, cfg.norm,
+            h0=state, use_kernel=use_kernel)
+        x = x + fused
+        x = _constrain(x, parallel, _residual_spec(parallel))
+        x = x + apply_mlp(p["mlp"], apply_norm(p["ln2"], x, cfg.norm), cfg.act)
+        return x, (kv, h_fin), aux
+    # dense / moe
+    attn_out, kv = attention_full(p["attn"], apply_norm(p["ln1"], x, cfg.norm),
+                                  **attn_kwargs, use_kernel=use_kernel)
+    x = x + attn_out
+    x = _constrain(x, parallel, _residual_spec(parallel))
+    h = apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.moe_experts:
+        moe_out, aux = _apply_moe(cfg, p["moe"], h, parallel)
+        if cfg.moe_dense_residual:
+            moe_out = moe_out + apply_mlp(p["mlp"], h, cfg.act)
+        x = x + moe_out
+    else:
+        x = x + apply_mlp(p["mlp"], h, cfg.act)
+    x = _constrain(x, parallel, _residual_spec(parallel))
+    return x, kv, aux
+
+
+# --------------------------------------------------------------------------
+# embedding / input handling
+# --------------------------------------------------------------------------
+
+def embed_inputs(cfg: ArchConfig, params, batch):
+    """Token / stub-frontend embedding. batch keys: tokens, image_embeds,
+    features (per family)."""
+    if cfg.frontend == "audio":
+        return batch["features"].astype(_dtype(cfg.dtype))
+    x = embed(params["embed"], batch["tokens"])
+    if cfg.frontend == "vision" and "image_embeds" in batch:
+        pfx = batch["image_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pfx, x[:, pfx.shape[1]:]], axis=1)
+    return x
+
+
+# --------------------------------------------------------------------------
+# forward modes
+# --------------------------------------------------------------------------
+
+def _init_state_full(cfg: ArchConfig, batch_size, dtype):
+    if cfg.block == "rwkv6":
+        return rwk.init_rwkv_state(batch_size, cfg.d_model, cfg.rwkv_head_dim,
+                                   dtype)
+    if cfg.block == "hymba":
+        d_inner = cfg.ssm_d_inner or cfg.d_model
+        return jnp.zeros((batch_size, d_inner, cfg.ssm_state), jnp.float32)
+    return None
+
+
+def forward_hidden(cfg: ArchConfig, params, batch, *,
+                   parallel: ParallelCtx = LOCAL, remat: bool = False,
+                   use_kernel: Optional[bool] = None,
+                   return_cache: bool = False):
+    """Backbone up to the final norm. Returns (x (B,S,d), aux, cache|None).
+
+    The unembedding is deliberately *not* applied here: at 152k vocab the
+    full-sequence fp32 logits would be tens of GB — loss functions consume
+    the hidden states and do chunked CE against params['unembed'] instead.
+    """
+    dtype = _dtype(cfg.dtype)
+    hq, hkv = cfg.padded_heads(parallel.model_parallel)
+    x = embed_inputs(cfg, params, batch)
+    x = _constrain(x, parallel, _residual_spec(parallel))
+    b = x.shape[0]
+    state0 = _init_state_full(cfg, b, dtype)
+
+    def body(carry, p_layer):
+        x = carry
+        x, cache, aux = _block_full(cfg, p_layer, x, state0, parallel, hq,
+                                    hkv, use_kernel)
+        return x, (cache if return_cache else None, aux)
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if parallel.remat_policy == "dots" else
+                  jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    x, (caches, auxes) = jax.lax.scan(body, x, params["blocks"],
+                                      unroll=parallel.scan_unroll)
+    x = apply_norm(params["ln_f"], x, cfg.norm)
+    return x, jnp.sum(auxes), caches
+
+
+def forward_train(cfg: ArchConfig, params, batch, *,
+                  parallel: ParallelCtx = LOCAL, remat: bool = False,
+                  use_kernel: Optional[bool] = None, return_cache: bool = False):
+    """Full-sequence forward. Returns (logits (B,S,V), aux, cache|None)."""
+    x, aux, caches = forward_hidden(cfg, params, batch, parallel=parallel,
+                                    remat=remat, use_kernel=use_kernel,
+                                    return_cache=return_cache)
+    logits = unembed(params["unembed"], x)
+    logits = _constrain(logits, parallel,
+                        P(parallel.batch_axes, None, parallel.model_axis))
+    return logits, aux, caches
+
+
+def make_dense_cache(cfg: ArchConfig, batch, seq_len, parallel: ParallelCtx = LOCAL):
+    import jax.numpy as _jnp
+    dtype = _dtype(cfg.dtype)
+    kv_dtype = {"bfloat16": _jnp.bfloat16, "float32": _jnp.float32,
+                "float8_e4m3fn": _jnp.float8_e4m3fn}[parallel.kv_cache_dtype]
+    hq, hkv = cfg.padded_heads(parallel.model_parallel)
+    hd = cfg.resolved_head_dim
+    l = cfg.num_layers
+    if cfg.block == "rwkv6":
+        st = rwk.init_rwkv_state(batch, cfg.d_model, cfg.rwkv_head_dim, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (l,) + a.shape), st)
+    if cfg.block == "hymba":
+        d_inner = cfg.ssm_d_inner or cfg.d_model
+        c = hym.init_hymba_cache(batch, d_inner, cfg.ssm_state,
+                                 cfg.window or seq_len, hkv, hd, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (l,) + a.shape), c)
+    zeros = jnp.zeros((l, batch, seq_len, hkv, hd), kv_dtype)
+    return (zeros, zeros)
+
+
+def decode_step(cfg: ArchConfig, params, token_batch, cache, pos, *,
+                parallel: ParallelCtx = LOCAL,
+                use_kernel: Optional[bool] = None):
+    """One-token decode. token_batch: {tokens: (B, 1)} (or features (B,1,d));
+    cache: stacked per-layer cache; pos: scalar int32 current position.
+    Returns (logits (B, V), new_cache)."""
+    if cfg.is_encoder_only:
+        raise ValueError(f"{cfg.name} is encoder-only; no decode step")
+    hq, hkv = cfg.padded_heads(parallel.model_parallel)
+    hd = cfg.resolved_head_dim
+    x = embed_inputs(cfg, params, token_batch)
+
+    def body(carry, layer_in):
+        x = carry
+        p, c = layer_in
+        if cfg.block == "rwkv6":
+            st = rwk.RWKVState(*c)
+            x, new_c = rwk.rwkv_block(p, x, st, cfg.rwkv_head_dim,
+                                      lambda pn, v: apply_norm(pn, v, cfg.norm),
+                                      use_kernel=use_kernel)
+            return x, new_c
+        if cfg.block == "hymba":
+            h_in = apply_norm(p["ln1"], x, cfg.norm)
+            fused, new_c = hym.hymba_mix_decode(
+                {"attn": p["attn"], "ssm": p["ssm"], "n_attn": p["n_attn"],
+                 "n_ssm": p["n_ssm"]}, h_in, hym.HymbaCache(*c), pos,
+                num_heads=hq, num_kv_heads=hkv, head_dim=hd,
+                window=cfg.window, theta=cfg.rope_theta, norm_kind=cfg.norm)
+            x = x + fused
+            x = x + apply_mlp(p["mlp"], apply_norm(p["ln2"], x, cfg.norm), cfg.act)
+            return x, new_c
+        k_c, v_c = c
+        attn_out, k_c, v_c = attention_decode(
+            p["attn"], apply_norm(p["ln1"], x, cfg.norm), k_c, v_c, pos,
+            num_heads=hq, num_kv_heads=hkv, head_dim=hd, window=cfg.window,
+            theta=cfg.rope_theta, qk_norm=cfg.qk_norm)
+        x = x + attn_out
+        h = apply_norm(p["ln2"], x, cfg.norm)
+        if cfg.moe_experts:
+            moe_out, _ = _apply_moe(cfg, p["moe"], h, parallel)
+            if cfg.moe_dense_residual:
+                moe_out = moe_out + apply_mlp(p["mlp"], h, cfg.act)
+            x = x + moe_out
+        else:
+            x = x + apply_mlp(p["mlp"], h, cfg.act)
+        return x, (k_c, v_c)
+
+    cache_tuple = tuple(cache) if isinstance(cache, (tuple, list)) else cache
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache_tuple),
+                                unroll=parallel.scan_unroll)
+    x = apply_norm(params["ln_f"], x, cfg.norm)
+    logits = unembed(params["unembed"], x[:, -1])
+    return logits, new_cache
+
+
+def prefill(cfg: ArchConfig, params, batch, *, parallel: ParallelCtx = LOCAL,
+            use_kernel: Optional[bool] = None):
+    """Full-sequence prefill: returns (last_logits (B,V), cache)."""
+    logits, aux, caches = forward_train(cfg, params, batch, parallel=parallel,
+                                        use_kernel=use_kernel,
+                                        return_cache=True)
+    if cfg.block in ("rwkv6", "hymba"):
+        # caches are final states per layer (already stacked by scan)
+        cache = caches
+        if cfg.block == "hymba":
+            kv, h_fin = caches
+            b = h_fin.shape[1]
+            hq, hkv_ = cfg.padded_heads(parallel.model_parallel)
+            w = cfg.window or batch["tokens"].shape[1]
+            # build ring from the last `window` positions
+            k_all, v_all = kv
+            s = k_all.shape[2]
+            k_ring = k_all[:, :, max(0, s - w):]
+            v_ring = v_all[:, :, max(0, s - w):]
+            ring_pos = jnp.arange(s - w, s, dtype=jnp.int32)
+            # slot i holds abs pos p with p % w == i: slice index j maps to
+            # pos (s-w)+j, so shift right by (s-w) mod w
+            roll = (s - w) % w
+            k_ring = jnp.roll(k_ring, roll, axis=2)
+            v_ring = jnp.roll(v_ring, roll, axis=2)
+            ring_pos = jnp.roll(ring_pos, roll)
+            l = cfg.num_layers
+            cache = hym.HymbaCache(
+                ssm_h=h_fin, k_ring=k_ring, v_ring=v_ring,
+                ring_pos=jnp.broadcast_to(ring_pos, (l, w)))
+    else:
+        cache = caches
+    return logits[:, -1], cache

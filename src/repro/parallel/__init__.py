@@ -1,0 +1,3 @@
+from .collectives import compressed_psum_mean, lse_combine
+from .sharding import (batch_shardings, cache_shardings, opt_state_shardings,
+                       param_shardings)

@@ -1,0 +1,2 @@
+from .fault_tolerance import (PREEMPTED_EXIT_CODE, LoopConfig, Preempted,
+                              PreemptionSignal, train_loop)

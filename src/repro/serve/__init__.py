@@ -1,0 +1,1 @@
+from .engine import Request, ServingEngine, make_decode_fn, make_prefill_fn

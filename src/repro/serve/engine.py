@@ -1,0 +1,98 @@
+"""Serving: jitted prefill/decode step factories + a batched engine.
+
+Decode-cache distribution follows the flash-decoding layout injected by
+repro.parallel.sharding (KV sequence sharded over ``model``): the decode
+einsums contract over the sharded sequence dim, so GSPMD lowers them to
+local partial attention + tiny (B,H)-sized all-reduces — verified against
+the compiled HLO in the dry-run (no KV all-gather; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import (LOCAL, ParallelCtx, decode_step,
+                                      make_dense_cache, prefill)
+
+
+def make_prefill_fn(cfg: ArchConfig, parallel: ParallelCtx = LOCAL,
+                    in_shardings=None, out_shardings=None, use_kernel=None):
+    def fn(params, batch):
+        return prefill(cfg, params, batch, parallel=parallel,
+                       use_kernel=use_kernel)
+
+    return jax.jit(fn, in_shardings=in_shardings, out_shardings=out_shardings)
+
+
+def make_decode_fn(cfg: ArchConfig, parallel: ParallelCtx = LOCAL,
+                   in_shardings=None, out_shardings=None, use_kernel=None,
+                   donate_cache: bool = True):
+    def fn(params, token_batch, cache, pos):
+        return decode_step(cfg, params, token_batch, cache, pos,
+                           parallel=parallel, use_kernel=use_kernel)
+
+    donate = (2,) if donate_cache else ()
+    return jax.jit(fn, donate_argnums=donate, in_shardings=in_shardings,
+                   out_shardings=out_shardings)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: jnp.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    out: Optional[List[int]] = None
+
+
+class ServingEngine:
+    """Minimal batched greedy-decoding engine for the examples/tests.
+
+    Requests are padded into a fixed batch; prefill builds the cache;
+    decode proceeds in lockstep (one batched decode_step per token).
+    """
+
+    def __init__(self, cfg: ArchConfig, params, batch_size: int,
+                 max_seq: int, parallel: ParallelCtx = LOCAL,
+                 use_kernel=None):
+        self.cfg = cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self.parallel = parallel
+        self._prefill = make_prefill_fn(cfg, parallel, use_kernel=use_kernel)
+        self._decode = make_decode_fn(cfg, parallel, use_kernel=use_kernel)
+
+    def generate(self, requests: List[Request]) -> List[List[int]]:
+        assert len(requests) <= self.batch_size
+        bsz = self.batch_size
+        plen = max(int(r.prompt.shape[0]) for r in requests)
+        max_new = max(r.max_new_tokens for r in requests)
+        toks = jnp.zeros((bsz, plen), jnp.int32)
+        for i, r in enumerate(requests):
+            toks = toks.at[i, plen - r.prompt.shape[0]:].set(r.prompt)
+        # cache sized for prompt + generation budget
+        total = plen + max_new
+        batch = {"tokens": toks}
+        last_logits, cache = self._prefill(self.params, batch)
+        if self.cfg.block == "attn_mlp":
+            k_c, v_c = cache
+            pad = total - k_c.shape[2]
+            k_c = jnp.pad(k_c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v_c = jnp.pad(v_c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cache = (k_c, v_c)
+        outs = [[] for _ in requests]
+        tok = jnp.argmax(last_logits[:, :self.cfg.vocab_size], axis=-1)
+        for i in range(len(requests)):
+            outs[i].append(int(tok[i]))
+        for step in range(1, max_new):
+            logits, cache = self._decode(self.params,
+                                         {"tokens": tok[:, None]}, cache,
+                                         jnp.int32(plen + step - 1))
+            tok = jnp.argmax(logits[:, :self.cfg.vocab_size], axis=-1)
+            for i in range(len(requests)):
+                if len(outs[i]) < requests[i].max_new_tokens:
+                    outs[i].append(int(tok[i]))
+        return outs

@@ -1,0 +1,3 @@
+from .losses import diffusion_loss, lm_loss
+from .steps import (init_error_feedback, jit_train_step,
+                    make_dp_train_step_compressed, make_train_step)

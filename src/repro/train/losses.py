@@ -1,0 +1,108 @@
+"""Loss functions: chunked-CE language modelling (causal / masked / VLM)
+and the diffusion epsilon-prediction objective."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import dit
+from repro.models.transformer import LOCAL, ParallelCtx, forward_hidden
+
+AUX_COEF = 0.01
+CE_CHUNK = 512
+
+
+def _chunked_ce(x, labels, valid, unembed_w, vocab_real, chunk=CE_CHUNK,
+                unroll: bool = False, masksum: bool = False):
+    """Cross-entropy without materializing (B, S, V) fp32 logits.
+
+    x: (B, S, d); labels: (B, S) int32; valid: (B, S) bool.
+    Scans over sequence chunks; padded-vocab columns are masked out of the
+    logsumexp.  Returns (sum_loss, sum_valid).
+    """
+    b, s, d = x.shape
+    vpad = unembed_w.shape[1]
+    n_chunks = max(1, s // chunk)
+    while s % n_chunks:
+        n_chunks -= 1
+    cs = s // n_chunks
+    xs = x.reshape(b, n_chunks, cs, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n_chunks, cs).transpose(1, 0, 2)
+    vs = valid.reshape(b, n_chunks, cs).transpose(1, 0, 2)
+    col_ok = (jnp.arange(vpad) < vocab_real)
+
+    def body(carry, inp):
+        x_c, l_c, v_c = inp
+        logits = (x_c @ unembed_w).astype(jnp.float32)
+        logits = jnp.where(col_ok, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        if masksum:
+            # mask-sum stays local under vocab-TP: the (B,C,V) gather that
+            # take_along_axis forces XLA to all-gather disappears
+            gold = jnp.sum(jnp.where(l_c[..., None] == jnp.arange(logits.shape[-1]),
+                                     logits, 0.0), axis=-1)
+        else:
+            gold = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        nll = jnp.where(v_c, lse - gold, 0.0)
+        loss_sum, n_sum = carry
+        return (loss_sum + jnp.sum(nll), n_sum + jnp.sum(v_c)), None
+
+    (loss_sum, n_sum), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (xs, ls, vs),
+        unroll=unroll)
+    return loss_sum, n_sum
+
+
+def lm_loss(cfg: ArchConfig, params, batch, *, parallel: ParallelCtx = LOCAL,
+            remat: bool = False, use_kernel: Optional[bool] = None):
+    """Next-token CE for causal archs; masked-unit CE for encoder (audio);
+    prefix positions excluded for VLM.  Returns (loss, metrics)."""
+    x, aux, _ = forward_hidden(cfg, params, batch, parallel=parallel,
+                               remat=remat, use_kernel=use_kernel)
+    labels = batch["labels"]
+    b, s = labels.shape
+    if cfg.causal:
+        x_in = x[:, :-1]
+        tgt = labels[:, 1:]
+        valid = jnp.ones((b, s - 1), bool)
+        if cfg.frontend == "vision":
+            pos = jnp.arange(s - 1)
+            valid = jnp.broadcast_to(pos >= cfg.num_prefix_embeds, (b, s - 1))
+    else:
+        x_in = x
+        tgt = labels
+        valid = batch.get("mask", jnp.ones((b, s), bool))
+    loss_sum, n = _chunked_ce(x_in, tgt, valid, params["unembed"]["w"],
+                              cfg.vocab_size, unroll=parallel.scan_unroll,
+                              masksum=parallel.ce_masksum)
+    ce = loss_sum / jnp.maximum(n, 1.0)
+    loss = ce + AUX_COEF * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": n}
+
+
+def diffusion_loss(cfg: ArchConfig, params, batch, key, *,
+                   schedule_ab=None, use_kernel: Optional[bool] = None):
+    """Epsilon-prediction MSE on the DiT (or any denoiser).
+
+    batch['images']: (B, H, W, C) in [-1, 1]; t sampled uniformly over the
+    training grid; ab(t) from a linear-beta alpha-bar curve by default.
+    """
+    imgs = batch["images"]
+    b = imgs.shape[0]
+    k_t, k_eps = jax.random.split(key)
+    t = jax.random.uniform(k_t, (b,), minval=0.0, maxval=999.0)
+    if schedule_ab is None:
+        betas = jnp.linspace(1e-4, 0.02, 1000)
+        ab_full = jnp.cumprod(1.0 - betas)
+        ab = ab_full[t.astype(jnp.int32)]
+    else:
+        ab = schedule_ab(t)
+    eps = jax.random.normal(k_eps, imgs.shape, imgs.dtype)
+    x_t = (jnp.sqrt(ab)[:, None, None, None] * imgs
+           + jnp.sqrt(1 - ab)[:, None, None, None] * eps)
+    pred = dit.dit_forward(cfg, params, x_t, t, use_kernel=use_kernel)
+    loss = jnp.mean(jnp.square(pred.astype(jnp.float32) - eps))
+    return loss, {"mse": loss}

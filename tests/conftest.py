@@ -1,0 +1,42 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; multi-device tests spawn subprocesses with their own flags."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 900, env_extra=None):
+    """Run a python snippet with N fake devices; return CompletedProcess."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.fixture(scope="session")
+def toy_model():
+    """A smooth nonlinear eps-predictor for solver/SRDS math tests (f32)."""
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (8, 8)) * 0.3
+
+    def model_fn(x, t):
+        return jnp.tanh(x @ w) * (0.5 + 0.001 * t)
+
+    return model_fn
+
+
+def to_f64(sched):
+    from repro.core.schedules import DiffusionSchedule
+    return DiffusionSchedule(ab=sched.ab.astype(jnp.float64),
+                             t_model=sched.t_model.astype(jnp.float64),
+                             kind=sched.kind)

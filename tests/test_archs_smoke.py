@@ -1,0 +1,186 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward +
+one train step on CPU, asserting shapes and no NaNs (the FULL configs are
+exercised only via the dry-run)."""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+
+kops.FORCE_REF = True   # pure-jnp attention on CPU smoke paths
+
+from repro.configs import arch_names, get_arch, shape_cells, SHAPES
+from repro.data import DataConfig, make_stream
+from repro.models import (decode_step, forward_train, init_dit, init_params,
+                          prefill)
+from repro.models.dit import dit_forward
+from repro.optim import AdamWConfig, init_opt_state
+from repro.train import make_train_step
+
+ASSIGNED = ["stablelm-3b", "qwen1.5-32b", "qwen3-8b", "qwen3-14b",
+            "phi-3-vision-4.2b", "rwkv6-1.6b", "hymba-1.5b", "arctic-480b",
+            "kimi-k2-1t-a32b", "hubert-xlarge"]
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _reduced_with_prefix(cfg):
+    red = cfg.reduced()
+    return red
+
+
+def _batch(cfg, b=2, s=32):
+    stream = make_stream(cfg, DataConfig(global_batch=b, seq_len=s, seed=3))
+    return stream.batch(0)
+
+
+def test_all_assigned_archs_registered():
+    names = arch_names()
+    for a in ASSIGNED:
+        assert a in names, a
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_full_config_dimensions(arch):
+    """The registered config carries the exact published dimensions."""
+    cfg = get_arch(arch)
+    expected = {
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (got, expected)
+    if arch == "arctic-480b":
+        assert (cfg.moe_experts, cfg.moe_top_k) == (128, 2)
+        assert cfg.moe_dense_residual
+    if arch == "kimi-k2-1t-a32b":
+        assert (cfg.moe_experts, cfg.moe_top_k) == (384, 8)
+    if arch == "hymba-1.5b":
+        assert cfg.ssm_state == 16 and cfg.block == "hymba"
+    if arch == "hubert-xlarge":
+        assert cfg.is_encoder_only
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward(arch):
+    cfg = _reduced_with_prefix(get_arch(arch))
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg)
+    logits, aux, _ = forward_train(cfg, params, batch)
+    b, s = (batch.get("tokens", batch.get("features"))).shape[:2]
+    assert logits.shape == (b, s, cfg.padded_vocab(1))
+    assert not bool(jnp.any(jnp.isnan(logits))), arch
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_train_step(arch):
+    """One optimizer step: finite loss, params actually change, no NaNs."""
+    cfg = _reduced_with_prefix(get_arch(arch))
+    params = init_params(cfg, KEY)
+    opt = init_opt_state(params)
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3), use_kernel=False)
+    batch = _batch(cfg)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch, KEY)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert int(new_opt["step"]) == 1
+    # at least one leaf moved
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved
+    for leaf in jax.tree.leaves(new_params):
+        assert not bool(jnp.any(jnp.isnan(leaf.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED
+                                  if not get_arch(a).is_encoder_only])
+def test_smoke_prefill_decode(arch):
+    """prefill + decode_step reproduce the full-sequence last-token logits."""
+    cfg = _reduced_with_prefix(get_arch(arch))
+    params = init_params(cfg, KEY)
+    s = 48
+    batch = _batch(cfg, s=s)
+    logits, _, _ = forward_train(cfg, params, batch)
+    b2 = {k: (v[:, :s - 1] if k in ("tokens", "features") else v)
+          for k, v in batch.items()}
+    _, cache = prefill(cfg, params, b2)
+    if cfg.block == "attn_mlp":
+        k_c, v_c = cache
+        cache = (jnp.pad(k_c, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0))),
+                 jnp.pad(v_c, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0))))
+    tok = {"tokens": batch["tokens"][:, s - 1:s]} if "tokens" in batch else \
+        {"features": batch["features"][:, s - 1:s]}
+    lg, _ = decode_step(cfg, params, tok, cache, jnp.int32(s - 1))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_shape_cell_skip_rules():
+    """Assignment skip rules: long_500k only for sub-quadratic archs;
+    no decode for encoder-only."""
+    cells = {a: [s.name for s in shape_cells(get_arch(a))] for a in ASSIGNED}
+    for a in ("rwkv6-1.6b", "hymba-1.5b"):
+        assert "long_500k" in cells[a]
+    for a in ("stablelm-3b", "qwen3-8b", "arctic-480b", "kimi-k2-1t-a32b"):
+        assert "long_500k" not in cells[a]
+    assert cells["hubert-xlarge"] == ["train_4k", "prefill_32k"]
+    # 31 runnable assigned cells total
+    assert sum(len(v) for v in cells.values()) == 31
+
+
+def test_head_padding_rules():
+    assert get_arch("hymba-1.5b").padded_heads(16) == (32, 8)
+    assert get_arch("qwen1.5-32b").padded_heads(16) == (48, 48)
+    assert get_arch("arctic-480b").padded_heads(16) == (64, 8)
+    assert get_arch("qwen3-8b").padded_heads(16) == (32, 8)
+    assert get_arch("stablelm-3b").padded_heads(16) == (32, 32)
+    # no padding at TP=1
+    assert get_arch("hymba-1.5b").padded_heads(1) == (25, 5)
+
+
+def test_param_counts_sane():
+    """Param-count model used for roofline MODEL_FLOPS is in the right
+    ballpark (matching the archs' nameplate sizes)."""
+    approx = {
+        "stablelm-3b": (2.0e9, 4.5e9),
+        "qwen3-8b": (6e9, 10e9),
+        "qwen3-14b": (12e9, 17e9),
+        "qwen1.5-32b": (28e9, 38e9),
+        "arctic-480b": (3.5e11, 5.5e11),
+        "kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+        "rwkv6-1.6b": (1.2e9, 2.2e9),
+        "hymba-1.5b": (1.0e9, 2.1e9),
+        "hubert-xlarge": (0.7e9, 1.4e9),
+    }
+    for a, (lo, hi) in approx.items():
+        n = get_arch(a).param_count()
+        assert lo < n < hi, (a, n)
+    k = get_arch("kimi-k2-1t-a32b")
+    assert k.active_param_count() < 0.1 * k.param_count()
+
+
+def test_dit_smoke_train():
+    cfg = dc.replace(get_arch("srds-dit-cifar").reduced(), patch_size=2,
+                     in_channels=3)
+    params = init_dit(cfg, KEY)
+    from repro.train.losses import diffusion_loss
+    batch = {"images": jax.random.normal(KEY, (2, 8, 8, 3))}
+    (loss, m), grads = jax.value_and_grad(
+        lambda p: diffusion_loss(cfg, p, batch, KEY, use_kernel=False),
+        has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in jax.tree.leaves(grads))

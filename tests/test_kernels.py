@@ -1,0 +1,184 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes, dtypes, masks and GQA groupings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEYS = jax.random.split(jax.random.PRNGKey(0), 8)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # B, Hq, Hkv, Sq, Sk, D, causal, window
+    (2, 4, 4, 64, 64, 32, True, None),
+    (1, 8, 2, 128, 128, 64, True, None),      # GQA 4x
+    (2, 4, 1, 32, 32, 16, False, None),       # MQA, bidirectional (encoder)
+    (1, 4, 4, 64, 64, 32, True, 16),          # sliding window
+    (1, 2, 2, 1, 128, 32, True, None),        # decode: 1 query vs cache
+    (1, 4, 2, 48, 48, 24, True, None),        # ragged tiles
+    (1, 4, 4, 80, 80, 40, True, 8),           # ragged + window
+    (2, 2, 2, 100, 100, 32, False, None),
+    (1, 4, 2, 40, 104, 32, True, None),       # chunked prefill (Sq < Sk)
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES, ids=lambda c: f"B{c[0]}H{c[1]}-{c[2]}S{c[3]}x{c[4]}D{c[5]}c{int(c[6])}w{c[7]}")
+def test_flash_attention_fwd(case):
+    b, hq, hkv, sq, sk, d, causal, win = case
+    q = jax.random.normal(KEYS[0], (b, hq, sq, d))
+    k = jax.random.normal(KEYS[1], (b, hkv, sk, d))
+    v = jax.random.normal(KEYS[2], (b, hkv, sk, d))
+    out = ops.attention(q, k, v, causal=causal, window=win,
+                        block_q=32, block_k=32, use_kernel=True)
+    exp = ref.attention(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("case", [c for c in ATTN_CASES if c[3] > 1],
+                         ids=lambda c: f"S{c[3]}x{c[4]}w{c[7]}g{c[1]//c[2]}")
+def test_flash_attention_grads(case):
+    b, hq, hkv, sq, sk, d, causal, win = case
+    q = jax.random.normal(KEYS[0], (b, hq, sq, d))
+    k = jax.random.normal(KEYS[1], (b, hkv, sk, d))
+    v = jax.random.normal(KEYS[2], (b, hkv, sk, d))
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(jnp.sin(
+            fn(q, k, v)))
+
+    gk = jax.grad(loss(lambda q, k, v: ops.attention(
+        q, k, v, causal=causal, window=win, block_q=32, block_k=32,
+        use_kernel=True)), (0, 1, 2))(q, k, v)
+    gr = jax.grad(loss(lambda q, k, v: ref.attention(
+        q, k, v, causal=causal, window=win)), (0, 1, 2))(q, k, v)
+    for a, b_, name in zip(gk, gr, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=5e-5, atol=5e-5, err_msg=f"d{name}")
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(KEYS[0], (1, 4, 64, 32), dtype)
+    k = jax.random.normal(KEYS[1], (1, 2, 64, 32), dtype)
+    v = jax.random.normal(KEYS[2], (1, 2, 64, 32), dtype)
+    out = ops.attention(q, k, v, block_q=32, block_k=32, use_kernel=True)
+    exp = ref.attention(q, k, v)
+    assert out.dtype == dtype
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.integers(2, 96), dk=st.sampled_from([8, 16, 24, 64]),
+       hq=st.sampled_from([1, 2, 4]), group=st.sampled_from([1, 2]),
+       causal=st.booleans())
+def test_flash_attention_property(sq, dk, hq, group, causal):
+    hkv = max(1, hq // group)
+    q = jax.random.normal(KEYS[3], (1, hkv * group, sq, dk))
+    k = jax.random.normal(KEYS[4], (1, hkv, sq, dk))
+    v = jax.random.normal(KEYS[5], (1, hkv, sq, dk))
+    out = ops.attention(q, k, v, causal=causal, block_q=32, block_k=32,
+                        use_kernel=True)
+    exp = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=3e-5, atol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# rwkv6 wkv
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 1, 16, 8, 8), (2, 3, 40, 16, 16),
+                                   (1, 2, 64, 32, 32), (1, 1, 7, 8, 8)])
+def test_rwkv6_wkv(shape):
+    b, h, t, dk, dv = shape
+    r = jax.random.normal(KEYS[0], (b, h, t, dk)) * 0.5
+    k = jax.random.normal(KEYS[1], (b, h, t, dk)) * 0.5
+    v = jax.random.normal(KEYS[2], (b, h, t, dv)) * 0.5
+    w = jax.random.normal(KEYS[3], (b, h, t, dk)) * 0.5 - 1.0
+    u = jax.random.normal(KEYS[4], (h, dk)) * 0.3
+    out_k, s_k = ops.rwkv6_wkv(r, k, v, w, u, use_kernel=True)
+    out_r, s_r = ref.rwkv6_wkv(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rwkv6_state_chaining():
+    """Processing [T1 | T2] in two kernel calls with state carry == one call."""
+    b, h, t, d = 1, 2, 32, 8
+    r, k, v, w = (jax.random.normal(KEYS[i], (b, h, t, d)) * 0.5 for i in range(4))
+    u = jax.random.normal(KEYS[4], (h, d)) * 0.3
+    full, s_full = ops.rwkv6_wkv(r, k, v, w, u, use_kernel=True)
+    o1, s1 = ops.rwkv6_wkv(r[:, :, :16], k[:, :, :16], v[:, :, :16],
+                           w[:, :, :16], u, use_kernel=True)
+    o2, s2 = ops.rwkv6_wkv(r[:, :, 16:], k[:, :, 16:], v[:, :, 16:],
+                           w[:, :, 16:], u, state=s1, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], axis=2)),
+                               np.asarray(full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# fused elementwise
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 5000), a=st.floats(0.01, 0.98), db=st.floats(0.01, 0.3),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_ddim_fused_property(n, a, db, dtype):
+    dt = jnp.dtype(dtype)
+    x = jax.random.normal(KEYS[0], (n,), dt)
+    e = jax.random.normal(KEYS[1], (n,), dt)
+    b = min(a + db, 0.999)
+    out = ops.ddim_fused(x, e, a, b, use_kernel=True)
+    exp = ref.ddim_fused(x, e, a, b)
+    assert out.shape == x.shape and out.dtype == dt
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=1e-2 if dtype == "bfloat16" else 1e-6,
+                               atol=1e-2 if dtype == "bfloat16" else 1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=st.sampled_from([(7,), (33, 5), (4, 129), (2, 3, 64), (1000,)]))
+def test_parareal_update_property(shape):
+    y = jax.random.normal(KEYS[0], shape)
+    c = jax.random.normal(KEYS[1], shape)
+    p = jax.random.normal(KEYS[2], shape)
+    out_k, r_k = ops.parareal_update(y, c, p, use_kernel=True)
+    out_r, r_r = ref.parareal_update(y, c, p)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(r_k), float(r_r), rtol=1e-4)
+
+
+def test_srds_with_fused_kernels_end_to_end():
+    """SRDS with the fused Pallas update == SRDS with plain jnp update."""
+    from repro.core import (SolverConfig, SRDSConfig, make_schedule,
+                            sample_sequential, srds_sample)
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 8)) * 0.3
+
+    def model_fn(x, t):
+        return jnp.tanh(x @ w) * (0.5 + 0.001 * t)
+
+    sched = make_schedule("ddpm_linear", 16)
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (2, 8))
+    res_f = srds_sample(model_fn, sched,
+                        SolverConfig("ddim", use_fused_kernel=True), x0,
+                        SRDSConfig(tol=0.0, use_fused_update=True))
+    res_p = srds_sample(model_fn, sched, SolverConfig("ddim"), x0,
+                        SRDSConfig(tol=0.0))
+    np.testing.assert_allclose(np.asarray(res_f.sample),
+                               np.asarray(res_p.sample), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,92 @@
+"""Hypothesis property tests for the SRDS invariants."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SolverConfig, SRDSConfig, make_schedule,
+                        resolve_blocks, sample_sequential, srds_sample)
+from conftest import to_f64
+
+SOLVERS = ["ddim", "heun", "dpm2", "ddpm"]
+
+
+def _model(seed, dim):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (dim, dim),
+                          dtype=jnp.float64) * 0.35
+
+    def model_fn(x, t):
+        return jnp.tanh(x @ w) * (0.4 + 0.0008 * t)
+
+    return model_fn
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(min_value=4, max_value=48),
+       seed=st.integers(min_value=0, max_value=2 ** 16),
+       solver=st.sampled_from(SOLVERS),
+       kind=st.sampled_from(["ddpm_linear", "cosine", "karras"]))
+def test_srds_always_equals_sequential(n, seed, solver, kind):
+    """INVARIANT (Prop 1): for any grid size, schedule family, solver and
+    random model/init, SRDS at the iteration cap == sequential solve."""
+    model = _model(seed, 4)
+    sched = to_f64(make_schedule(kind, n))
+    cfg = SolverConfig(solver, noise_key=jax.random.PRNGKey(seed ^ 0xABCD))
+    x0 = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 4),
+                           dtype=jnp.float64)
+    ref = sample_sequential(model, sched, cfg, x0)
+    res = srds_sample(model, sched, cfg, x0, SRDSConfig(tol=0.0))
+    np.testing.assert_allclose(np.asarray(res.sample), np.asarray(ref),
+                               rtol=0, atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=4, max_value=64),
+       b_hint=st.integers(min_value=1, max_value=64))
+def test_resolve_blocks_invariants(n, b_hint):
+    """B*S == N always; B respects an explicit divisor hint."""
+    b, s = resolve_blocks(n, None)
+    assert b * s == n and 1 <= b <= n
+    b2, s2 = resolve_blocks(n, b_hint)
+    assert b2 * s2 == n
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       tol=st.sampled_from([1e-3, 1e-5, 1e-8]))
+def test_tolerance_monotonicity(seed, tol):
+    """Tighter tolerance never takes fewer iterations, and final residual is
+    below tol whenever the sampler reports convergence before the cap."""
+    model = _model(seed, 4)
+    sched = to_f64(make_schedule("ddpm_linear", 36))
+    cfg = SolverConfig("ddim")
+    x0 = jax.random.normal(jax.random.PRNGKey(seed), (1, 4), dtype=jnp.float64)
+    res_loose = srds_sample(model, sched, cfg, x0, SRDSConfig(tol=1e-2))
+    res_tight = srds_sample(model, sched, cfg, x0, SRDSConfig(tol=tol))
+    assert int(res_tight.iterations) >= int(res_loose.iterations)
+    b, _ = resolve_blocks(36, None)
+    if int(res_tight.iterations) < b:
+        assert float(res_tight.final_delta) < tol
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       batch=st.integers(min_value=1, max_value=4))
+def test_batch_consistency(seed, batch):
+    """Sampling a batch == sampling each element independently (SRDS is
+    elementwise across the batch; convergence uses the joint norm, so force
+    exactness with tol=0)."""
+    model = _model(seed, 4)
+    sched = to_f64(make_schedule("ddpm_linear", 16))
+    cfg = SolverConfig("ddim")
+    x0 = jax.random.normal(jax.random.PRNGKey(seed), (batch, 4),
+                           dtype=jnp.float64)
+    joint = srds_sample(model, sched, cfg, x0, SRDSConfig(tol=0.0)).sample
+    for i in range(batch):
+        single = srds_sample(model, sched, cfg, x0[i:i + 1],
+                             SRDSConfig(tol=0.0)).sample
+        np.testing.assert_allclose(np.asarray(joint[i]), np.asarray(single[0]),
+                                   rtol=0, atol=1e-9)
