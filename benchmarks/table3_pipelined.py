@@ -17,7 +17,8 @@ from repro.core.pipelined import make_pipelined_sampler
 N = {n}; B = {b}
 w = jax.random.normal(jax.random.PRNGKey(0), (8, 8), dtype=jnp.float64) * 0.4
 model_fn = lambda x, t: jnp.tanh(x @ w) * (0.4 + 3e-4 * t)
-mesh = jax.make_mesh((B,), ("time",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((B,), ("time",))
 sched = make_schedule("ddpm_linear", N)
 sched = DiffusionSchedule(ab=sched.ab.astype(jnp.float64),
                           t_model=sched.t_model.astype(jnp.float64))

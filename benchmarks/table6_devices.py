@@ -12,7 +12,8 @@ from repro.core.pipelined import make_sharded_sampler
 D = {d}
 w = jax.random.normal(jax.random.PRNGKey(0), (16, 16)) * 0.4
 model_fn = lambda x, t: jnp.tanh(x @ w) * (0.4 + 3e-4 * t)
-mesh = jax.make_mesh((D,), ("time",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((D,), ("time",))
 sched = make_schedule("ddpm_linear", 100)
 x0 = jax.random.normal(jax.random.PRNGKey(1), (1, 16))
 samp = make_sharded_sampler(mesh, "time", model_fn, sched,

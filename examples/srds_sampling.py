@@ -26,7 +26,8 @@ sched = DiffusionSchedule(ab=sched.ab.astype(jnp.float64),
                           t_model=sched.t_model.astype(jnp.float64))
 solver = SolverConfig("ddim")
 x0 = jax.random.normal(jax.random.PRNGKey(1), (2, 24), dtype=jnp.float64)
-mesh = jax.make_mesh((8,), ("time",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("time",))
 
 ref = sample_sequential(model_fn, sched, solver, x0)
 print(f"sequential: {N} serial evals")

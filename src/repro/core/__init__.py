@@ -1,8 +1,14 @@
-"""SRDS core: schedules, solvers, sequential/parareal/pipelined samplers."""
+"""SRDS core: schedules, solvers, sequential/parareal/pipelined samplers.
+
+The Parareal math itself (coarse sweep, predictor-corrector, convergence
+gating, result assembly) lives in :mod:`repro.core.engine`; the samplers in
+``parareal`` / ``pipelined`` are thin drivers over it.
+"""
 from .schedules import DiffusionSchedule, make_schedule
 from .solvers import SolverConfig, solve, solver_step, solver_names
 from .sequential import SampleStats, sample_sequential, sequential_stats
-from .parareal import SRDSConfig, SRDSResult, resolve_blocks, srds_sample, srds_stats
+from .engine import SRDSConfig, SRDSResult, resolve_blocks
+from .parareal import srds_sample, srds_stats
 from .paradigms import ParaDiGMSConfig, ParaDiGMSResult, paradigms_sample, paradigms_stats
 
 __all__ = [

@@ -1,0 +1,231 @@
+"""Unified Parareal engine — the single home of SRDS's refinement math.
+
+Every SRDS sampler in this repo (sequential single-program
+:func:`repro.core.parareal.srds_sample`, block-sharded
+:func:`repro.core.pipelined.srds_sharded_local`, wavefront-pipelined
+:func:`repro.core.pipelined.srds_pipelined_local`) consumes this module for:
+
+  * the coarse initialization sweep (Alg 1, lines 1-4),
+  * the predictor-corrector update ``y + G_cur - G_prev`` (line 11),
+  * the sequential corrector sweep (lines 9-12),
+  * convergence gating on the final-sample residual,
+  * ``SRDSResult`` assembly.
+
+The three samplers differ only in *where the fine solves run* (vmapped in
+one program, locally per shard with an all_gather, or wavefront-staggered)
+— that part is injected into :func:`run_parareal` as ``fine_fn`` — so the
+algorithm itself can no longer drift between implementations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SRDSConfig:
+    """Knobs for the SRDS sampler.
+
+    num_blocks:   B — the coarse discretization (None -> ceil(sqrt(N)),
+                  Prop 4's optimum).
+    tol:          τ — convergence threshold on the mean-abs change of the
+                  *final* sample between consecutive refinements.
+    max_iters:    refinement-iteration cap (None -> B; Prop 1 guarantees
+                  exact convergence by then).
+    norm:         'l1_mean' (paper) or 'l2_mean' or 'linf'.
+    use_fused_update: route the predictor-corrector update + residual
+                  accumulation through the Pallas kernel.
+    """
+
+    num_blocks: Optional[int] = None
+    tol: float = 1e-3
+    max_iters: Optional[int] = None
+    norm: str = "l1_mean"
+    use_fused_update: bool = False
+    # Distribution hook: NamedSharding whose first axis is the parareal
+    # block dim — constrains the trajectory/fine-solve tensors so GSPMD
+    # maps blocks onto a mesh axis (time-parallelism on `data`).
+    block_sharding: Optional[object] = None
+    # Run exactly max_iters refinements under lax.scan instead of the
+    # early-exit while_loop (analysis mode: cost_analysis counts while-loop
+    # bodies once; also useful for fixed-budget sampling).
+    fixed_iters: bool = False
+    scan_unroll: bool = False
+
+
+class SRDSResult(NamedTuple):
+    sample: jnp.ndarray
+    iterations: jnp.ndarray        # scalar int32 — refinements actually run
+    final_delta: jnp.ndarray       # scalar f32 — last convergence residual
+    delta_history: jnp.ndarray     # (max_iters,) f32, +inf beyond `iterations`
+    trajectory: Optional[jnp.ndarray] = None  # (B+1, ...) final running traj
+
+
+def convergence_norm(diff: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """Residual norm used for the paper's convergence criterion."""
+    diff = diff.astype(jnp.float32)
+    if kind == "l1_mean":
+        return jnp.mean(jnp.abs(diff))
+    if kind == "l2_mean":
+        return jnp.sqrt(jnp.mean(diff * diff))
+    if kind == "linf":
+        return jnp.max(jnp.abs(diff))
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def still_refining(delta: jnp.ndarray, tol: float) -> jnp.ndarray:
+    """Convergence gate: keep iterating while the residual is >= τ."""
+    return delta >= tol
+
+
+def has_converged(delta: jnp.ndarray, tol: float) -> jnp.ndarray:
+    """The complementary gate (used by the wavefront's done-flag psum)."""
+    return delta < tol
+
+
+def resolve_blocks(n_steps: int, num_blocks: Optional[int]) -> Tuple[int, int]:
+    """Pick (B, S): B blocks of S fine steps, B*S == N.
+
+    Prefers B = ceil(sqrt(N)) rounded to a divisor of N (the paper handles
+    ragged last blocks; we keep blocks uniform — required for lockstep SPMD —
+    by snapping to the nearest divisor, which preserves Prop 4's optimum for
+    the perfect-square Ns used in all paper experiments).
+    """
+    if num_blocks is None:
+        num_blocks = max(1, int(round(math.sqrt(n_steps))))
+    # snap to nearest divisor of n_steps
+    divs = [d for d in range(1, n_steps + 1) if n_steps % d == 0]
+    num_blocks = min(divs, key=lambda d: abs(d - num_blocks))
+    return num_blocks, n_steps // num_blocks
+
+
+def parareal_update(y, g_cur, g_prev, use_fused: bool = False):
+    """Predictor-corrector update (Alg 1, line 11): ``y + G_cur - G_prev``."""
+    if use_fused:
+        from repro.kernels import ops as kops
+        out, _ = kops.parareal_update(y, g_cur, g_prev)
+        return out
+    return y + g_cur - g_prev
+
+
+def coarse_init_sweep(G, x_init: jnp.ndarray, starts: jnp.ndarray,
+                      unroll: bool = False) -> jnp.ndarray:
+    """Sequential coarse sweep producing the initial trajectory tail x^0.
+
+    Returns the (B, ...) stack ``[x_1^0, ..., x_B^0]`` where
+    ``x_{i+1}^0 = G(x_i^0)`` — which doubles as ``prev_coarse`` at init.
+    """
+    def body(x, i0):
+        g = G(x, i0)
+        return g, g
+
+    _, x_tail = jax.lax.scan(body, x_init, starts, unroll=unroll)
+    return x_tail
+
+
+def corrector_sweep(G, x_init: jnp.ndarray, y: jnp.ndarray,
+                    prev_coarse: jnp.ndarray, starts: jnp.ndarray, *,
+                    use_fused: bool = False, unroll: bool = False):
+    """Sequential coarse sweep + predictor-corrector (Alg 1, lines 9-12).
+
+    Returns ``(new_tail, cur_all)``: the refined trajectory tail and the
+    coarse results ``G(x_i^p)`` that become next iteration's prev_coarse.
+    """
+    def sweep(x_cur, inp):
+        y_i, prev_i, i0 = inp
+        cur = G(x_cur, i0)
+        x_next = parareal_update(y_i, cur, prev_i, use_fused)
+        return x_next, (x_next, cur)
+
+    _, (new_tail, cur_all) = jax.lax.scan(sweep, x_init,
+                                          (y, prev_coarse, starts),
+                                          unroll=unroll)
+    return new_tail, cur_all
+
+
+class RefineState(NamedTuple):
+    """Carry of the refinement loop (shared by all non-wavefront samplers)."""
+    p: jnp.ndarray             # refinement counter (scalar int32)
+    x_tail: jnp.ndarray        # (B, ...) running trajectory x_1..x_B
+    prev_coarse: jnp.ndarray   # (B, ...) G(x_i^{p-1}) for each block
+    y_prev: jnp.ndarray        # (B, ...) last fine results when
+                               # carry_fine_results (straggler reuse),
+                               # else a scalar placeholder
+    delta: jnp.ndarray         # last convergence residual (scalar f32)
+    history: jnp.ndarray       # (max_iters,) f32 residual history
+
+
+FineFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
+                 starts: jnp.ndarray, *, tol: float, max_iters: int,
+                 norm: str = "l1_mean", use_fused_update: bool = False,
+                 fixed_iters: bool = False, scan_unroll: bool = False,
+                 constrain=None, carry_fine_results: bool = False) -> RefineState:
+    """The complete Parareal refinement loop (Alg 1 minus the fine solves).
+
+    ``fine_fn(x_heads, p, y_prev) -> y`` computes the (B, ...) fine-solve
+    results for block heads ``x_heads = [x_0, ..., x_{B-1}]`` at refinement
+    ``p`` — this is the only sampler-specific part (vmap in one program;
+    local vmap + all_gather + straggler masking under shard_map).
+    ``constrain`` (optional) re-applies a block-dim sharding constraint to
+    the trajectory tensors each iteration (GSPMD time-parallel path).
+    ``carry_fine_results`` keeps the previous iteration's (B, ...) fine
+    results in the loop carry, handed to ``fine_fn`` as ``y_prev`` (needed
+    for straggler reuse); off by default so samplers that never read it
+    don't pay an extra trajectory-sized buffer of loop state.
+    """
+    cb = constrain if constrain is not None else (lambda t: t)
+
+    x_tail = coarse_init_sweep(G, x_init, starts, unroll=scan_unroll)
+    # prev_coarse_i == G(x_i^0) == x_{i+1}^0 at init; y_prev's init value is
+    # never read (straggler substitution is gated on p > 0).
+    y_prev0 = x_tail if carry_fine_results else jnp.zeros((), x_tail.dtype)
+    init = RefineState(jnp.int32(0), x_tail, x_tail, y_prev0,
+                       jnp.float32(jnp.inf),
+                       jnp.full((max_iters,), jnp.inf, jnp.float32))
+
+    def cond(c: RefineState):
+        return jnp.logical_and(c.p < max_iters, still_refining(c.delta, tol))
+
+    def body(c: RefineState) -> RefineState:
+        x_heads = jnp.concatenate([x_init[None], c.x_tail[:-1]], axis=0)
+        # ---- fine solves (Alg 1, lines 7-8) — sampler-specific ----
+        y = fine_fn(x_heads, c.p, c.y_prev)
+        # ---- sequential coarse sweep + predictor-corrector (lines 9-12) --
+        new_tail, cur_all = corrector_sweep(G, x_init, y, c.prev_coarse,
+                                            starts, use_fused=use_fused_update,
+                                            unroll=scan_unroll)
+        new_tail = cb(new_tail)
+        cur_all = cb(cur_all)
+
+        delta = convergence_norm(new_tail[-1] - c.x_tail[-1], norm)
+        history = c.history.at[c.p].set(delta)
+        y_keep = y if carry_fine_results else c.y_prev
+        return RefineState(c.p + 1, new_tail, cur_all, y_keep, delta, history)
+
+    if fixed_iters:
+        out, _ = jax.lax.scan(lambda c, _: (body(c), None), init, None,
+                              length=max_iters, unroll=scan_unroll)
+        return out
+    return jax.lax.while_loop(cond, body, init)
+
+
+def assemble_result(sample: jnp.ndarray, iterations: jnp.ndarray,
+                    final_delta: jnp.ndarray, delta_history: jnp.ndarray,
+                    trajectory: Optional[jnp.ndarray] = None) -> SRDSResult:
+    """The one place an ``SRDSResult`` is put together from loop outputs."""
+    return SRDSResult(sample=sample, iterations=iterations,
+                      final_delta=final_delta, delta_history=delta_history,
+                      trajectory=trajectory)
+
+
+def result_from_state(state: RefineState,
+                      trajectory: Optional[jnp.ndarray] = None) -> SRDSResult:
+    return assemble_result(state.x_tail[-1], state.p, state.delta,
+                           state.history, trajectory)

@@ -2,99 +2,24 @@
 
 Single-program version: fine solves across blocks are batched with ``vmap``
 (the paper's §3.4 "batched inference" benefit — on TPU the vmapped block dim
-fuses into the model's batch and feeds the MXU); the coarse predictor-
-corrector sweep is a ``lax.scan``; refinement iterations run under
-``lax.while_loop`` with the paper's final-sample ℓ1 convergence criterion.
-
-The distributed (shard_map / wavefront-pipelined) version lives in
-:mod:`repro.core.pipelined` and is algorithmically identical.
+fuses into the model's batch and feeds the MXU); all Parareal math — the
+coarse sweep, predictor-corrector update, convergence gating, and result
+assembly — lives in :mod:`repro.core.engine`, shared verbatim with the
+distributed samplers in :mod:`repro.core.pipelined`.
 """
 from __future__ import annotations
-
-import dataclasses
-import math
-from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from .engine import (SRDSConfig, SRDSResult, resolve_blocks,
+                     result_from_state, run_parareal)
 from .schedules import DiffusionSchedule
 from .sequential import SampleStats
 from .solvers import ModelFn, SolverConfig, solve
 
-
-@dataclasses.dataclass(frozen=True)
-class SRDSConfig:
-    """Knobs for the SRDS sampler.
-
-    num_blocks:   B — the coarse discretization (None -> ceil(sqrt(N)),
-                  Prop 4's optimum).
-    tol:          τ — convergence threshold on the mean-abs change of the
-                  *final* sample between consecutive refinements.
-    max_iters:    refinement-iteration cap (None -> B; Prop 1 guarantees
-                  exact convergence by then).
-    norm:         'l1_mean' (paper) or 'l2_mean' or 'linf'.
-    use_fused_update: route the predictor-corrector update + residual
-                  accumulation through the Pallas kernel.
-    """
-
-    num_blocks: Optional[int] = None
-    tol: float = 1e-3
-    max_iters: Optional[int] = None
-    norm: str = "l1_mean"
-    use_fused_update: bool = False
-    # Distribution hook: NamedSharding whose first axis is the parareal
-    # block dim — constrains the trajectory/fine-solve tensors so GSPMD
-    # maps blocks onto a mesh axis (time-parallelism on `data`).
-    block_sharding: Optional[object] = None
-    # Run exactly max_iters refinements under lax.scan instead of the
-    # early-exit while_loop (analysis mode: cost_analysis counts while-loop
-    # bodies once; also useful for fixed-budget sampling).
-    fixed_iters: bool = False
-    scan_unroll: bool = False
-
-
-class SRDSResult(NamedTuple):
-    sample: jnp.ndarray
-    iterations: jnp.ndarray        # scalar int32 — refinements actually run
-    final_delta: jnp.ndarray       # scalar f32 — last convergence residual
-    delta_history: jnp.ndarray     # (max_iters,) f32, +inf beyond `iterations`
-    trajectory: Optional[jnp.ndarray] = None  # (B+1, ...) final running traj
-
-
-def _norm(diff: jnp.ndarray, kind: str) -> jnp.ndarray:
-    diff = diff.astype(jnp.float32)
-    if kind == "l1_mean":
-        return jnp.mean(jnp.abs(diff))
-    if kind == "l2_mean":
-        return jnp.sqrt(jnp.mean(diff * diff))
-    if kind == "linf":
-        return jnp.max(jnp.abs(diff))
-    raise ValueError(f"unknown norm {kind!r}")
-
-
-def resolve_blocks(n_steps: int, num_blocks: Optional[int]) -> Tuple[int, int]:
-    """Pick (B, S): B blocks of S fine steps, B*S == N.
-
-    Prefers B = ceil(sqrt(N)) rounded to a divisor of N (the paper handles
-    ragged last blocks; we keep blocks uniform — required for lockstep SPMD —
-    by snapping to the nearest divisor, which preserves Prop 4's optimum for
-    the perfect-square Ns used in all paper experiments).
-    """
-    if num_blocks is None:
-        num_blocks = max(1, int(round(math.sqrt(n_steps))))
-    # snap to nearest divisor of n_steps
-    divs = [d for d in range(1, n_steps + 1) if n_steps % d == 0]
-    num_blocks = min(divs, key=lambda d: abs(d - num_blocks))
-    return num_blocks, n_steps // num_blocks
-
-
-def _parareal_update(y, cur, prev, use_fused):
-    if use_fused:
-        from repro.kernels import ops as kops
-        out, _ = kops.parareal_update(y, cur, prev)
-        return out
-    return y + cur - prev
+__all__ = ["SRDSConfig", "SRDSResult", "resolve_blocks", "srds_sample",
+           "srds_stats"]
 
 
 def srds_sample(model_fn: ModelFn, sched: DiffusionSchedule, solver: SolverConfig,
@@ -112,67 +37,25 @@ def srds_sample(model_fn: ModelFn, sched: DiffusionSchedule, solver: SolverConfi
     def F(x, i0):  # fine: S solver steps of stride 1
         return solve(model_fn, sched, solver, x, i0, S, 1)
 
-    # ---- coarse init (Alg 1, lines 1-4): x^0 via sequential G sweep -------
-    def init_body(x, i0):
-        g = G(x, i0)
-        return g, g
-
-    _, x_tail = jax.lax.scan(init_body, x_init, starts,
-                             unroll=cfg.scan_unroll)           # (B, ...)
-    # prev_coarse_i == G(x_i^0) == x_{i+1}^0 at init.
-    prev_coarse = x_tail
-
-    class Carry(NamedTuple):
-        p: jnp.ndarray
-        x_tail: jnp.ndarray        # (B, ...) running trajectory x_1..x_B
-        prev_coarse: jnp.ndarray   # (B, ...) G(x_i^{p-1}) for each block
-        delta: jnp.ndarray
-        history: jnp.ndarray
-
-    def cond(c: Carry):
-        return jnp.logical_and(c.p < max_iters, c.delta >= cfg.tol)
-
     def _cb(t):
         if cfg.block_sharding is not None:
             return jax.lax.with_sharding_constraint(t, cfg.block_sharding)
         return t
 
-    def body(c: Carry) -> Carry:
-        x_heads = jnp.concatenate([x_init[None], c.x_tail[:-1]], axis=0)  # x_0..x_{B-1}
-        # ---- parallel fine solves (Alg 1, lines 7-8) ----
-        y = _cb(jax.vmap(lambda xi, i0: F(xi, i0))(_cb(x_heads), starts))  # (B, ...)
+    def fine_fn(x_heads, p, y_prev):
+        # parallel fine solves, batched over the block dim
+        return _cb(jax.vmap(lambda xi, i0: F(xi, i0))(_cb(x_heads), starts))
 
-        # ---- sequential coarse sweep + predictor-corrector (lines 9-12) --
-        def sweep(x_cur, inp):
-            y_i, prev_i, i0 = inp
-            cur = G(x_cur, i0)
-            x_next = _parareal_update(y_i, cur, prev_i, cfg.use_fused_update)
-            return x_next, (x_next, cur)
-
-        _, (new_tail, cur_all) = jax.lax.scan(sweep, x_init,
-                                              (y, c.prev_coarse, starts),
-                                              unroll=cfg.scan_unroll)
-        new_tail = _cb(new_tail)
-        cur_all = _cb(cur_all)
-
-        delta = _norm(new_tail[-1] - c.x_tail[-1], cfg.norm)
-        history = c.history.at[c.p].set(delta)
-        return Carry(c.p + 1, new_tail, cur_all, delta, history)
-
-    init = Carry(jnp.int32(0), x_tail, prev_coarse,
-                 jnp.float32(jnp.inf), jnp.full((max_iters,), jnp.inf, jnp.float32))
-    if cfg.fixed_iters:
-        out, _ = jax.lax.scan(lambda c, _: (body(c), None), init, None,
-                              length=max_iters, unroll=cfg.scan_unroll)
-    else:
-        out = jax.lax.while_loop(cond, body, init)
+    out = run_parareal(G, fine_fn, x_init, starts, tol=cfg.tol,
+                       max_iters=max_iters, norm=cfg.norm,
+                       use_fused_update=cfg.use_fused_update,
+                       fixed_iters=cfg.fixed_iters,
+                       scan_unroll=cfg.scan_unroll, constrain=_cb)
 
     traj = None
     if return_trajectory:
         traj = jnp.concatenate([x_init[None], out.x_tail], axis=0)
-    return SRDSResult(sample=out.x_tail[-1], iterations=out.p,
-                      final_delta=out.delta, delta_history=out.history,
-                      trajectory=traj)
+    return result_from_state(out, trajectory=traj)
 
 
 def srds_stats(sched: DiffusionSchedule, solver: SolverConfig, cfg: SRDSConfig,

@@ -3,7 +3,8 @@
 Two TPU-native implementations of the paper's parallelism:
 
 ``srds_sharded_local``
-    Algorithmically identical to :func:`repro.core.parareal.srds_sample`, but
+    Algorithmically identical to :func:`repro.core.parareal.srds_sample` —
+    both drive the *same* refinement loop in :mod:`repro.core.engine` — but
     the parareal blocks live on a mesh axis: each device(-group) runs the
     fine solves for its own blocks; boundary values are exchanged with one
     ``all_gather`` per refinement and the (cheap) coarse sweep is computed
@@ -27,19 +28,23 @@ Two TPU-native implementations of the paper's parallelism:
 
 Both functions are written against a *local* (per-shard) view and must be
 called inside ``shard_map``; ``make_*_sampler`` wrappers build the jitted
-SPMD program for a given mesh.
+SPMD program for a given mesh via :func:`repro.compat.shard_map` (the
+version-adaptive surface — JAX moved ``shard_map`` between 0.4.x and 0.5,
+so no call site here names a ``jax.*`` spelling directly).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .parareal import SRDSConfig, SRDSResult, _norm, resolve_blocks
+from repro import compat
+
+from .engine import (SRDSConfig, assemble_result, convergence_norm,
+                     has_converged, parareal_update, resolve_blocks,
+                     run_parareal)
 from .schedules import DiffusionSchedule
 from .solvers import ModelFn, SolverConfig, solve, solver_step
 
@@ -58,7 +63,7 @@ def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
     as dropped at refinement ``p`` (stale result substituted).
     """
     n = sched.num_steps
-    d = jax.lax.axis_size(axis)
+    d = compat.axis_size(axis)
     me = jax.lax.axis_index(axis)
     b_total, s_steps = resolve_blocks(n, cfg.num_blocks)
     if b_total % d != 0:
@@ -75,49 +80,25 @@ def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
     def F(x, i0):
         return solve(model_fn, sched, solver, x, i0, s_steps, 1)
 
-    # coarse init: sequential sweep, computed redundantly on every device
-    def init_body(x, i0):
-        g = G(x, i0)
-        return g, g
-
-    _, x_tail = jax.lax.scan(init_body, x_init, all_starts)       # (B, ...)
-    prev_coarse = x_tail
-
-    class Carry(NamedTuple):
-        p: jnp.ndarray
-        x_tail: jnp.ndarray       # (B, ...) replicated running trajectory
-        prev_coarse: jnp.ndarray  # (B, ...)
-        y_prev: jnp.ndarray       # (B, ...) last fine results (straggler reuse)
-        delta: jnp.ndarray
-        history: jnp.ndarray
-
-    def cond(c: Carry):
-        return jnp.logical_and(c.p < max_iters, c.delta >= cfg.tol)
-
-    def body(c: Carry) -> Carry:
-        heads = jnp.concatenate([x_init[None], c.x_tail[:-1]], axis=0)
-        my_heads = jax.lax.dynamic_slice_in_dim(heads, me * b_local, b_local)
+    def fine_fn(x_heads, p, y_prev):
         # ---- local fine solves (the parallel part) ----
+        my_heads = jax.lax.dynamic_slice_in_dim(x_heads, me * b_local, b_local)
         y_local = jax.vmap(F)(my_heads, my_starts)                 # (B_local, ...)
         y = jax.lax.all_gather(y_local, axis, tiled=True)          # (B, ...)
         if straggler_fn is not None:
-            mask = straggler_fn(c.p).reshape((-1,) + (1,) * (y.ndim - 1))
-            y = jnp.where(jnp.logical_and(mask, c.p > 0), c.y_prev, y)
-        # ---- redundant coarse sweep (cheap: B coarse evals) ----
-        def sweep(x_cur, inp):
-            y_i, prev_i, i0 = inp
-            cur = G(x_cur, i0)
-            x_next = y_i + cur - prev_i
-            return x_next, (x_next, cur)
+            mask = straggler_fn(p).reshape((-1,) + (1,) * (y.ndim - 1))
+            y = jnp.where(jnp.logical_and(mask, p > 0), y_prev, y)
+        return y
 
-        _, (new_tail, cur_all) = jax.lax.scan(sweep, x_init, (y, c.prev_coarse, all_starts))
-        delta = _norm(new_tail[-1] - c.x_tail[-1], cfg.norm)
-        history = c.history.at[c.p].set(delta)
-        return Carry(c.p + 1, new_tail, cur_all, y, delta, history)
-
-    init = Carry(jnp.int32(0), x_tail, prev_coarse, x_tail,
-                 jnp.float32(jnp.inf), jnp.full((max_iters,), jnp.inf, jnp.float32))
-    out = jax.lax.while_loop(cond, body, init)
+    # The coarse sweep / predictor-corrector / convergence gating all come
+    # from the shared engine; the coarse sweep is computed redundantly on
+    # every device (cheap: B coarse evals).
+    out = run_parareal(G, fine_fn, x_init, all_starts, tol=cfg.tol,
+                       max_iters=max_iters, norm=cfg.norm,
+                       use_fused_update=cfg.use_fused_update,
+                       fixed_iters=cfg.fixed_iters,
+                       scan_unroll=cfg.scan_unroll,
+                       carry_fine_results=straggler_fn is not None)
     return out.x_tail[-1], out.p, out.delta, out.history
 
 
@@ -130,15 +111,14 @@ def make_sharded_sampler(mesh, axis: str, model_fn: ModelFn,
                                         cfg, straggler_fn)
         return s, p, d, h
 
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=P(), out_specs=(P(), P(), P(), P()),
-                       check_vma=False)
+    fn = compat.shard_map(local, mesh=mesh,
+                          in_specs=P(), out_specs=(P(), P(), P(), P()),
+                          check_vma=False)
 
     @jax.jit
     def sample(x_init):
         s, p, d, h = fn(x_init)
-        return SRDSResult(sample=s, iterations=p, final_delta=d,
-                          delta_history=h, trajectory=None)
+        return assemble_result(s, p, d, h)
 
     return sample
 
@@ -168,9 +148,14 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
     serial evals".  The coarse slot is live only on block-boundary and init
     supersteps; it is evaluated unconditionally to keep SPMD lockstep (cost:
     a 2x smaller micro-batch would not be faster on the MXU anyway).
+
+    The wavefront restructures *scheduling*, not math: the corrector update
+    and convergence gate below are :func:`repro.core.engine.parareal_update`
+    and :func:`repro.core.engine.convergence_norm` — the same code the
+    sequential and block-sharded samplers run.
     """
     n = sched.num_steps
-    d = jax.lax.axis_size(axis)
+    d = compat.axis_size(axis)
     me = jax.lax.axis_index(axis)
     if n % d != 0:
         raise ValueError(f"N={n} must be divisible by device count {d}")
@@ -212,7 +197,8 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
         # --- init superstep: coarse_out = G(x_i^0): seed prev_coarse, send
         # --- last superstep:  coarse_out = G(x_i^p): predictor-corrector
         prev_eff = jnp.where(is_init, coarse_out, c.prev_coarse)
-        out_block = z_out + coarse_out - prev_eff
+        out_block = parareal_update(z_out, coarse_out, prev_eff,
+                                    cfg.use_fused_update)
         send_val = jnp.where(is_last, out_block,
                              jnp.where(is_init, coarse_out, c.out_last))
         send_flag = jnp.logical_or(is_init, is_last)
@@ -227,11 +213,11 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
 
         # convergence residual on the final block
         is_tail = me == d - 1
-        resid = _norm(out_block - c.out_last, cfg.norm)
+        resid = convergence_norm(out_block - c.out_last, cfg.norm)
         delta = jnp.where(jnp.logical_and(is_tail, is_last), resid, c.delta)
         local_conv = jnp.where(
             jnp.logical_and(is_tail, is_last),
-            (delta < cfg.tol).astype(jnp.float32), 0.0)
+            has_converged(delta, cfg.tol).astype(jnp.float32), 0.0)
         done = jax.lax.psum(local_conv, axis) > 0.0
 
         # ring exchange of boundary values (one sample per neighbor pair)
@@ -270,14 +256,13 @@ def make_pipelined_sampler(mesh, axis: str, model_fn: ModelFn,
     def local(x_init):
         return srds_pipelined_local(model_fn, sched, solver, x_init, axis, cfg)
 
-    fn = jax.shard_map(local, mesh=mesh, in_specs=P(),
-                       out_specs=(P(), P(), P(), P()), check_vma=False)
+    fn = compat.shard_map(local, mesh=mesh, in_specs=P(),
+                          out_specs=(P(), P(), P(), P()), check_vma=False)
 
     @jax.jit
     def sample(x_init):
         s, p, dlt, steps = fn(x_init)
-        return SRDSResult(sample=s, iterations=p, final_delta=dlt,
-                          delta_history=jnp.full((1,), jnp.inf, jnp.float32),
-                          trajectory=None), steps
+        return assemble_result(
+            s, p, dlt, jnp.full((1,), jnp.inf, jnp.float32)), steps
 
     return sample

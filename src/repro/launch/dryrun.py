@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import SHAPES, get_arch, shape_cells
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.launch import specs as sp
@@ -200,7 +201,7 @@ def _lower_srds_sample(cfg, mesh, par, p_specs, p_sh, num_blocks,
 def analyze(cfg: ArchConfig, shape_name: str, mesh, lowered, compiled,
             meta) -> dict:
     n_dev = mesh.devices.size
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     flops = float(cost.get("flops", 0.0))
     bytes_acc = float(cost.get("bytes accessed", 0.0))
     try:

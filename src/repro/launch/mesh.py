@@ -4,10 +4,15 @@
 importing this module never touches jax device state — required because the
 dry-run forces 512 placeholder devices via XLA_FLAGS before first init,
 while tests and benches must keep seeing the single real device.
+
+Meshes are built through :func:`repro.compat.make_mesh` (never
+``jax.make_mesh`` directly): the ``axis_types=AxisType.Auto`` kwarg only
+exists on newer JAX, and the compat layer requests it when available while
+degrading cleanly on 0.4.x, where every mesh axis is implicitly auto.
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,14 +20,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI subprocess tests (8 fake devices)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 # TPU v5e hardware constants for the roofline analysis (per chip)

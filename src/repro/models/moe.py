@@ -31,6 +31,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def init_moe(key, d_model, num_experts, d_ff, top_k, act="swiglu",
              dtype=jnp.bfloat16):
@@ -114,7 +116,7 @@ def moe_ep_local(p_local, x_local, top_k, *, num_experts, data_axis,
     x_local: (T_local, d) this shard's tokens.
     Returns (out (T_local, d), aux_loss_local).
     """
-    d_sz = jax.lax.axis_size(data_axis)
+    d_sz = compat.axis_size(data_axis)
     e_local = num_experts // d_sz
     t_local, d_model = x_local.shape
     chunk = min(chunk_tokens, t_local)

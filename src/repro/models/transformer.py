@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from . import hymba as hym
 from . import rwkv6 as rwk
@@ -151,7 +152,7 @@ def _apply_moe(cfg: ArchConfig, p_moe, h, parallel: ParallelCtx):
         aux = jax.lax.pmean(aux, parallel.batch_axes)
         return out.reshape(h_loc.shape), aux
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+    fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=(P(parallel.batch_axes, None, None), P()),
                        check_vma=False)
     return fn(h, p_moe)

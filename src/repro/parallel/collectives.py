@@ -10,11 +10,16 @@ wire format is 4x smaller than fp32 / 2x smaller than bf16.
 ``lse_combine``: flash-decoding reduction — combine per-shard partial
 attention outputs computed over disjoint KV-sequence slices using their
 logsumexps (used by the model-axis-sharded decode path in repro.serve).
+
+Pytree plumbing goes through :data:`repro.compat.tree` (the ``jax.tree``
+alias only exists on newer JAX; ``jax.tree_util`` is the 0.4.x spelling).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 
 
 def _quantize(x: jnp.ndarray):
@@ -48,11 +53,11 @@ def compressed_psum_mean(grads, axis: str, ef_carry):
         mean = total.astype(jnp.float32) * scale_max / n.astype(jnp.float32)
         return mean, resid
 
-    flat_g, tdef = jax.tree.flatten(grads)
-    flat_e = jax.tree.leaves(ef_carry)
+    flat_g, tdef = compat.tree.flatten(grads)
+    flat_e = compat.tree.leaves(ef_carry)
     out = [one(g, e) for g, e in zip(flat_g, flat_e)]
-    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
-            jax.tree.unflatten(tdef, [o[1] for o in out]))
+    return (compat.tree.unflatten(tdef, [o[0] for o in out]),
+            compat.tree.unflatten(tdef, [o[1] for o in out]))
 
 
 def lse_combine(o_parts, lse_parts, axis: str):

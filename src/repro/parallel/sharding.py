@@ -13,6 +13,10 @@ One rule table maps parameter paths to PartitionSpecs:
 Cache rules implement the flash-decoding layout: KV sequence sharded over
 ``model`` (batch over data/pod), combined at attention time with an LSE
 merge (repro/serve).
+
+Rules work on any mesh built by :func:`repro.compat.make_mesh` — the only
+mesh attributes consumed here (``axis_names``, ``devices.shape``) are stable
+across JAX versions; pytree traversal rides :data:`repro.compat.tree`.
 """
 from __future__ import annotations
 
@@ -21,6 +25,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
 
 from repro.configs.base import ArchConfig
 from repro.models.transformer import ParallelCtx
@@ -165,7 +171,7 @@ def batch_shardings(mesh, batch, batch_axes):
         spec = P(ba, *([None] * (leaf.ndim - 1)))
         return _ns(mesh, spec)
 
-    return jax.tree.map(rule, batch)
+    return compat.tree.map(rule, batch)
 
 
 def cache_shardings(cfg: ArchConfig, mesh, cache, parallel: ParallelCtx, *,

@@ -72,7 +72,10 @@ class ServingEngine:
         max_new = max(r.max_new_tokens for r in requests)
         toks = jnp.zeros((bsz, plen), jnp.int32)
         for i, r in enumerate(requests):
-            toks = toks.at[i, plen - r.prompt.shape[0]:].set(r.prompt)
+            # token buffers are int32 end-to-end; prompts arriving as int64
+            # (x64 mode) would otherwise trip the scatter dtype FutureWarning
+            toks = toks.at[i, plen - r.prompt.shape[0]:].set(
+                jnp.asarray(r.prompt, jnp.int32))
         # cache sized for prompt + generation budget
         total = plen + max_new
         batch = {"tokens": toks}
@@ -84,14 +87,16 @@ class ServingEngine:
             v_c = jnp.pad(v_c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
             cache = (k_c, v_c)
         outs = [[] for _ in requests]
-        tok = jnp.argmax(last_logits[:, :self.cfg.vocab_size], axis=-1)
+        tok = jnp.argmax(last_logits[:, :self.cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)
         for i in range(len(requests)):
             outs[i].append(int(tok[i]))
         for step in range(1, max_new):
             logits, cache = self._decode(self.params,
                                          {"tokens": tok[:, None]}, cache,
                                          jnp.int32(plen + step - 1))
-            tok = jnp.argmax(logits[:, :self.cfg.vocab_size], axis=-1)
+            tok = jnp.argmax(logits[:, :self.cfg.vocab_size],
+                             axis=-1).astype(jnp.int32)
             for i in range(len(requests)):
                 if len(outs[i]) < requests[i].max_new_tokens:
                     outs[i].append(int(tok[i]))

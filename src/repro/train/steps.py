@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.models.transformer import LOCAL, ParallelCtx
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
@@ -83,7 +84,7 @@ def make_dp_train_step_compressed(cfg: ArchConfig, opt_cfg: AdamWConfig, mesh,
         metrics = {k: jax.lax.pmean(v, axis) for k, v in metrics.items()}
         return params, opt_state, ef, dict(metrics, loss=loss, **opt_metrics)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_step, mesh=mesh,
         in_specs=(P(), P(), P(), P(axis), P()),   # batch leaves shard dim 0
         out_specs=(P(), P(), P(), P()),

@@ -15,8 +15,8 @@ assert len(jax.devices()) == 8
 w = jax.random.normal(jax.random.PRNGKey(0), (6, 6), dtype=jnp.float64) * 0.3
 def model_fn(x, t):
     return jnp.tanh(x @ w) * (0.5 + 0.001 * t)
-mesh = jax.make_mesh((8,), ("time",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("time",))
 N = 64
 sched = make_schedule("ddpm_linear", N)
 sched = DiffusionSchedule(ab=sched.ab.astype(jnp.float64),

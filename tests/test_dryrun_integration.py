@@ -7,11 +7,11 @@ from conftest import run_subprocess
 
 CODE_TEMPLATE = r"""
 import jax, dataclasses as dc
+from repro.compat import make_mesh
 from repro.configs import get_arch, SHAPES
 from repro.launch.dryrun import lower_cell, analyze
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_arch("{arch}").reduced()
 if cfg.frontend == "vision":
     cfg = dc.replace(cfg, num_prefix_embeds=4)
@@ -50,10 +50,10 @@ def test_dryrun_cell(arch, shape):
 def test_dryrun_srds_sample_cell():
     code = r"""
 import jax, dataclasses as dc
+from repro.compat import make_mesh
 from repro.configs import get_arch
 from repro.launch.dryrun import lower_cell, analyze
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = dc.replace(get_arch("srds-dit-cifar").reduced(), patch_size=4,
                  in_channels=3)
 lowered, compiled, meta = lower_cell(cfg, None, mesh, sample_blocks=4)

@@ -58,13 +58,13 @@ def test_param_sharding_rules_subprocess():
     code = r"""
 import jax
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh
 from repro.configs import get_arch
 from repro.launch.specs import param_specs
 from repro.models.transformer import ParallelCtx
 from repro.parallel.sharding import param_shardings
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 par = ParallelCtx(mesh=mesh, model_parallel=4)
 
 # dense arch: TP rules
@@ -89,8 +89,7 @@ assert sh["blocks"]["moe"]["w_up"].spec == P(None, "data", None, "model")
 assert sh["blocks"]["moe"]["w_down"].spec == P(None, "data", "model", None)
 assert sh["blocks"]["moe"]["router"].spec == P(None, None, None)
 # kv heads (8) not divisible by wider TP stay replicated
-mesh16 = jax.make_mesh((2, 16), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh16 = make_mesh((2, 16), ("data", "model"))
 par16 = ParallelCtx(mesh=mesh16, model_parallel=16)
 cfgq = get_arch("qwen3-8b")
 sh = param_shardings(cfgq, mesh16, param_specs(cfgq, par16), par16)
@@ -108,14 +107,14 @@ def test_cache_sharding_rules_subprocess():
     code = r"""
 import jax
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh
 from repro.configs import get_arch, SHAPES
 import dataclasses as dc
 from repro.launch.specs import cache_specs
 from repro.models.transformer import ParallelCtx
 from repro.parallel.sharding import cache_shardings
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 par = ParallelCtx(mesh=mesh, model_parallel=4)
 cfg = get_arch("qwen3-8b")
 shape = dc.replace(SHAPES["decode_32k"], seq_len=128, global_batch=8)

@@ -143,17 +143,16 @@ def test_checkpoint_elastic_reshard_subprocess():
     code = r"""
 import jax, jax.numpy as jnp, numpy as np, tempfile
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
 from repro.checkpoint import Checkpointer
 
 d = tempfile.mkdtemp()
-mesh4 = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh4 = make_mesh((4,), ("data",))
 x = jax.device_put(jnp.arange(32.0).reshape(8, 4),
                    NamedSharding(mesh4, P("data", None)))
 ck = Checkpointer(d)
 ck.save(1, {"x": x})
-mesh2 = jax.make_mesh((2,), ("data",),
-                      axis_types=(jax.sharding.AxisType.Auto,),
-                      devices=jax.devices()[:2])
+mesh2 = make_mesh((2,), ("data",), devices=jax.devices()[:2])
 sh2 = {"x": NamedSharding(mesh2, P("data", None))}
 restored, step, _ = ck.restore({"x": jax.eval_shape(lambda: x)}, shardings=sh2)
 np.testing.assert_array_equal(np.asarray(restored["x"]), np.asarray(x))
@@ -263,7 +262,8 @@ key = jax.random.PRNGKey(0)
 params = init_params(cfg, key)
 opt = init_opt_state(params)
 stream = make_stream(cfg, DataConfig(global_batch=4, seq_len=16))
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((4,), ("data",))
 
 step_c = make_dp_train_step_compressed(cfg, AdamWConfig(lr=1e-3), mesh,
                                        use_kernel=False)
@@ -273,15 +273,18 @@ copy = lambda t: jax.tree.map(jnp.copy, t)
 pc, oc = copy(params), copy(opt)   # step_c donates its inputs
 pu, ou = params, opt
 losses_c, losses_u = [], []
-for s in range(8):
+for s in range(24):
     batch = stream.batch(s)
     k = jax.random.fold_in(key, s)
     pc, oc, ef, mc = step_c(pc, oc, ef, batch, k)
     pu, ou, mu = step_u(pu, ou, batch, k)
     losses_c.append(float(mc["loss"])); losses_u.append(float(mu["loss"]))
-# same trend, small deviation from quantization
-assert losses_c[-1] < losses_c[0]
-assert abs(losses_c[-1] - losses_u[-1]) < 0.15 * abs(losses_u[0]), (losses_c, losses_u)
+# training progresses: compare batch-averaged endpoints (each step sees a
+# fresh batch, so single-batch endpoints are noise-dominated)
+assert np.mean(losses_c[-4:]) < np.mean(losses_c[:4]), losses_c
+# compressed tracks uncompressed step-for-step, small quantization deviation
+assert max(abs(a - b) for a, b in zip(losses_c, losses_u)) \
+    < 0.15 * abs(losses_u[0]), (losses_c, losses_u)
 print("COMPRESS OK", losses_c[-1], losses_u[-1])
 """
     r = run_subprocess(code, devices=4, timeout=1200)
