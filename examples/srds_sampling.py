@@ -59,6 +59,36 @@ res = samp(x0)
 print(f"with stragglers:  iters={int(res.iterations)} "
       f"err={float(jnp.mean(jnp.abs(res.sample-ref))):.2e}  "
       f"(block 3 stale every other refinement — still exact)")
+
+# --- batched: per-sample convergence gating (mixed-tolerance batch) ---
+xb = jax.random.normal(jax.random.PRNGKey(2), (4, 24), dtype=jnp.float64)
+tols = jnp.array([1e-2, 1e-3, 1e-4, 1e-5], jnp.float32)
+res = srds_sample(model_fn, sched, solver, xb, SRDSConfig(per_sample=True),
+                  tol=tols)
+print(f"per-sample SRDS:  iters={res.iterations.tolist()} "
+      f"for tol={tols.tolist()} (each sample stops at its own tolerance)")
+samp = make_sharded_sampler(mesh, "time", model_fn, sched, solver,
+                            SRDSConfig(per_sample=True, num_blocks=8))
+res_d = samp(xb, tols)
+print(f"sharded batched:  iters={res_d.iterations.tolist()} "
+      f"(bit-identical to the single-program batched run: "
+      f"{bool(jnp.all(res_d.sample == res.sample))})")
+
+# --- the serving layer: micro-batching + slot recycling over a queue ---
+from repro.serve.diffusion import DiffusionSamplingEngine, SampleRequest
+eng = DiffusionSamplingEngine(model_fn, (24,), solver, num_steps=N,
+                              batch_size=4, dtype=jnp.float64)
+reqs = [SampleRequest(seed=i, tol=[1e-2, 1e-3, 1e-4, 1e-5][i % 4])
+        for i in range(12)]
+rids = [eng.submit(r) for r in reqs]
+out = eng.drain()
+st = eng.stats()
+iters = [out[r].iterations for r in rids]
+lock = sum(len(g) * (8 + max(g) * 72) for g in
+           (iters[i:i+4] for i in range(0, len(iters), 4)))
+print(f"serving engine:   {len(reqs)} mixed-tol requests, batch 4 -> "
+      f"{st['effective_evals_per_sample']:.0f} evals/sample "
+      f"(lockstep gating would pay {lock / len(reqs):.0f})")
 """
 
 

@@ -3,4 +3,17 @@
 # Usage: scripts/check.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# Compat-policy lint (ROADMAP "Runtime-compat policy"): APIs that drifted
+# across the JAX 0.4 -> 0.5 boundary may only be touched through
+# repro.compat — direct call sites anywhere else fail the build.
+if violations=$(grep -rnE 'jax\.shard_map\(|jax\.experimental\.shard_map|jax\.make_mesh\(' \
+      --include='*.py' src tests benchmarks examples \
+      | grep -v '^src/repro/compat\.py:'); then
+  echo "compat-policy lint FAILED: drifted JAX APIs called outside repro.compat" >&2
+  echo "${violations}" >&2
+  echo "Use repro.compat.shard_map / repro.compat.make_mesh instead (ROADMAP.md)." >&2
+  exit 1
+fi
+
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

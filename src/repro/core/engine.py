@@ -39,6 +39,13 @@ class SRDSConfig:
     norm:         'l1_mean' (paper) or 'l2_mean' or 'linf'.
     use_fused_update: route the predictor-corrector update + residual
                   accumulation through the Pallas kernel.
+    per_sample:   gate convergence independently per sample over the leading
+                  batch axis of ``x_init`` (shape ``(K, ...)``): the residual,
+                  iteration counter and delta history become per-sample
+                  ``(K,)``-shaped, converged samples freeze (their updates
+                  are masked to no-ops) and the loop exits only when every
+                  sample converged or ``max_iters`` hits.  Off (the default):
+                  a single joint-norm residual gates the whole batch.
     """
 
     num_blocks: Optional[int] = None
@@ -46,6 +53,7 @@ class SRDSConfig:
     max_iters: Optional[int] = None
     norm: str = "l1_mean"
     use_fused_update: bool = False
+    per_sample: bool = False
     # Distribution hook: NamedSharding whose first axis is the parareal
     # block dim — constrains the trajectory/fine-solve tensors so GSPMD
     # maps blocks onto a mesh axis (time-parallelism on `data`).
@@ -58,31 +66,44 @@ class SRDSConfig:
 
 
 class SRDSResult(NamedTuple):
+    """Per-sample fields are scalar/(max_iters,)-shaped in joint-gating mode
+    and gain a trailing batch axis of size K under per-sample gating."""
     sample: jnp.ndarray
-    iterations: jnp.ndarray        # scalar int32 — refinements actually run
-    final_delta: jnp.ndarray       # scalar f32 — last convergence residual
-    delta_history: jnp.ndarray     # (max_iters,) f32, +inf beyond `iterations`
+    iterations: jnp.ndarray        # int32 () or (K,) — refinements actually run
+    final_delta: jnp.ndarray       # f32 () or (K,) — last convergence residual
+    delta_history: jnp.ndarray     # f32 (max_iters,) or (max_iters, K),
+                                   # +inf beyond `iterations`
     trajectory: Optional[jnp.ndarray] = None  # (B+1, ...) final running traj
 
 
-def convergence_norm(diff: jnp.ndarray, kind: str) -> jnp.ndarray:
-    """Residual norm used for the paper's convergence criterion."""
+def convergence_norm(diff: jnp.ndarray, kind: str,
+                     batched: bool = False) -> jnp.ndarray:
+    """Residual norm used for the paper's convergence criterion.
+
+    With ``batched=True`` the reduction skips the leading batch axis and
+    returns one residual per sample: ``(K, ...) -> (K,)``.
+    """
     diff = diff.astype(jnp.float32)
+    axes = tuple(range(1, diff.ndim)) if batched else None
     if kind == "l1_mean":
-        return jnp.mean(jnp.abs(diff))
+        return jnp.mean(jnp.abs(diff), axis=axes)
     if kind == "l2_mean":
-        return jnp.sqrt(jnp.mean(diff * diff))
+        return jnp.sqrt(jnp.mean(diff * diff, axis=axes))
     if kind == "linf":
-        return jnp.max(jnp.abs(diff))
+        return jnp.max(jnp.abs(diff), axis=axes)
     raise ValueError(f"unknown norm {kind!r}")
 
 
-def still_refining(delta: jnp.ndarray, tol: float) -> jnp.ndarray:
-    """Convergence gate: keep iterating while the residual is >= τ."""
+def still_refining(delta: jnp.ndarray, tol) -> jnp.ndarray:
+    """Convergence gate: keep iterating while the residual is >= τ.
+
+    Elementwise — ``delta`` and ``tol`` may be scalars or per-sample ``(K,)``
+    vectors (mixed-tolerance micro-batches pass a tol vector).
+    """
     return delta >= tol
 
 
-def has_converged(delta: jnp.ndarray, tol: float) -> jnp.ndarray:
+def has_converged(delta: jnp.ndarray, tol) -> jnp.ndarray:
     """The complementary gate (used by the wavefront's done-flag psum)."""
     return delta < tol
 
@@ -90,16 +111,31 @@ def has_converged(delta: jnp.ndarray, tol: float) -> jnp.ndarray:
 def resolve_blocks(n_steps: int, num_blocks: Optional[int]) -> Tuple[int, int]:
     """Pick (B, S): B blocks of S fine steps, B*S == N.
 
-    Prefers B = ceil(sqrt(N)) rounded to a divisor of N (the paper handles
-    ragged last blocks; we keep blocks uniform — required for lockstep SPMD —
-    by snapping to the nearest divisor, which preserves Prop 4's optimum for
-    the perfect-square Ns used in all paper experiments).
+    Blocks are uniform — lockstep SPMD requires every block to run the same
+    number of fine steps, so B must divide N exactly (the paper instead
+    allows a ragged last block).  An explicit ``num_blocks`` that does not
+    divide ``n_steps`` is an error.  With ``num_blocks=None``, B is
+    ceil(sqrt(N)) snapped to the nearest *nontrivial* divisor of N (1 < B < N,
+    preserving Prop 4's optimum for the perfect-square Ns of the paper's
+    experiments); if none exists (prime N) this raises rather than silently
+    degrading to the fully-serial B=1.
     """
-    if num_blocks is None:
-        num_blocks = max(1, int(round(math.sqrt(n_steps))))
-    # snap to nearest divisor of n_steps
-    divs = [d for d in range(1, n_steps + 1) if n_steps % d == 0]
-    num_blocks = min(divs, key=lambda d: abs(d - num_blocks))
+    if num_blocks is not None:
+        if not 1 <= num_blocks <= n_steps or n_steps % num_blocks != 0:
+            raise ValueError(
+                f"num_blocks={num_blocks} does not divide N={n_steps}: SRDS "
+                f"blocks are uniform (B*S == N). Pick a divisor of N or pass "
+                f"num_blocks=None to auto-select one.")
+        return num_blocks, n_steps // num_blocks
+    target = max(1, int(round(math.sqrt(n_steps))))
+    divs = [d for d in range(2, n_steps) if n_steps % d == 0]
+    if not divs:
+        raise ValueError(
+            f"N={n_steps} has no nontrivial divisor (prime): every block "
+            f"split degenerates to the serial solve. Choose a composite "
+            f"number of steps, or pass num_blocks={n_steps} or 1 explicitly "
+            f"to accept a degenerate split.")
+    num_blocks = min(divs, key=lambda d: abs(d - target))
     return num_blocks, n_steps // num_blocks
 
 
@@ -148,50 +184,86 @@ def corrector_sweep(G, x_init: jnp.ndarray, y: jnp.ndarray,
 
 
 class RefineState(NamedTuple):
-    """Carry of the refinement loop (shared by all non-wavefront samplers)."""
-    p: jnp.ndarray             # refinement counter (scalar int32)
+    """Carry of the refinement loop (shared by all non-wavefront samplers).
+
+    Under per-sample gating (``batched=True``), ``delta``/``iters``/``active``
+    are ``(K,)`` vectors over the leading batch axis and ``history`` is
+    ``(max_iters, K)``; otherwise they are the scalar joint-gating carries.
+    """
+    p: jnp.ndarray             # refinement counter (scalar int32, lockstep)
     x_tail: jnp.ndarray        # (B, ...) running trajectory x_1..x_B
     prev_coarse: jnp.ndarray   # (B, ...) G(x_i^{p-1}) for each block
     y_prev: jnp.ndarray        # (B, ...) last fine results when
                                # carry_fine_results (straggler reuse),
                                # else a scalar placeholder
-    delta: jnp.ndarray         # last convergence residual (scalar f32)
-    history: jnp.ndarray       # (max_iters,) f32 residual history
+    delta: jnp.ndarray         # last convergence residual, f32 () or (K,)
+    history: jnp.ndarray       # residual history, f32 (max_iters,[ K])
+    iters: jnp.ndarray         # refinements applied, int32 () or (K,)
+    active: jnp.ndarray        # frozen-when-converged mask, bool () or (K,)
 
 
 FineFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
 
+def _batch_mask(mask: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a (K,) sample mask against a (B, K, ...) trajectory tensor."""
+    return mask.reshape((1,) + mask.shape + (1,) * (t.ndim - 2))
+
+
 def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
-                 starts: jnp.ndarray, *, tol: float, max_iters: int,
+                 starts: jnp.ndarray, *, tol, max_iters: int,
                  norm: str = "l1_mean", use_fused_update: bool = False,
                  fixed_iters: bool = False, scan_unroll: bool = False,
-                 constrain=None, carry_fine_results: bool = False) -> RefineState:
+                 constrain=None, carry_fine_results: bool = False,
+                 batched: bool = False) -> RefineState:
     """The complete Parareal refinement loop (Alg 1 minus the fine solves).
 
     ``fine_fn(x_heads, p, y_prev) -> y`` computes the (B, ...) fine-solve
     results for block heads ``x_heads = [x_0, ..., x_{B-1}]`` at refinement
     ``p`` — this is the only sampler-specific part (vmap in one program;
     local vmap + all_gather + straggler masking under shard_map).
+    ``tol`` may be a python float, a traced scalar, or — with ``batched`` —
+    a per-sample ``(K,)`` vector (mixed-tolerance micro-batches).
     ``constrain`` (optional) re-applies a block-dim sharding constraint to
     the trajectory tensors each iteration (GSPMD time-parallel path).
     ``carry_fine_results`` keeps the previous iteration's (B, ...) fine
     results in the loop carry, handed to ``fine_fn`` as ``y_prev`` (needed
     for straggler reuse); off by default so samplers that never read it
     don't pay an extra trajectory-sized buffer of loop state.
+    ``batched`` treats the leading axis of ``x_init`` as a batch of K
+    independent samples and gates convergence per sample: each sample's
+    residual/iteration-count/history evolves on its own, converged samples
+    freeze (their updates become no-ops via ``jnp.where``, so the result is
+    bit-identical to K independent runs), and the loop exits when every
+    sample converged or at ``max_iters``.  Under ``fixed_iters`` no freezing
+    happens (all samples run the full budget, matching K independent
+    fixed-budget runs) but the carries stay per-sample.
     """
     cb = constrain if constrain is not None else (lambda t: t)
+    # Early-exit per-sample mode freezes converged samples; fixed-iters mode
+    # never gates updates (scan runs the full budget for every sample).
+    gate = batched and not fixed_iters
 
     x_tail = coarse_init_sweep(G, x_init, starts, unroll=scan_unroll)
     # prev_coarse_i == G(x_i^0) == x_{i+1}^0 at init; y_prev's init value is
     # never read (straggler substitution is gated on p > 0).
     y_prev0 = x_tail if carry_fine_results else jnp.zeros((), x_tail.dtype)
+    if batched:
+        k = x_init.shape[0]
+        delta0 = jnp.full((k,), jnp.inf, jnp.float32)
+        hist0 = jnp.full((max_iters, k), jnp.inf, jnp.float32)
+        iters0 = jnp.zeros((k,), jnp.int32)
+        active0 = jnp.ones((k,), bool)
+    else:
+        delta0 = jnp.float32(jnp.inf)
+        hist0 = jnp.full((max_iters,), jnp.inf, jnp.float32)
+        iters0 = jnp.int32(0)
+        active0 = jnp.asarray(True)
     init = RefineState(jnp.int32(0), x_tail, x_tail, y_prev0,
-                       jnp.float32(jnp.inf),
-                       jnp.full((max_iters,), jnp.inf, jnp.float32))
+                       delta0, hist0, iters0, active0)
 
     def cond(c: RefineState):
-        return jnp.logical_and(c.p < max_iters, still_refining(c.delta, tol))
+        return jnp.logical_and(c.p < max_iters, jnp.any(c.active))
 
     def body(c: RefineState) -> RefineState:
         x_heads = jnp.concatenate([x_init[None], c.x_tail[:-1]], axis=0)
@@ -203,11 +275,33 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
                                             unroll=scan_unroll)
         new_tail = cb(new_tail)
         cur_all = cb(cur_all)
+        if gate:
+            # converged samples' fine solves are no-ops: freeze their
+            # trajectory and coarse state so they stay bit-identical to an
+            # independent run that exited at their convergence iteration
+            m = _batch_mask(c.active, new_tail)
+            new_tail = jnp.where(m, new_tail, c.x_tail)
+            cur_all = jnp.where(m, cur_all, c.prev_coarse)
 
-        delta = convergence_norm(new_tail[-1] - c.x_tail[-1], norm)
-        history = c.history.at[c.p].set(delta)
-        y_keep = y if carry_fine_results else c.y_prev
-        return RefineState(c.p + 1, new_tail, cur_all, y_keep, delta, history)
+        resid = convergence_norm(new_tail[-1] - c.x_tail[-1], norm,
+                                 batched=batched)
+        if gate:
+            delta = jnp.where(c.active, resid, c.delta)
+            history = c.history.at[c.p].set(
+                jnp.where(c.active, resid, c.history[c.p]))
+            iters = c.iters + c.active.astype(jnp.int32)
+        else:
+            delta = resid
+            history = c.history.at[c.p].set(resid)
+            iters = c.iters + 1
+        active = jnp.logical_and(c.active, still_refining(delta, tol))
+        if carry_fine_results:
+            y_keep = jnp.where(_batch_mask(c.active, y), y, c.y_prev) \
+                if gate else y
+        else:
+            y_keep = c.y_prev
+        return RefineState(c.p + 1, new_tail, cur_all, y_keep, delta, history,
+                           iters, active)
 
     if fixed_iters:
         out, _ = jax.lax.scan(lambda c, _: (body(c), None), init, None,
@@ -227,5 +321,5 @@ def assemble_result(sample: jnp.ndarray, iterations: jnp.ndarray,
 
 def result_from_state(state: RefineState,
                       trajectory: Optional[jnp.ndarray] = None) -> SRDSResult:
-    return assemble_result(state.x_tail[-1], state.p, state.delta,
+    return assemble_result(state.x_tail[-1], state.iters, state.delta,
                            state.history, trajectory)

@@ -24,8 +24,16 @@ __all__ = ["SRDSConfig", "SRDSResult", "resolve_blocks", "srds_sample",
 
 def srds_sample(model_fn: ModelFn, sched: DiffusionSchedule, solver: SolverConfig,
                 x_init: jnp.ndarray, cfg: SRDSConfig = SRDSConfig(),
-                return_trajectory: bool = False) -> SRDSResult:
-    """Algorithm 1.  ``x_init ~ N(0, I)`` with shape (batch?, ...)."""
+                return_trajectory: bool = False, tol=None) -> SRDSResult:
+    """Algorithm 1.  ``x_init ~ N(0, I)`` with shape (batch?, ...).
+
+    With ``cfg.per_sample`` the leading axis of ``x_init`` is a batch of K
+    independent samples: convergence is gated per sample (converged samples
+    freeze; results are bit-identical to K independent calls) and
+    ``iterations``/``final_delta``/``delta_history`` gain a K axis.
+    ``tol`` overrides ``cfg.tol`` and may be traced — per-sample mode accepts
+    a ``(K,)`` tolerance vector (mixed-tolerance micro-batches).
+    """
     n = sched.num_steps
     B, S = resolve_blocks(n, cfg.num_blocks)
     max_iters = cfg.max_iters if cfg.max_iters is not None else B
@@ -46,11 +54,13 @@ def srds_sample(model_fn: ModelFn, sched: DiffusionSchedule, solver: SolverConfi
         # parallel fine solves, batched over the block dim
         return _cb(jax.vmap(lambda xi, i0: F(xi, i0))(_cb(x_heads), starts))
 
-    out = run_parareal(G, fine_fn, x_init, starts, tol=cfg.tol,
+    out = run_parareal(G, fine_fn, x_init, starts,
+                       tol=cfg.tol if tol is None else tol,
                        max_iters=max_iters, norm=cfg.norm,
                        use_fused_update=cfg.use_fused_update,
                        fixed_iters=cfg.fixed_iters,
-                       scan_unroll=cfg.scan_unroll, constrain=_cb)
+                       scan_unroll=cfg.scan_unroll, constrain=_cb,
+                       batched=cfg.per_sample)
 
     traj = None
     if return_trajectory:

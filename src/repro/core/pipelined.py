@@ -56,11 +56,15 @@ from .solvers import ModelFn, SolverConfig, solve, solver_step
 def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
                        solver: SolverConfig, x_init: jnp.ndarray,
                        axis: str, cfg: SRDSConfig,
-                       straggler_fn: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None):
+                       straggler_fn: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+                       tol=None):
     """Per-shard body. x_init is replicated; returns replicated outputs.
 
     ``straggler_fn(p) -> (B,) bool`` marks blocks whose fine solve is treated
     as dropped at refinement ``p`` (stale result substituted).
+    ``tol`` overrides ``cfg.tol`` and may be a traced scalar or — with
+    ``cfg.per_sample`` — a per-sample ``(K,)`` vector over the leading batch
+    axis of ``x_init`` (mixed-tolerance micro-batches).
     """
     n = sched.num_steps
     d = compat.axis_size(axis)
@@ -93,32 +97,44 @@ def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
     # The coarse sweep / predictor-corrector / convergence gating all come
     # from the shared engine; the coarse sweep is computed redundantly on
     # every device (cheap: B coarse evals).
-    out = run_parareal(G, fine_fn, x_init, all_starts, tol=cfg.tol,
+    out = run_parareal(G, fine_fn, x_init, all_starts,
+                       tol=cfg.tol if tol is None else tol,
                        max_iters=max_iters, norm=cfg.norm,
                        use_fused_update=cfg.use_fused_update,
                        fixed_iters=cfg.fixed_iters,
                        scan_unroll=cfg.scan_unroll,
-                       carry_fine_results=straggler_fn is not None)
-    return out.x_tail[-1], out.p, out.delta, out.history
+                       carry_fine_results=straggler_fn is not None,
+                       batched=cfg.per_sample)
+    return out.x_tail[-1], out.iters, out.delta, out.history
 
 
 def make_sharded_sampler(mesh, axis: str, model_fn: ModelFn,
                          sched: DiffusionSchedule, solver: SolverConfig,
                          cfg: SRDSConfig, straggler_fn=None):
-    """jit-compiled SPMD sampler: x_init (replicated) -> SRDSResult."""
-    def local(x_init):
-        s, p, d, h = srds_sharded_local(model_fn, sched, solver, x_init, axis,
-                                        cfg, straggler_fn)
-        return s, p, d, h
+    """jit-compiled SPMD sampler: x_init (replicated) -> SRDSResult.
+
+    The returned callable takes an optional runtime ``tol`` (scalar, or a
+    per-sample ``(K,)`` vector with ``cfg.per_sample``) so a serving layer
+    can pack requests with different tolerances into one micro-batch without
+    recompiling; ``tol=None`` uses ``cfg.tol``.
+    """
+    def local(x_init, tol):
+        s, it, d, h = srds_sharded_local(model_fn, sched, solver, x_init, axis,
+                                         cfg, straggler_fn, tol=tol)
+        return s, it, d, h
 
     fn = compat.shard_map(local, mesh=mesh,
-                          in_specs=P(), out_specs=(P(), P(), P(), P()),
+                          in_specs=(P(), P()), out_specs=(P(), P(), P(), P()),
                           check_vma=False)
 
     @jax.jit
-    def sample(x_init):
-        s, p, d, h = fn(x_init)
-        return assemble_result(s, p, d, h)
+    def _sample(x_init, tol):
+        s, it, d, h = fn(x_init, tol)
+        return assemble_result(s, it, d, h)
+
+    def sample(x_init, tol=None):
+        tolv = jnp.asarray(cfg.tol if tol is None else tol, jnp.float32)
+        return _sample(x_init, tolv)
 
     return sample
 
@@ -133,9 +149,15 @@ class _WaveCarry(NamedTuple):
     x_new: jnp.ndarray         # latest left-boundary value x_i^p
     prev_coarse: jnp.ndarray   # G(x_i^{p-1})
     out_last: jnp.ndarray      # device's last completed block output
-    delta: jnp.ndarray         # last residual on device B-1 (replicated scalar)
-    p_done: jnp.ndarray        # completed refinements (device-local)
-    done: jnp.ndarray          # converged flag (replicated)
+    delta: jnp.ndarray         # last residual, f32 () or (K,) per sample —
+                               # live on device B-1, psum-broadcast on exit
+    history: jnp.ndarray       # per-refinement residuals, (max_iters,[ K]) —
+                               # live on device B-1, psum-broadcast on exit
+    p_done: jnp.ndarray        # completed refinements (device-local),
+                               # int32 () or per-sample (K,)
+    conv: jnp.ndarray          # per-sample converged mask on device B-1,
+                               # bool () or (K,) (always False elsewhere)
+    done: jnp.ndarray          # all-samples-converged flag (replicated)
 
 
 def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
@@ -153,6 +175,11 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
     and convergence gate below are :func:`repro.core.engine.parareal_update`
     and :func:`repro.core.engine.convergence_norm` — the same code the
     sequential and block-sharded samplers run.
+
+    With ``cfg.per_sample`` the leading axis of ``x_init`` is a batch of K
+    samples gated independently: the tail device carries a per-sample
+    residual/convergence mask, freezes converged samples' outputs, and the
+    psum'd done-flag fires only once *every* sample has converged.
     """
     n = sched.num_steps
     d = compat.axis_size(axis)
@@ -163,6 +190,12 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
     max_iters = cfg.max_iters if cfg.max_iters is not None else d
     max_supersteps = max_iters * s_steps + d + 2
     right = [(i, (i + 1) % d) for i in range(d)]
+    per = cfg.per_sample
+
+    def lane_mask(mask, t):
+        # broadcast a per-sample mask against a (K, ...) state tensor
+        return mask.reshape(mask.shape + (1,) * (t.ndim - mask.ndim)) \
+            if per else mask
 
     block_i0 = me * s_steps                # my block's first grid index
 
@@ -207,17 +240,39 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
                                     coarse_out, c.prev_coarse)
         # out_last tracks x_{i+1}^p (x_{i+1}^0 after the init eval), so the
         # tail device's p=1 residual compares against x_B^0 per Alg. 1.
-        new_out_last = jnp.where(is_last, out_block,
+        # Samples already converged on the tail device stay frozen — their
+        # reported output is the value at their convergence refinement, the
+        # same contract as the engine's per-sample gating (c.conv is always
+        # False off the tail device, so this is a no-op elsewhere).  The
+        # superstep budget has a few supersteps of ramp slack past
+        # refinement max_iters (for s_steps <= 3 a block can complete an
+        # extra refinement inside it) — `over` freezes those too, so
+        # iterations/delta/history never report past the budget.
+        over = p > max_iters
+        frozen = lane_mask(jnp.logical_or(c.conv, over), out_block)
+        new_out_last = jnp.where(is_last,
+                                 jnp.where(frozen, c.out_last, out_block),
                                  jnp.where(is_init, coarse_out, c.out_last))
-        new_p_done = jnp.where(is_last, p, c.p_done)
+        new_p_done = jnp.where(
+            jnp.logical_and(is_last,
+                            jnp.logical_not(jnp.logical_or(c.conv, over))),
+            p, c.p_done)
 
-        # convergence residual on the final block
+        # convergence residual on the final block (per sample when gated)
         is_tail = me == d - 1
-        resid = convergence_norm(out_block - c.out_last, cfg.norm)
-        delta = jnp.where(jnp.logical_and(is_tail, is_last), resid, c.delta)
+        resid = convergence_norm(out_block - c.out_last, cfg.norm, batched=per)
+        upd = jnp.logical_and(is_tail,
+                              jnp.logical_and(is_last, jnp.logical_not(over)))
+        live = jnp.logical_and(upd, jnp.logical_not(c.conv))
+        delta = jnp.where(live, resid, c.delta)
+        # record the refinement's residual for still-refining samples (the
+        # +inf tail past a sample's convergence matches the engine contract)
+        idx = jnp.clip(p - 1, 0, max_iters - 1)
+        history = c.history.at[idx].set(
+            jnp.where(live, resid, c.history[idx]))
+        conv = jnp.where(upd, has_converged(delta, cfg.tol), c.conv)
         local_conv = jnp.where(
-            jnp.logical_and(is_tail, is_last),
-            has_converged(delta, cfg.tol).astype(jnp.float32), 0.0)
+            upd, jnp.all(conv).astype(jnp.float32), 0.0)
         done = jax.lax.psum(local_conv, axis) > 0.0
 
         # ring exchange of boundary values (one sample per neighbor pair)
@@ -230,24 +285,41 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
         return _WaveCarry(c.s + 1, jnp.where(active, z_out, c.z), x_new,
                           jnp.where(active, new_prev_coarse, c.prev_coarse),
                           jnp.where(active, new_out_last, c.out_last),
-                          delta, jnp.where(active, new_p_done, c.p_done), done)
+                          delta, history,
+                          jnp.where(active, new_p_done, c.p_done), conv, done)
 
     def cond(c: _WaveCarry):
         return jnp.logical_and(c.s < max_supersteps, jnp.logical_not(c.done))
 
+    if per:
+        k = x_init.shape[0]
+        delta0 = jnp.full((k,), jnp.inf, jnp.float32)
+        hist0 = jnp.full((max_iters, k), jnp.inf, jnp.float32)
+        p_done0 = jnp.zeros((k,), jnp.int32)
+        conv0 = jnp.zeros((k,), bool)
+    else:
+        delta0 = jnp.float32(jnp.inf)
+        hist0 = jnp.full((max_iters,), jnp.inf, jnp.float32)
+        p_done0 = jnp.int32(0)
+        conv0 = jnp.asarray(False)
     init = _WaveCarry(s=jnp.int32(0), z=x_init, x_new=x_init,
                       prev_coarse=jnp.zeros_like(x_init),
                       out_last=jnp.zeros_like(x_init),
-                      delta=jnp.float32(jnp.inf), p_done=jnp.int32(0),
-                      done=jnp.asarray(False))
+                      delta=delta0, history=hist0, p_done=p_done0,
+                      conv=conv0, done=jnp.asarray(False))
     c = jax.lax.while_loop(cond, body, init)
 
-    # broadcast the tail device's answer to every shard
-    sample = jax.lax.psum(
-        jnp.where(me == d - 1, c.out_last, jnp.zeros_like(c.out_last)), axis)
-    iters = jax.lax.psum(jnp.where(me == d - 1, c.p_done, 0), axis)
+    # broadcast the tail device's answers to every shard
+    def from_tail(v):
+        return jax.lax.psum(jnp.where(me == d - 1, v, jnp.zeros_like(v)),
+                            axis)
+
+    sample = from_tail(c.out_last)
+    iters = from_tail(c.p_done)
+    delta = from_tail(c.delta)
+    history = from_tail(c.history)
     supersteps = c.s
-    return sample, iters, c.delta, supersteps
+    return sample, iters, delta, history, supersteps
 
 
 def make_pipelined_sampler(mesh, axis: str, model_fn: ModelFn,
@@ -257,12 +329,12 @@ def make_pipelined_sampler(mesh, axis: str, model_fn: ModelFn,
         return srds_pipelined_local(model_fn, sched, solver, x_init, axis, cfg)
 
     fn = compat.shard_map(local, mesh=mesh, in_specs=P(),
-                          out_specs=(P(), P(), P(), P()), check_vma=False)
+                          out_specs=(P(), P(), P(), P(), P()),
+                          check_vma=False)
 
     @jax.jit
     def sample(x_init):
-        s, p, dlt, steps = fn(x_init)
-        return assemble_result(
-            s, p, dlt, jnp.full((1,), jnp.inf, jnp.float32)), steps
+        s, p, dlt, hist, steps = fn(x_init)
+        return assemble_result(s, p, dlt, hist), steps
 
     return sample

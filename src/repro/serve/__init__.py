@@ -1,1 +1,3 @@
+from .diffusion import (DiffusionSamplingEngine, SampleRequest,
+                        SampleResponse)
 from .engine import Request, ServingEngine, make_decode_fn, make_prefill_fn

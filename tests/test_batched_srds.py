@@ -1,0 +1,233 @@
+"""Batch-aware SRDS: per-sample convergence gating must be *exactly* the
+K-independent-runs semantics, and the serving layer must inherit it.
+
+The bitwise tests use an elementwise denoiser: lane math is then identical
+for every batch size, so any mismatch is a real cross-sample leak in the
+gating/freezing logic (matmul models hit XLA's shape-dependent gemm kernels
+— covered separately at 1e-12)."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SolverConfig, SRDSConfig, make_schedule,
+                        sample_sequential, srds_sample)
+from repro.serve.diffusion import DiffusionSamplingEngine, SampleRequest
+from conftest import to_f64
+
+TOLS = [1e-2, 1e-4, 1e-6, 1e-3, 1e-5]
+
+
+def _elementwise_model(dim=8):
+    scale = jnp.linspace(0.5, 1.5, dim)
+
+    def model_fn(x, t):
+        return jnp.tanh(x * scale) * (0.5 + 0.001 * t)
+
+    return model_fn
+
+
+def _matmul_model(dim=8):
+    w = jax.random.normal(jax.random.PRNGKey(0), (dim, dim),
+                          dtype=jnp.float64) * 0.3
+
+    def model_fn(x, t):
+        return jnp.tanh(x @ w) * (0.5 + 0.001 * t)
+
+    return model_fn
+
+
+def _x_batch(k=5, dim=8):
+    x = jax.random.normal(jax.random.PRNGKey(1), (k, dim), dtype=jnp.float64)
+    # spread the scales so per-sample iteration counts genuinely differ
+    return x * jnp.linspace(0.3, 2.5, k)[:, None]
+
+
+@pytest.mark.parametrize("solver", ["ddim", "heun"])
+def test_batched_bit_identical_to_independent_runs(solver):
+    """Early-exit path: batched per-sample gating == K independent
+    srds_sample calls, bit for bit, including per-sample iterations,
+    final_delta and delta_history — under a mixed-tolerance vector."""
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    cfg = SolverConfig(solver)
+    X = _x_batch(len(TOLS))
+    res = srds_sample(model, sched, cfg, X, SRDSConfig(per_sample=True),
+                      tol=jnp.asarray(TOLS, jnp.float32))
+    assert res.iterations.shape == (len(TOLS),)
+    assert res.final_delta.shape == (len(TOLS),)
+    assert res.delta_history.shape == (8, len(TOLS))
+    assert len(set(int(i) for i in res.iterations)) > 1, \
+        "test needs genuinely different per-sample iteration counts"
+    for k, tol in enumerate(TOLS):
+        ind = srds_sample(model, sched, cfg, X[k:k + 1], SRDSConfig(tol=tol))
+        assert bool(jnp.all(res.sample[k] == ind.sample[0])), k
+        assert int(res.iterations[k]) == int(ind.iterations), k
+        assert float(res.final_delta[k]) == float(ind.final_delta), k
+        np.testing.assert_array_equal(np.asarray(res.delta_history[:, k]),
+                                      np.asarray(ind.delta_history))
+
+
+def test_batched_bit_identical_fixed_iters():
+    """Fixed-budget path: no freezing (matching independent fixed-budget
+    runs), but carries stay per-sample."""
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    cfg = SolverConfig("ddim")
+    X = _x_batch(len(TOLS))
+    res = srds_sample(model, sched, cfg, X,
+                      SRDSConfig(per_sample=True, fixed_iters=True,
+                                 max_iters=6),
+                      tol=jnp.asarray(TOLS, jnp.float32))
+    assert res.delta_history.shape == (6, len(TOLS))
+    for k, tol in enumerate(TOLS):
+        ind = srds_sample(model, sched, cfg, X[k:k + 1],
+                          SRDSConfig(tol=tol, fixed_iters=True, max_iters=6))
+        assert bool(jnp.all(res.sample[k] == ind.sample[0])), k
+        assert int(res.iterations[k]) == int(ind.iterations) == 6
+        np.testing.assert_array_equal(np.asarray(res.delta_history[:, k]),
+                                      np.asarray(ind.delta_history))
+
+
+def test_batched_matmul_model_near_exact():
+    """Real (matmul) denoisers hit XLA's shape-dependent gemm kernels, so
+    bitwise equality across batch sizes is not guaranteed — but per-sample
+    gating must still match independent runs to fp64 roundoff."""
+    model = _matmul_model()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    cfg = SolverConfig("ddim")
+    X = _x_batch(4)
+    tols = TOLS[:4]
+    res = srds_sample(model, sched, cfg, X, SRDSConfig(per_sample=True),
+                      tol=jnp.asarray(tols, jnp.float32))
+    for k, tol in enumerate(tols):
+        ind = srds_sample(model, sched, cfg, X[k:k + 1], SRDSConfig(tol=tol))
+        assert int(res.iterations[k]) == int(ind.iterations), k
+        np.testing.assert_allclose(np.asarray(res.sample[k]),
+                                   np.asarray(ind.sample[0]),
+                                   rtol=0, atol=1e-12)
+
+
+def test_batched_exact_to_cap_equals_sequential():
+    """tol=0 per-sample batched run must still reproduce the sequential
+    solve for every sample (Prop 1 is per-sample too)."""
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 36))
+    cfg = SolverConfig("ddim")
+    X = _x_batch(3)
+    ref = sample_sequential(model, sched, cfg, X)
+    res = srds_sample(model, sched, cfg, X, SRDSConfig(tol=0.0,
+                                                       per_sample=True))
+    np.testing.assert_allclose(np.asarray(res.sample), np.asarray(ref),
+                               rtol=0, atol=1e-12)
+    assert np.all(np.asarray(res.iterations) == int(res.iterations[0]))
+
+
+# --------------------------------------------------------------------------
+# the serving layer
+# --------------------------------------------------------------------------
+
+def _engine(model, batch_size, **kw):
+    return DiffusionSamplingEngine(model, (8,), SolverConfig("ddim"),
+                                   num_steps=64, batch_size=batch_size,
+                                   dtype=jnp.float64, **kw)
+
+
+def test_serving_engine_bit_identical_per_request():
+    """Draining a mixed-tolerance queue returns, for every request, the
+    bit-exact single-request SRDS result — batch-mates, admission order and
+    slot recycling must not perturb any sample."""
+    model = _elementwise_model()
+    eng = _engine(model, batch_size=3)
+    reqs = [SampleRequest(seed=i, tol=TOLS[i % len(TOLS)]) for i in range(8)]
+    rids = [eng.submit(r) for r in reqs]
+    out = eng.drain()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    for rid, req in zip(rids, reqs):
+        x0 = jax.random.normal(jax.random.PRNGKey(req.seed), (8,),
+                               jnp.float64)
+        ind = srds_sample(model, sched, SolverConfig("ddim"), x0[None],
+                          SRDSConfig(tol=req.tol))
+        r = out[rid]
+        assert bool(np.all(r.sample == np.asarray(ind.sample[0]))), rid
+        assert r.iterations == int(ind.iterations), rid
+        np.testing.assert_array_equal(
+            r.delta_history,
+            np.asarray(ind.delta_history)[:int(ind.iterations)])
+    st = eng.stats()
+    assert st["requests_served"] == len(reqs)
+    assert st["effective_evals"] == sum(out[r].model_evals for r in rids)
+
+
+def test_serving_engine_beats_lockstep_gating():
+    """Slot recycling on a mixed-tolerance queue must cost fewer effective
+    model evals than lockstep whole-batch gating (every sample paying for
+    the slowest in its batch) — the tentpole's throughput claim."""
+    model = _elementwise_model()
+    k = 4
+    eng = _engine(model, batch_size=k)
+    reqs = [SampleRequest(seed=i, tol=TOLS[i % len(TOLS)])
+            for i in range(12)]
+    rids = [eng.submit(r) for r in reqs]
+    out = eng.drain()
+    iters = [out[r].iterations for r in rids]
+    assert min(iters) < max(iters)  # mixed tolerances actually spread
+    b, s, e = 8, 8, 1
+    lockstep = sum(len(g) * (b + max(g) * (b * s + b)) * e
+                   for g in (iters[i:i + k] for i in range(0, len(iters), k)))
+    assert eng.stats()["effective_evals"] < lockstep
+    # and the per-sample effective evals equal the independent-run cost
+    for rid, it in zip(rids, iters):
+        assert out[rid].model_evals == (b + it * (b * s + b)) * e
+
+
+def test_serving_engine_groups_incompatible_grids():
+    """Requests on different grids are packed into separate micro-batch
+    groups; every request still converges to its own tolerance."""
+    model = _elementwise_model()
+    eng = _engine(model, batch_size=2)
+    reqs = [SampleRequest(seed=0, tol=1e-3, num_steps=64),
+            SampleRequest(seed=1, tol=1e-3, num_steps=36),
+            SampleRequest(seed=2, tol=1e-4, num_steps=64),
+            SampleRequest(seed=3, tol=1e-4)]          # default grid (64)
+    rids = [eng.submit(r) for r in reqs]
+    out = eng.drain()
+    assert set(out) == set(rids)
+    for rid, req in zip(rids, reqs):
+        n = req.num_steps or 64
+        sched = to_f64(make_schedule("ddpm_linear", n))
+        x0 = jax.random.normal(jax.random.PRNGKey(req.seed), (8,),
+                               jnp.float64)
+        ind = srds_sample(model, sched, SolverConfig("ddim"), x0[None],
+                          SRDSConfig(tol=req.tol))
+        assert out[rid].iterations == int(ind.iterations)
+        assert bool(np.all(out[rid].sample == np.asarray(ind.sample[0])))
+
+
+def test_serving_engine_rejects_bad_requests_at_submit():
+    """An unservable request (prime grid: no block decomposition) is
+    rejected at submit() and must not poison already-queued requests."""
+    model = _elementwise_model()
+    eng = _engine(model, batch_size=2)
+    good = eng.submit(SampleRequest(seed=0, tol=1e-3))
+    with pytest.raises(ValueError, match="prime"):
+        eng.submit(SampleRequest(seed=1, tol=1e-3, num_steps=13))
+    out = eng.drain()
+    assert set(out) == {good}
+    assert out[good].iterations >= 1
+
+
+def test_serving_engine_more_requests_than_slots_recycles():
+    """A queue longer than the batch admits into freed slots: all served,
+    and the number of refinement steps is bounded by the recycled schedule
+    (not requests/batch_size * max_iters)."""
+    model = _elementwise_model()
+    eng = _engine(model, batch_size=2)
+    rids = [eng.submit(SampleRequest(seed=i, tol=TOLS[i % len(TOLS)]))
+            for i in range(7)]
+    out = eng.drain()
+    assert len(out) == 7
+    assert all(out[r].iterations >= 1 for r in rids)

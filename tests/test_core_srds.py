@@ -95,6 +95,30 @@ def test_resolve_blocks_sqrt_and_divisor():
     assert (b, s) == (10, 10)
 
 
+def test_resolve_blocks_prime_and_near_prime():
+    """Regression: prime N used to snap silently to B=1 (fully serial).
+    Auto selection now raises on primes and picks a nontrivial divisor for
+    near-primes; an explicit non-divisor B is an error, while explicitly
+    degenerate B=1 / B=N stay available."""
+    with pytest.raises(ValueError, match="prime"):
+        resolve_blocks(13, None)
+    with pytest.raises(ValueError, match="prime"):
+        resolve_blocks(37, None)
+    # near-primes keep a genuinely parallel split
+    assert resolve_blocks(14, None) == (2, 7)
+    assert resolve_blocks(26, None) == (2, 13)
+    b, s = resolve_blocks(15, None)
+    assert b * s == 15 and 1 < b < 15
+    # explicit non-divisors raise instead of silently snapping
+    with pytest.raises(ValueError, match="does not divide"):
+        resolve_blocks(13, 4)
+    with pytest.raises(ValueError, match="does not divide"):
+        resolve_blocks(100, 7)
+    # explicitly-requested degenerate splits are honored
+    assert resolve_blocks(13, 13) == (13, 1)
+    assert resolve_blocks(13, 1) == (1, 13)
+
+
 def test_eval_accounting_matches_paper_models():
     """Table-3 arithmetic: N=25 -> vanilla eff 15 (B + k(S+B), k=1),
     pipelined eff 9 (~B + k(S+1)-ish, paper reports 9)."""

@@ -90,6 +90,152 @@ assert int(steps) < N, (int(steps), N)
 """)
 
 
+def test_delta_history_contract_parity_across_samplers():
+    """All three samplers return the same delta_history contract:
+    (max_iters,) f32, real residuals up to `iterations`, +inf beyond —
+    the wavefront used to return a dummy (1,) +inf placeholder."""
+    _run(r"""
+import numpy as np
+cfg = SRDSConfig(tol=1e-4, num_blocks=8)
+res_seq = srds_sample(model_fn, sched, solver, x0, cfg)
+res_sh = make_sharded_sampler(mesh, "time", model_fn, sched, solver, cfg)(x0)
+res_wf, steps = make_pipelined_sampler(mesh, "time", model_fn, sched, solver,
+                                       SRDSConfig(tol=1e-4))(x0)
+assert res_wf.delta_history.shape == res_sh.delta_history.shape \
+    == res_seq.delta_history.shape == (8,), res_wf.delta_history.shape
+for res in (res_seq, res_sh, res_wf):
+    k = int(res.iterations)
+    h = np.asarray(res.delta_history)
+    assert np.all(np.isfinite(h[:k])), h
+    assert np.all(np.isinf(h[k:])), h
+    assert float(res.final_delta) == float(h[k - 1])
+# the wavefront residuals are the same quantity the engine computes
+# (||x_B^p - x_B^{p-1}||), just wavefront-scheduled
+k = min(int(res_wf.iterations), int(res_seq.iterations))
+np.testing.assert_allclose(np.asarray(res_wf.delta_history[:k]),
+                           np.asarray(res_seq.delta_history[:k]),
+                           rtol=1e-4, atol=1e-9)
+""")
+
+
+def test_sharded_batched_per_sample_gating():
+    """Distributed batched sampler: per-sample gating with a mixed-tol
+    vector is bit-identical to the single-program batched run, lane for
+    lane, and each lane stops at its own tolerance."""
+    _run(r"""
+import numpy as np
+xb = jax.random.normal(jax.random.PRNGKey(3), (4, 6), dtype=jnp.float64) \
+    * jnp.linspace(0.4, 2.0, 4)[:, None]
+tols = jnp.array([1e-2, 1e-4, 1e-6, 1e-3], jnp.float32)
+cfg = SRDSConfig(per_sample=True, num_blocks=8)
+res_s = srds_sample(model_fn, sched, solver, xb, cfg, tol=tols)
+res_d = make_sharded_sampler(mesh, "time", model_fn, sched, solver, cfg)(xb, tols)
+assert res_d.iterations.shape == (4,) and res_d.delta_history.shape == (8, 4)
+assert np.array_equal(np.asarray(res_d.iterations), np.asarray(res_s.iterations))
+assert len(set(np.asarray(res_d.iterations).tolist())) > 1
+assert bool(jnp.all(res_d.sample == res_s.sample))
+assert np.array_equal(np.asarray(res_d.delta_history),
+                      np.asarray(res_s.delta_history))
+# per-lane: converged lanes are below their own tolerance
+for k in range(4):
+    if int(res_d.iterations[k]) < 8:
+        assert float(res_d.final_delta[k]) < float(tols[k])
+""")
+
+
+def test_wavefront_per_sample_done_flag():
+    """Per-sample wavefront: the psum'd done-flag fires only when EVERY
+    sample converged; per-sample iterations/history ride the carry and
+    early-converged lanes freeze at their convergence value."""
+    _run(r"""
+import numpy as np
+xb = jax.random.normal(jax.random.PRNGKey(3), (2, 6), dtype=jnp.float64) \
+    * jnp.array([[0.4], [2.0]])
+refb = sample_sequential(model_fn, sched, solver, xb)
+samp = make_pipelined_sampler(mesh, "time", model_fn, sched, solver,
+                              SRDSConfig(tol=1e-4, per_sample=True))
+res, steps = samp(xb)
+assert res.iterations.shape == (2,) and res.delta_history.shape == (8, 2)
+it = np.asarray(res.iterations)
+assert it.min() >= 1 and it.max() <= 8
+# the loop ran to the SLOWEST lane: supersteps cover max(it) refinements
+S = N // 8
+assert int(steps) >= (int(it.max()) - 1) * S + 8
+for k in range(2):
+    h = np.asarray(res.delta_history[:, k])
+    assert np.all(np.isfinite(h[:it[k]])) and np.all(np.isinf(h[it[k]:]))
+    if it[k] < 8:
+        assert float(res.final_delta[k]) < 1e-4
+assert float(jnp.mean(jnp.abs(res.sample - refb))) < 1e-3
+# lanes match the single-program per-sample run, iteration for iteration
+res_s = srds_sample(model_fn, sched, solver, xb,
+                    SRDSConfig(per_sample=True, num_blocks=8, tol=1e-4))
+assert np.array_equal(it, np.asarray(res_s.iterations))
+""")
+
+
+def test_wavefront_short_blocks_respect_iteration_budget():
+    """Regression: with s_steps <= 3 the superstep budget's ramp slack let
+    the tail complete an uncounted extra refinement — iterations could
+    report max_iters+1 with a final_delta never recorded in the history."""
+    _run(r"""
+import numpy as np
+sched16 = make_schedule("ddpm_linear", 16)
+sched16 = DiffusionSchedule(ab=sched16.ab.astype(jnp.float64),
+                            t_model=sched16.t_model.astype(jnp.float64))
+ref16 = sample_sequential(model_fn, sched16, solver, x0)
+samp = make_pipelined_sampler(mesh, "time", model_fn, sched16, solver,
+                              SRDSConfig(tol=0.0))   # s_steps = 2
+res, steps = samp(x0)
+k = int(res.iterations)
+assert k <= 8, k
+h = np.asarray(res.delta_history)
+assert h.shape == (8,)
+assert float(res.final_delta) == float(h[k - 1]), (res.final_delta, h)
+assert float(jnp.max(jnp.abs(res.sample - ref16))) < 1e-10
+""")
+
+
+def test_serving_engine_sharded_fine_solves():
+    """DiffusionSamplingEngine's mesh path (shard_map fine solves +
+    all_gather) returns the same results as the single-program path."""
+    _run(r"""
+import numpy as np
+from repro.serve.diffusion import DiffusionSamplingEngine, SampleRequest
+
+scale = jnp.linspace(0.5, 1.5, 6)
+emodel = lambda x, t: jnp.tanh(x * scale) * (0.5 + 0.001 * t)
+reqs = [SampleRequest(seed=i, tol=[1e-2, 1e-4, 1e-5][i % 3]) for i in range(5)]
+
+def run(**kw):
+    eng = DiffusionSamplingEngine(emodel, (6,), SolverConfig("ddim"),
+                                  num_steps=64, batch_size=2,
+                                  dtype=jnp.float64, **kw)
+    rids = [eng.submit(r) for r in reqs]
+    out = eng.drain()
+    return [out[r] for r in rids]
+
+plain = run()
+sharded = run(mesh=mesh, axis="time")
+for a, b in zip(plain, sharded):
+    assert a.iterations == b.iterations
+    assert np.array_equal(a.sample, b.sample)
+    assert np.array_equal(a.delta_history, b.delta_history)
+# B=8 not divisible by a 3-wide axis must fail loudly at program build
+from repro.compat import make_mesh
+mesh3 = make_mesh((3,), ("t3",), devices=jax.devices()[:3])
+eng = DiffusionSamplingEngine(emodel, (6,), SolverConfig("ddim"),
+                              num_steps=64, batch_size=2, mesh=mesh3,
+                              axis="t3")
+eng.submit(SampleRequest(seed=0))
+try:
+    eng.drain()
+    raise SystemExit("expected ValueError for indivisible block split")
+except ValueError as e:
+    assert "not divisible" in str(e), e
+""")
+
+
 def test_straggler_mitigation_preserves_exactness():
     """Transient stragglers (stale fine results) cost iterations, never
     correctness."""

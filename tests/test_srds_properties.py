@@ -9,7 +9,7 @@ import pytest
 
 hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the hypothesis package")
-from hypothesis import given, settings, strategies as st
+from hypothesis import assume, given, settings, strategies as st
 
 from repro.core import (SolverConfig, SRDSConfig, make_schedule,
                         resolve_blocks, sample_sequential, srds_sample)
@@ -36,6 +36,7 @@ def _model(seed, dim):
 def test_srds_always_equals_sequential(n, seed, solver, kind):
     """INVARIANT (Prop 1): for any grid size, schedule family, solver and
     random model/init, SRDS at the iteration cap == sequential solve."""
+    assume(any(n % d == 0 for d in range(2, n)))  # prime N: resolve raises
     model = _model(seed, 4)
     sched = to_f64(make_schedule(kind, n))
     cfg = SolverConfig(solver, noise_key=jax.random.PRNGKey(seed ^ 0xABCD))
@@ -51,11 +52,20 @@ def test_srds_always_equals_sequential(n, seed, solver, kind):
 @given(n=st.integers(min_value=4, max_value=64),
        b_hint=st.integers(min_value=1, max_value=64))
 def test_resolve_blocks_invariants(n, b_hint):
-    """B*S == N always; B respects an explicit divisor hint."""
-    b, s = resolve_blocks(n, None)
-    assert b * s == n and 1 <= b <= n
-    b2, s2 = resolve_blocks(n, b_hint)
-    assert b2 * s2 == n
+    """Composite N: auto-selection returns a nontrivial split with B*S == N.
+    Prime N raises (never a silent serial fallback).  Explicit hints are
+    honored exactly when they divide N and rejected otherwise."""
+    if any(n % d == 0 for d in range(2, n)):
+        b, s = resolve_blocks(n, None)
+        assert b * s == n and 1 < b < n
+    else:
+        with pytest.raises(ValueError):
+            resolve_blocks(n, None)
+    if b_hint <= n and n % b_hint == 0:
+        assert resolve_blocks(n, b_hint) == (b_hint, n // b_hint)
+    else:
+        with pytest.raises(ValueError):
+            resolve_blocks(n, b_hint)
 
 
 @settings(max_examples=8, deadline=None)
