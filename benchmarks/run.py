@@ -5,7 +5,7 @@ import time
 
 from . import (prop4_blocksize, table1_pixel, table2_sd, table3_pipelined,
                table4_paradigms, table5_solvers, table6_devices,
-               table8_tolerance)
+               table8_tolerance, table9_batched, table10_slo)
 
 TABLES = [
     ("table1 (pixel diffusion, N=1024)", table1_pixel.main),
@@ -15,6 +15,8 @@ TABLES = [
     ("table5 (other solvers)", table5_solvers.main),
     ("table6 (device scaling)", table6_devices.main),
     ("table8 (tolerance ablation)", table8_tolerance.main),
+    ("table9 (batched serving)", table9_batched.main),
+    ("table10 (SLO scheduling)", table10_slo.main),
     ("prop4 (block-size optimum)", prop4_blocksize.main),
 ]
 

@@ -1,0 +1,45 @@
+"""CI bench smoke: a CI-sized run of the two serving benchmarks
+(table9 batched slot-recycling, table10 SLO scheduling) written to a JSON
+artifact — the seed of the serving-perf trajectory.
+
+Usage (what .github/workflows/ci.yml runs):
+
+    PYTHONPATH=src python -m benchmarks.serve_smoke --out BENCH_serve.json
+
+Sizes are deliberately small (a couple of minutes on a cold CPU runner);
+the numbers that matter are the hardware-independent ones — evals/sample
+savings and virtual-clock latency/SLO metrics — which are identical to the
+full-size runs' shape and bit-deterministic, so regressions diff cleanly
+across workflow artifacts.
+"""
+import argparse
+import json
+import platform
+
+import jax
+
+from . import table9_batched, table10_slo
+
+
+def main(out: str = "BENCH_serve.json"):
+    payload = {
+        "meta": {
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+        },
+        # CI-sized: 12 requests over 2 batch sizes / 40 requests per trace
+        "table9_batched": table9_batched.main(requests=12,
+                                              batch_sizes=(1, 4)),
+        "table10_slo": table10_slo.main(n_requests=40, rate=380.0),
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {out}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    main(ap.parse_args().out)

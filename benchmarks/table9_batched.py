@@ -25,17 +25,18 @@ TOLS = [1e-2, 1e-3, 1e-4, 1e-5, 3e-3, 1e-4, 1e-2, 1e-5]
 REQUESTS = 24
 
 
-def make_queue():
+def make_queue(requests: int = REQUESTS):
     return [SampleRequest(seed=i, tol=TOLS[i % len(TOLS)])
-            for i in range(REQUESTS)]
+            for i in range(requests)]
 
 
-def main():
+def main(requests: int = REQUESTS, batch_sizes=(1, 2, 4, 8)):
+    rows = []
     model_fn = toy_denoiser(dim=16)
-    for k in (1, 2, 4, 8):
+    for k in batch_sizes:
         eng = DiffusionSamplingEngine(model_fn, (16,), SolverConfig("ddim"),
                                       num_steps=N, batch_size=k)
-        reqs = make_queue()
+        reqs = make_queue(requests)
         rids = [eng.submit(r) for r in reqs]
         out = eng.drain()
         st = eng.stats()
@@ -54,6 +55,12 @@ def main():
              f"saving={100 * (1 - eff / lock_per):.1f}%;"
              f"physical={st['physical_evals_per_sample']:.1f};"
              f"iters_min={min(iters)};iters_max={max(iters)}")
+        rows.append(dict(batch=k, evals_per_sample=eff,
+                         lockstep_evals_per_sample=lock_per,
+                         saving_pct=100 * (1 - eff / lock_per),
+                         physical_per_sample=st["physical_evals_per_sample"],
+                         iters_min=min(iters), iters_max=max(iters)))
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,19 +1,45 @@
 #!/usr/bin/env bash
 # Tier-1 verify — the one command CI and humans both run (see ROADMAP.md).
-# Usage: scripts/check.sh [extra pytest args]
+# Usage: scripts/check.sh [--fast] [extra pytest args]
+#   --fast: skip tests marked slow/distributed (the CI matrix legs run this;
+#           a separate full leg runs everything).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+FAST=0
+ARGS=()
+for a in "$@"; do
+  case "$a" in
+    --fast) FAST=1 ;;
+    *) ARGS+=("$a") ;;
+  esac
+done
+
 # Compat-policy lint (ROADMAP "Runtime-compat policy"): APIs that drifted
 # across the JAX 0.4 -> 0.5 boundary may only be touched through
-# repro.compat — direct call sites anywhere else fail the build.
-if violations=$(grep -rnE 'jax\.shard_map\(|jax\.experimental\.shard_map|jax\.make_mesh\(' \
+# repro.compat — direct call sites anywhere else fail the build.  This
+# includes jax.tree_map / jax.tree_util.tree_map (jax.tree_map was removed
+# in 0.5; compat.tree is the blessed spelling).
+if violations=$(grep -rnE 'jax\.shard_map\(|jax\.experimental\.shard_map|jax\.make_mesh\(|jax\.tree_util\.tree_map\(|jax\.tree_map\(' \
       --include='*.py' src tests benchmarks examples \
       | grep -v '^src/repro/compat\.py:'); then
   echo "compat-policy lint FAILED: drifted JAX APIs called outside repro.compat" >&2
   echo "${violations}" >&2
-  echo "Use repro.compat.shard_map / repro.compat.make_mesh instead (ROADMAP.md)." >&2
+  echo "Use repro.compat.shard_map / make_mesh / tree instead (ROADMAP.md)." >&2
   exit 1
 fi
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+# Artifact lint (the PR 1 -> 2 regression class): build caches and dry-run
+# experiment outputs must never be tracked.
+if tracked=$(git ls-files | grep -E '(^|/)__pycache__(/|$)|\.pyc$|^experiments/dryrun'); then
+  echo "artifact lint FAILED: build/experiment artifacts are tracked in git" >&2
+  echo "${tracked}" >&2
+  echo "git rm --cached them and keep .gitignore covering the pattern." >&2
+  exit 1
+fi
+
+if [[ "${FAST}" == "1" ]]; then
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    exec python -m pytest -x -q -m "not slow and not distributed" "${ARGS[@]+"${ARGS[@]}"}"
+fi
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "${ARGS[@]+"${ARGS[@]}"}"

@@ -7,7 +7,8 @@ gating, result assembly) lives in :mod:`repro.core.engine`; the samplers in
 from .schedules import DiffusionSchedule, make_schedule
 from .solvers import SolverConfig, solve, solver_step, solver_names
 from .sequential import SampleStats, sample_sequential, sequential_stats
-from .engine import SRDSConfig, SRDSResult, resolve_blocks
+from .engine import (IterationCost, SRDSConfig, SRDSResult, iteration_cost,
+                     predicted_evals, resolve_blocks)
 from .parareal import srds_sample, srds_stats
 from .paradigms import ParaDiGMSConfig, ParaDiGMSResult, paradigms_sample, paradigms_stats
 
@@ -16,5 +17,6 @@ __all__ = [
     "SolverConfig", "solve", "solver_step", "solver_names",
     "SampleStats", "sample_sequential", "sequential_stats",
     "SRDSConfig", "SRDSResult", "resolve_blocks", "srds_sample", "srds_stats",
+    "IterationCost", "iteration_cost", "predicted_evals",
     "ParaDiGMSConfig", "ParaDiGMSResult", "paradigms_sample", "paradigms_stats",
 ]

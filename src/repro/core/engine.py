@@ -139,6 +139,38 @@ def resolve_blocks(n_steps: int, num_blocks: Optional[int]) -> Tuple[int, int]:
     return num_blocks, n_steps // num_blocks
 
 
+class IterationCost(NamedTuple):
+    """Per-lane model-eval cost of one SRDS run, split by phase.
+
+    ``init_evals`` is the sequential coarse sweep (B coarse steps);
+    ``refine_evals`` is one Parareal refinement (B*S parallel fine steps +
+    the B-step sequential corrector sweep).  All counts are in *model
+    evals* — the paper's hardware-independent unit — already scaled by the
+    solver's evals-per-step.
+    """
+    init_evals: int
+    refine_evals: int
+
+
+def iteration_cost(num_steps: int, num_blocks: Optional[int] = None,
+                   evals_per_step: int = 1) -> IterationCost:
+    """The engine's eval accounting, exported for cost-model consumers.
+
+    Both the serving layer's per-request ``model_evals`` charge and the
+    scheduler's completion-time predictor derive from this one function, so
+    admission decisions and billing can never disagree with what the
+    refinement loop actually executes.
+    """
+    B, S = resolve_blocks(num_steps, num_blocks)
+    return IterationCost(init_evals=B * evals_per_step,
+                         refine_evals=(B * S + B) * evals_per_step)
+
+
+def predicted_evals(cost: IterationCost, iterations: int) -> int:
+    """Total per-lane evals for a run that takes ``iterations`` refinements."""
+    return cost.init_evals + iterations * cost.refine_evals
+
+
 def parareal_update(y, g_cur, g_prev, use_fused: bool = False):
     """Predictor-corrector update (Alg 1, line 11): ``y + G_cur - G_prev``."""
     if use_fused:

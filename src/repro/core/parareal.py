@@ -12,8 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .engine import (SRDSConfig, SRDSResult, resolve_blocks,
-                     result_from_state, run_parareal)
+from .engine import (SRDSConfig, SRDSResult, iteration_cost, predicted_evals,
+                     resolve_blocks, result_from_state, run_parareal)
 from .schedules import DiffusionSchedule
 from .sequential import SampleStats
 from .solvers import ModelFn, SolverConfig, solve
@@ -80,7 +80,7 @@ def srds_stats(sched: DiffusionSchedule, solver: SolverConfig, cfg: SRDSConfig,
     B, S = resolve_blocks(sched.num_steps, cfg.num_blocks)
     e = solver.evals_per_step
     k = int(iterations)
-    total = e * (B + k * (B * S + B))
+    total = predicted_evals(iteration_cost(sched.num_steps, cfg.num_blocks, e), k)
     if pipelined:
         serial = e * (B + k * (S + 1))
     else:

@@ -174,6 +174,22 @@ def batch_shardings(mesh, batch, batch_axes):
     return compat.tree.map(rule, batch)
 
 
+def microbatch_spec(data_axis: str) -> P:
+    """PartitionSpec for a serving micro-batch sharded over ``data_axis``.
+
+    The diffusion sampling service's slot batch stacks K independent samples
+    on one axis; the per-iteration fine solves see a ``(B, K, *sample)``
+    block-heads tensor.  Sharding K over a data axis needs no collectives —
+    every lane's refinement is independent — so the spec is just
+    ``P(None, data_axis)``: block dim replicated (or handled separately by
+    the block/time axis inside the shard_map body), K split, trailing sample
+    dims implicitly replicated (PartitionSpec pads with None).  Callers must
+    check ``K % axis_size == 0``; uneven slot batches are a config error,
+    not something to pad silently.
+    """
+    return P(None, data_axis)
+
+
 def cache_shardings(cfg: ArchConfig, mesh, cache, parallel: ParallelCtx, *,
                     kv_seq_shard: bool = True):
     """Decode-cache layout: batch over (pod, data); KV sequence over model

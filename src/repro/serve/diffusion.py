@@ -2,11 +2,17 @@
 
 :class:`DiffusionSamplingEngine` mirrors :class:`repro.serve.engine.
 ServingEngine` for diffusion workloads: callers ``submit`` sampling
-requests carrying their own ``(tol, num_steps, seed)``, the engine packs
-*compatible* requests (same trajectory grid — the micro-batch shares one
-block decomposition and one compiled program) into fixed-size micro-batches
-of ``batch_size`` slots, and drives the Parareal refinement loop one
-iteration at a time across the whole batch.
+requests carrying their own ``(tol, num_steps, seed)`` — and, for
+SLO-aware serving, an ``arrival_time`` plus a ``deadline``/``slo_ms`` —
+the engine packs *compatible* requests into fixed-size micro-batches of
+``batch_size`` slots, and drives the Parareal refinement loop one
+iteration at a time across each batch.
+
+The compatibility key is ``(num_steps, solver, schedule, sample shape)``:
+requests agreeing on all four share one block decomposition and one
+compiled init/step program; anything else runs in its own micro-batch
+group, so a mixed workload can never silently share (and retrace) a
+compiled program that doesn't match its math.
 
 Slot recycling is the throughput story: convergence is gated **per slot**
 (the engine's per-sample semantics — every slot's refinement is
@@ -19,30 +25,48 @@ with recycling it pays ``sum_k(iters_k)`` (plus a drain tail), which is
 where the "effective model evals per sample" win in
 ``benchmarks/table9_batched.py`` comes from.
 
+Arrival-aware serving rides a deterministic **virtual clock**: every
+engine step advances ``clock`` by its *physical* model-eval cost times
+``sec_per_eval`` (the deployment's calibrated per-eval wall time), so
+latency, SLO-attainment and goodput numbers are bit-reproducible
+discrete-event quantities, not wall-clock noise.  The admission *policy*
+(who gets a freed slot, who is rejected or preempted) lives in
+:mod:`repro.serve.scheduler`; this module only exposes the mechanism:
+``admit`` / ``step_once`` / ``evict`` / ``free_slots``.
+
 What the engine does / does not guarantee:
 
 * per-request exactness: each returned sample equals the single-request
-  SRDS result for that ``(tol, num_steps, seed)`` — admission order and
-  batch-mates do not perturb it (converged/empty lanes are frozen with
-  ``jnp.where``, never fed back);
+  SRDS result for that ``(tol, num_steps, seed, solver, schedule)`` —
+  admission order, batch-mates and preemption of *other* requests do not
+  perturb it (converged/empty lanes are frozen with ``jnp.where``, never
+  fed back);
 * eval accounting is *effective* (per-active-slot): lockstep SPMD still
   computes masked lanes, so physical compute equals effective compute only
   while the queue keeps every slot busy — exactly the heavy-traffic regime
   the service targets.  ``stats()`` reports both so the gap is visible;
-* no preemption and no cross-``num_steps`` batching: requests on different
-  grids run in separate micro-batch groups (one compiled program each);
+* no cross-key batching: requests on different grids/solvers/schedules/
+  shapes run in separate micro-batch groups (one compiled program each);
 * deterministic solvers only for the exactness guarantee — the frozen-noise
   ``ddpm`` solver draws noise shaped like the *batch*, so its lanes differ
   from single-request runs (same distribution, different realization).
+  ``submit`` therefore **rejects** ``ddpm`` requests unless the engine was
+  built with ``allow_inexact=True`` (an explicit caller opt-in).
 
-The refinement step can optionally run block-parallel under ``shard_map``
-(``mesh``/``axis``): fine solves execute locally per device slice of the
-block axis and are re-joined with one ``all_gather`` per iteration — the
-same layout as :func:`repro.core.pipelined.srds_sharded_local`.
+Parallelism hooks (both ride :mod:`repro.compat` wrappers):
+
+* ``axis`` — shard the *block* dim of each refinement's fine solves
+  (``shard_map`` + one ``all_gather`` per iteration, the
+  :func:`repro.core.pipelined.srds_sharded_local` layout);
+* ``data_axis`` — shard the *slot batch* (K) over a data mesh axis: lanes
+  are independent, so the fine solves split with no collectives at all
+  (specs from :func:`repro.parallel.sharding.microbatch_spec`).  Both
+  axes compose on a 2D mesh.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -51,30 +75,84 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.engine import (coarse_init_sweep, convergence_norm,
-                               corrector_sweep, resolve_blocks)
+from repro.core.engine import (IterationCost, coarse_init_sweep,
+                               convergence_norm, corrector_sweep,
+                               iteration_cost, predicted_evals,
+                               resolve_blocks)
 from repro.core.schedules import DiffusionSchedule, make_schedule
-from repro.core.solvers import ModelFn, SolverConfig, solve
+from repro.core.solvers import ModelFn, SolverConfig, solve, solver_names
+from repro.parallel.sharding import microbatch_spec
 
-__all__ = ["SampleRequest", "SampleResponse", "DiffusionSamplingEngine"]
+__all__ = ["SampleRequest", "SampleResponse", "CompletionRecord",
+           "DiffusionSamplingEngine"]
 
 
 @dataclasses.dataclass
 class SampleRequest:
     """One sampling job: draw x_init ~ N(0, I) from ``seed`` and run SRDS
-    to the requester's tolerance on a ``num_steps`` grid."""
+    to the requester's tolerance on a ``num_steps`` grid.
+
+    ``arrival_time`` (virtual seconds) and ``deadline``/``slo_ms`` make the
+    request schedulable: ``deadline`` is absolute on the engine clock,
+    ``slo_ms`` is relative to arrival (``deadline`` wins when both are
+    set); neither set means "best effort" (infinite deadline).
+    ``solver``/``schedule``/``shape`` override the engine defaults and
+    become part of the compatibility key.  ``iters_hint`` is the caller's
+    expected refinement count for cost-model admission (policies fall back
+    to the worst-case ``max_iters`` when absent).
+    """
     seed: int
     tol: float = 1e-3
     num_steps: Optional[int] = None      # None -> engine default grid
+    arrival_time: float = 0.0            # virtual seconds
+    slo_ms: Optional[float] = None       # relative deadline (ms past arrival)
+    deadline: Optional[float] = None     # absolute virtual-clock deadline
+    solver: Optional[SolverConfig] = None   # None -> engine default
+    schedule: Optional[str] = None       # None -> engine default
+    shape: Optional[Tuple[int, ...]] = None  # None -> engine default
+    iters_hint: Optional[int] = None     # expected SRDS iterations (cost model)
+
+    def absolute_deadline(self) -> float:
+        if self.deadline is not None:
+            return float(self.deadline)
+        if self.slo_ms is not None:
+            return self.arrival_time + self.slo_ms / 1e3
+        return math.inf
 
 
 @dataclasses.dataclass
 class SampleResponse:
-    sample: np.ndarray
+    sample: Optional[np.ndarray]         # None only for status="preempted"
     iterations: int
     final_delta: float
     delta_history: np.ndarray            # (iterations,) — converged prefix
     model_evals: int                     # effective evals charged to this job
+    status: str = "ok"                   # "ok" | "preempted"
+    arrival_time: float = 0.0
+    finish_time: float = 0.0             # virtual-clock completion
+    latency: float = 0.0                 # finish - arrival (virtual seconds)
+    deadline: float = math.inf
+    slo_met: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class CompletionRecord:
+    """Host-side latency ledger entry (one per finished/preempted request)."""
+    rid: int
+    arrival_time: float
+    finish_time: float
+    deadline: float
+    latency: float
+    slo_met: bool
+    status: str
+
+
+def _solver_fp(solver: SolverConfig):
+    """Hashable fingerprint of a SolverConfig (noise_key may be an array)."""
+    nk = solver.noise_key
+    nk_fp = None if nk is None else np.asarray(nk).tobytes()
+    return (solver.name, solver.eta, solver.use_fused_kernel, solver.unroll,
+            nk_fp)
 
 
 class _Slot:
@@ -87,20 +165,154 @@ class _Slot:
         self.history: List[float] = []
 
 
+class _MicroBatch:
+    """State of one compatibility group's K-slot batch (one compiled
+    init/step program).  The engine owns admission/step ordering; this
+    class owns the device tensors and per-slot bookkeeping."""
+
+    def __init__(self, engine: "DiffusionSamplingEngine", n: int,
+                 schedule: str, shape: Tuple[int, ...], solver: SolverConfig):
+        self.engine = engine
+        self.n = n
+        self.schedule = schedule
+        self.shape = shape
+        self.solver = solver
+        (self.init_fn, self.step_fn, self.B, self.S) = \
+            engine._build_program(n, schedule, shape, solver)
+        self.cost: IterationCost = iteration_cost(n, engine.num_blocks,
+                                                  solver.evals_per_step)
+        self.max_iters = engine.max_iters if engine.max_iters is not None \
+            else self.B
+        K = engine.batch_size
+        self.x_init = jnp.zeros((K,) + shape, engine.dtype)
+        self.x_tail = jnp.zeros((self.B, K) + shape, engine.dtype)
+        self.prev_coarse = jnp.zeros_like(self.x_tail)
+        self.active = np.zeros((K,), bool)
+        self.slots: List[Optional[_Slot]] = [None] * K
+        self.newly: List[int] = []
+
+    # ------------------------------------------------------------- capacity
+
+    def free_slots(self) -> int:
+        return sum(1 for s in self.slots if s is None)
+
+    def busy(self) -> bool:
+        return any(s is not None for s in self.slots)
+
+    # ------------------------------------------------------------ admission
+
+    def admit(self, rid: int, req: SampleRequest) -> int:
+        """Place a request into a free slot (init happens at the next step)."""
+        for k, s in enumerate(self.slots):
+            if s is None:
+                x0 = jax.random.normal(jax.random.PRNGKey(req.seed),
+                                       self.shape, self.engine.dtype)
+                self.x_init = self.x_init.at[k].set(x0)
+                self.slots[k] = _Slot(rid, req)
+                self.active[k] = True
+                self.newly.append(k)
+                return k
+        raise RuntimeError("admit() called with no free slot")
+
+    def evict(self, rid: int) -> Tuple[SampleRequest, SampleResponse]:
+        """Preempt a running request: free its slot, discard its lane.
+
+        Frozen-lane masking means batch-mates are untouched — eviction only
+        forfeits the evicted request's own (partial) refinement work.
+        """
+        for k, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                self.slots[k] = None
+                self.active[k] = False
+                uninitialized = k in self.newly
+                if uninitialized:
+                    self.newly.remove(k)
+                return s.req, SampleResponse(
+                    sample=None, iterations=s.iters,
+                    final_delta=s.history[-1] if s.history else float("inf"),
+                    delta_history=np.asarray(s.history, np.float32),
+                    # a lane evicted before its coarse init ran did no work
+                    model_evals=0 if uninitialized
+                    else predicted_evals(self.cost, s.iters),
+                    status="preempted")
+        raise KeyError(f"request {rid} is not running in this batch")
+
+    # ----------------------------------------------------------------- step
+
+    def step(self):
+        """Init newly admitted lanes, run one lockstep refinement, finalize
+        converged slots.  Returns ``(completions, effective_evals,
+        physical_evals)`` where completions are ``(rid, req, response)``."""
+        K = self.engine.batch_size
+        eff = phys = 0
+        if self.newly:
+            # coarse-init the fixed batch; write back only the new lanes
+            # (occupied lanes must keep their refined trajectories)
+            tail0 = self.init_fn(self.x_init)
+            m = jnp.zeros((K,), bool).at[jnp.asarray(self.newly)].set(True)
+            m = m.reshape((1, K) + (1,) * len(self.shape))
+            self.x_tail = jnp.where(m, tail0, self.x_tail)
+            self.prev_coarse = jnp.where(m, tail0, self.prev_coarse)
+            eff += len(self.newly) * self.cost.init_evals
+            phys += K * self.cost.init_evals
+            self.newly = []
+
+        amask = jnp.asarray(self.active)
+        self.x_tail, self.prev_coarse, delta = self.step_fn(
+            self.x_init, self.x_tail, self.prev_coarse, amask)
+        n_active = int(self.active.sum())
+        eff += n_active * self.cost.refine_evals
+        phys += K * self.cost.refine_evals
+
+        delta_np = np.asarray(delta)
+        completed: List[Tuple[int, SampleRequest, SampleResponse]] = []
+        tail_np = None
+        for k in range(K):
+            slot = self.slots[k]
+            if slot is None or not self.active[k]:
+                continue
+            slot.iters += 1
+            slot.history.append(float(delta_np[k]))
+            # f32 compare, matching the engine's still_refining gate
+            if (delta_np[k] < np.float32(slot.req.tol)
+                    or slot.iters >= self.max_iters):
+                if tail_np is None:
+                    tail_np = np.asarray(self.x_tail[-1])
+                completed.append((slot.rid, slot.req, SampleResponse(
+                    sample=np.asarray(tail_np[k]),
+                    iterations=slot.iters,
+                    final_delta=slot.history[-1],
+                    delta_history=np.asarray(slot.history, np.float32),
+                    model_evals=predicted_evals(self.cost, slot.iters))))
+                self.slots[k] = None
+                self.active[k] = False
+        return completed, eff, phys
+
+
 class DiffusionSamplingEngine:
-    """Micro-batching SRDS sampling service with per-slot convergence gating.
+    """Micro-batching SRDS sampling service with per-slot convergence gating
+    and a deterministic virtual clock for SLO-aware scheduling.
 
     Args:
       model_fn:     eps-predictor ``(x, t) -> eps`` (batched over leading x
                     axes).
-      sample_shape: per-sample tensor shape (no batch axis).
-      solver:       shared solver config for all requests.
-      schedule:     schedule family name (``make_schedule`` key).
+      sample_shape: default per-sample tensor shape (no batch axis).
+      solver:       default solver config (requests may override).
+      schedule:     default schedule family name (``make_schedule`` key).
       num_steps:    default grid size for requests that don't pin one.
-      batch_size:   K — slots per micro-batch (one compiled program).
+      batch_size:   K — slots per micro-batch (one compiled program per
+                    compatibility group).
       num_blocks / max_iters / norm: SRDS knobs, as in ``SRDSConfig``.
-      mesh / axis:  optional device mesh: run each refinement's fine solves
-                    block-parallel under ``shard_map`` along ``axis``.
+      mesh / axis:  optional device mesh + *block* axis name: run each
+                    refinement's fine solves block-parallel under
+                    ``shard_map``.
+      data_axis:    optional *data* axis name on ``mesh``: shard the K slot
+                    batch itself (requires ``batch_size`` divisible by the
+                    axis size).  Composes with ``axis`` on a 2D mesh.
+      allow_inexact: accept stochastic (``ddpm``) solvers despite the
+                    lane-exactness caveat (see module docstring).
+      sec_per_eval: virtual seconds charged per *physical* model eval —
+                    the deterministic clock behind latency/SLO metrics.
     """
 
     def __init__(self, model_fn: ModelFn, sample_shape: Tuple[int, ...],
@@ -109,6 +321,8 @@ class DiffusionSamplingEngine:
                  batch_size: int = 4, num_blocks: Optional[int] = None,
                  max_iters: Optional[int] = None, norm: str = "l1_mean",
                  mesh=None, axis: Optional[str] = None,
+                 data_axis: Optional[str] = None,
+                 allow_inexact: bool = False, sec_per_eval: float = 1e-6,
                  dtype=jnp.float32):
         self.model_fn = model_fn
         self.sample_shape = tuple(sample_shape)
@@ -121,71 +335,285 @@ class DiffusionSamplingEngine:
         self.norm = norm
         self.mesh = mesh
         self.axis = axis
+        self.data_axis = data_axis
+        self.allow_inexact = allow_inexact
+        self.sec_per_eval = sec_per_eval
         self.dtype = dtype
+        if data_axis is not None:
+            if mesh is None:
+                raise ValueError("data_axis requires a mesh")
+            d = mesh.shape[data_axis]
+            if batch_size % d != 0:
+                raise ValueError(
+                    f"batch_size={batch_size} not divisible by data axis "
+                    f"size {d}")
         self._queue: List[Tuple[int, SampleRequest]] = []
         self._next_rid = 0
-        self._programs: Dict[int, Tuple[Callable, Callable, int, int]] = {}
+        self._programs: Dict[tuple, Tuple[Callable, Callable, int, int]] = {}
+        self._batches: Dict[tuple, _MicroBatch] = {}
+        self._rr = 0                      # round-robin cursor over batches
+        self._first_arrival: Optional[float] = None
         # effective (per-active-slot) vs physical (per-lane) eval accounting
         self.effective_evals = 0
         self.physical_evals = 0
         self.requests_served = 0
+        self.clock = 0.0                  # virtual seconds
+        self.records: List[CompletionRecord] = []
 
     # ------------------------------------------------------------------ API
+
+    def _resolve(self, req: SampleRequest):
+        """(num_steps, schedule, shape, solver) with engine defaults filled."""
+        n = req.num_steps if req.num_steps is not None else self.num_steps
+        schedule = req.schedule if req.schedule is not None else self.schedule
+        shape = tuple(req.shape) if req.shape is not None \
+            else self.sample_shape
+        solver = req.solver if req.solver is not None else self.solver
+        return n, schedule, shape, solver
+
+    def compat_key(self, req: SampleRequest) -> tuple:
+        """The batching compatibility key: requests agreeing on
+        (num_steps, schedule, shape, solver) share one micro-batch group
+        and one compiled program.  Hashable (policies may group by it)."""
+        n, schedule, shape, solver = self._resolve(req)
+        return (n, schedule, shape, _solver_fp(solver))
 
     def submit(self, req: SampleRequest) -> int:
         """Enqueue a request; returns its id (key into ``drain()``'s dict).
 
-        Invalid requests (e.g. a grid with no block decomposition) are
-        rejected here, so they can never poison an already-queued batch.
+        Invalid requests are rejected here, so they can never poison an
+        already-queued batch: unservable grids (no block decomposition),
+        unknown solvers/schedules, and — unless the engine was built with
+        ``allow_inexact=True`` — the stochastic ``ddpm`` solver, whose
+        batch-shaped noise breaks the per-request lane-exactness guarantee
+        (ROADMAP caveat: same distribution, different realization than the
+        single-request run).
         """
-        n = req.num_steps if req.num_steps is not None else self.num_steps
+        n, schedule, shape, solver = self._resolve(req)
         resolve_blocks(n, self.num_blocks)   # raises on an unservable grid
+        if solver.name not in solver_names():
+            raise ValueError(f"unknown solver {solver.name!r}; "
+                             f"have {solver_names()}")
+        make_schedule(schedule, n)           # raises on an unknown family
+        if solver.name == "ddpm" and not self.allow_inexact:
+            raise ValueError(
+                "stochastic 'ddpm' solver draws batch-shaped noise, so "
+                "per-request lane-exactness vs the single-request run is "
+                "NOT guaranteed under micro-batching; construct the engine "
+                "with allow_inexact=True to accept distribution-level "
+                "(not bitwise) results.")
         rid = self._next_rid
         self._next_rid += 1
+        self._first_arrival = req.arrival_time \
+            if self._first_arrival is None \
+            else min(self._first_arrival, req.arrival_time)
         self._queue.append((rid, req))
         return rid
 
     def drain(self) -> Dict[int, SampleResponse]:
         """Run every queued request to convergence; returns rid -> response.
 
-        Requests are grouped by grid size (the compatibility key) and each
-        group is served by one fixed-size micro-batch with slot recycling.
+        FIFO admission over the scheduling primitives below: requests are
+        admitted into free slots of their compatibility group's micro-batch
+        as slots recycle; busy batches step round-robin.  Arrival times and
+        deadlines are *recorded* (the virtual clock always runs) but not
+        enforced — SLO-aware admission lives in
+        :func:`repro.serve.scheduler.simulate`.
         """
         results: Dict[int, SampleResponse] = {}
-        by_grid: Dict[int, List[Tuple[int, SampleRequest]]] = {}
-        for rid, req in self._queue:
-            n = req.num_steps if req.num_steps is not None else self.num_steps
-            by_grid.setdefault(n, []).append((rid, req))
-        self._queue.clear()
-        for n, group in sorted(by_grid.items()):
-            results.update(self._drain_group(n, group))
+        queue = self.pull_queue()
+        while queue or self.busy():
+            remaining: List[Tuple[int, SampleRequest]] = []
+            for rid, req in queue:
+                # not-yet-arrived requests wait: admitting one would warp
+                # the clock past co-batched requests' actual service time
+                if req.arrival_time <= self.clock and self.free_slots(req) > 0:
+                    self.admit(rid, req)
+                else:
+                    remaining.append((rid, req))
+            queue = remaining
+            if self.busy():
+                for rid, resp in self.step_once():
+                    results[rid] = resp
+            elif queue:
+                # idle with only future-stamped work: jump to its arrival
+                self.advance_clock(min(r.arrival_time for _, r in queue))
         return results
 
     def stats(self) -> Dict[str, float]:
         served = max(self.requests_served, 1)
+        lats = [r.latency for r in self.records if r.status == "ok"]
+        with_slo = [r for r in self.records if math.isfinite(r.deadline)]
+        met = sum(1 for r in self.records if r.status == "ok" and r.slo_met)
+        p50, p95, p99 = (np.percentile(lats, [50, 95, 99])
+                         if lats else (0.0, 0.0, 0.0))
+        # goodput over the served span (first *submitted* arrival -> now),
+        # matching SimReport's makespan denominator — idle time before a
+        # late-starting trace must not dilute it, and a rejected first
+        # arrival (which leaves no completion record) still anchors it
+        start = self._first_arrival if self._first_arrival is not None \
+            else min((r.arrival_time for r in self.records), default=0.0)
+        span = self.clock - start
         return {
             "requests_served": self.requests_served,
             "effective_evals": self.effective_evals,
             "physical_evals": self.physical_evals,
             "effective_evals_per_sample": self.effective_evals / served,
             "physical_evals_per_sample": self.physical_evals / served,
+            # virtual-clock latency/SLO metrics (0.0 / 1.0 when idle)
+            "latency_p50": float(p50),
+            "latency_p95": float(p95),
+            "latency_p99": float(p99),
+            # fraction of deadline-carrying requests that finished in time
+            "slo_attainment": (sum(1 for r in with_slo
+                                   if r.status == "ok" and r.slo_met)
+                               / len(with_slo)) if with_slo else 1.0,
+            # SLO-met completions per virtual second (deadline-free requests
+            # always count as met)
+            "goodput_rps": met / span if span > 0 else 0.0,
+            "virtual_time": self.clock,
         }
+
+    def reset_metrics(self) -> None:
+        """Zero the clock, eval counters and latency ledger (compiled
+        programs are kept — resets are for back-to-back deterministic
+        simulation runs on one warm engine)."""
+        if self.busy() or self._queue:
+            raise RuntimeError("reset_metrics() with requests in flight")
+        self._next_rid = 0
+        self._rr = 0
+        self._first_arrival = None
+        # drop (empty) batch state: the set of instantiated groups feeds the
+        # round-robin scan order, so a warm run must rebuild it exactly as a
+        # fresh run would.  Compiled programs stay cached — no recompile.
+        self._batches = {}
+        self.effective_evals = 0
+        self.physical_evals = 0
+        self.requests_served = 0
+        self.clock = 0.0
+        self.records = []
+
+    # ------------------------------------------------- scheduling primitives
+
+    def pull_queue(self) -> List[Tuple[int, SampleRequest]]:
+        """Take ownership of the submitted-but-unadmitted queue (scheduler
+        policies reorder/reject it; ``drain`` serves it FIFO)."""
+        q, self._queue = self._queue, []
+        return q
+
+    def _batch_for(self, req: SampleRequest) -> _MicroBatch:
+        key = self.compat_key(req)
+        if key not in self._batches:
+            n, schedule, shape, solver = self._resolve(req)
+            self._batches[key] = _MicroBatch(self, n, schedule, shape, solver)
+        return self._batches[key]
+
+    def free_slots(self, req: SampleRequest) -> int:
+        """Free slots in ``req``'s compatibility group's micro-batch.
+
+        A read-only query: a group nobody was admitted to yet is all-free
+        and is NOT instantiated (no device buffers, no compile) — batches
+        materialize in ``admit``.
+        """
+        b = self._batches.get(self.compat_key(req))
+        return self.batch_size if b is None else b.free_slots()
+
+    def admit(self, rid: int, req: SampleRequest) -> None:
+        """Place a validated request into its group's batch (a free slot
+        must exist — check ``free_slots`` first).  Work on a request cannot
+        start before it arrives, so the clock catches up to its
+        ``arrival_time`` (keeps ``drain()`` latencies non-negative)."""
+        self.advance_clock(req.arrival_time)
+        self._batch_for(req).admit(rid, req)
+
+    def busy(self) -> bool:
+        return any(b.busy() for b in self._batches.values())
+
+    def step_once(self) -> List[Tuple[int, SampleResponse]]:
+        """One lockstep refinement on the next busy micro-batch
+        (round-robin), advancing the virtual clock by the step's physical
+        eval cost.  Returns completions finalized by this step."""
+        batches = list(self._batches.values())
+        if not batches:
+            return []
+        for off in range(len(batches)):
+            b = batches[(self._rr + off) % len(batches)]
+            if b.busy():
+                self._rr = (self._rr + off + 1) % len(batches)
+                completed, eff, phys = b.step()
+                self.effective_evals += eff
+                self.physical_evals += phys
+                self.clock += phys * self.sec_per_eval
+                return [(rid, self._finalize(rid, req, resp))
+                        for rid, req, resp in completed]
+        return []
+
+    def evict(self, rid: int) -> SampleResponse:
+        """Preempt a running request (scheduler policy decision); its
+        partial work is discarded and recorded as status="preempted"."""
+        for b in self._batches.values():
+            try:
+                req, resp = b.evict(rid)
+            except KeyError:
+                continue
+            return self._finalize(rid, req, resp)
+        raise KeyError(f"request {rid} is not running")
+
+    def advance_clock(self, until: float) -> None:
+        """Idle the engine forward (no work to do before the next arrival)."""
+        self.clock = max(self.clock, until)
+
+    def predict_completion(self, req: SampleRequest,
+                           now: Optional[float] = None) -> float:
+        """Cost-model completion estimate (virtual seconds) if ``req`` were
+        admitted now: the engine's own per-iteration eval accounting
+        (:func:`repro.core.engine.iteration_cost`) times the physical K-lane
+        width, for ``iters_hint`` refinements (worst-case ``max_iters`` when
+        the caller gave no hint).  Optimistic: assumes the request's batch
+        steps back-to-back (no cross-group contention)."""
+        now = self.clock if now is None else now
+        n, _, _, solver = self._resolve(req)
+        cost = iteration_cost(n, self.num_blocks, solver.evals_per_step)
+        B, _ = resolve_blocks(n, self.num_blocks)
+        cap = self.max_iters if self.max_iters is not None else B
+        iters = req.iters_hint if req.iters_hint is not None else cap
+        iters = min(iters, cap)
+        evals = self.batch_size * predicted_evals(cost, iters)
+        return now + evals * self.sec_per_eval
+
+    def _finalize(self, rid: int, req: SampleRequest,
+                  resp: SampleResponse) -> SampleResponse:
+        """Stamp virtual-clock latency/SLO fields and ledger the outcome."""
+        resp.arrival_time = req.arrival_time
+        resp.finish_time = self.clock
+        resp.latency = self.clock - req.arrival_time
+        resp.deadline = req.absolute_deadline()
+        resp.slo_met = resp.status == "ok" and self.clock <= resp.deadline
+        if resp.status == "ok":
+            self.requests_served += 1
+        self.records.append(CompletionRecord(
+            rid=rid, arrival_time=resp.arrival_time,
+            finish_time=resp.finish_time, deadline=resp.deadline,
+            latency=resp.latency, slo_met=resp.slo_met, status=resp.status))
+        return resp
 
     # ------------------------------------------------------- compiled cells
 
-    def _program(self, n: int):
-        """(init_fn, step_fn, B, S) for grid size ``n`` (cached per grid)."""
-        if n in self._programs:
-            return self._programs[n]
+    def _build_program(self, n: int, schedule: str, shape: Tuple[int, ...],
+                       solver: SolverConfig):
+        """(init_fn, step_fn, B, S) for one compatibility group (cached)."""
+        key = (n, schedule, shape, _solver_fp(solver))
+        if key in self._programs:
+            return self._programs[key]
         B, S = resolve_blocks(n, self.num_blocks)
-        sched = make_schedule(self.schedule, n)
+        sched = make_schedule(schedule, n)
         # run the schedule in the engine's working dtype so results match a
         # standalone srds_sample on the same-dtype schedule bit for bit
         sched = DiffusionSchedule(ab=sched.ab.astype(self.dtype),
                                   t_model=sched.t_model.astype(self.dtype),
                                   kind=sched.kind)
         starts = jnp.arange(B, dtype=jnp.int32) * S
-        model_fn, solver, norm = self.model_fn, self.solver, self.norm
+        model_fn, norm = self.model_fn, self.norm
 
         def G(x, i0):
             return solve(model_fn, sched, solver, x, i0, 1, S)
@@ -193,29 +621,7 @@ class DiffusionSamplingEngine:
         def F(x, i0):
             return solve(model_fn, sched, solver, x, i0, S, 1)
 
-        if self.mesh is not None:
-            axis = self.axis
-            d_axis = self.mesh.shape[axis]
-            if B % d_axis != 0:
-                raise ValueError(
-                    f"num_blocks={B} not divisible by axis size {d_axis}")
-
-            def fine_local(x_heads):
-                d = compat.axis_size(axis)
-                me = jax.lax.axis_index(axis)
-                b_local = B // d
-                my = jax.lax.dynamic_slice_in_dim(x_heads, me * b_local,
-                                                  b_local)
-                my_starts = jax.lax.dynamic_slice_in_dim(starts, me * b_local,
-                                                         b_local)
-                y_local = jax.vmap(F)(my, my_starts)
-                return jax.lax.all_gather(y_local, axis, tiled=True)
-
-            fine = compat.shard_map(fine_local, mesh=self.mesh, in_specs=P(),
-                                    out_specs=P(), check_vma=False)
-        else:
-            def fine(x_heads):
-                return jax.vmap(F)(x_heads, starts)
+        fine = self._make_fine(F, starts, B)
 
         @jax.jit
         def init_fn(x_init):
@@ -239,80 +645,49 @@ class DiffusionSamplingEngine:
             delta = jnp.where(active, delta, jnp.inf)
             return new_tail, cur_all, delta
 
-        self._programs[n] = (init_fn, step_fn, B, S)
-        return self._programs[n]
+        self._programs[key] = (init_fn, step_fn, B, S)
+        return self._programs[key]
 
-    # ------------------------------------------------------ the batch loop
+    def _make_fine(self, F, starts, B: int):
+        """The fine-solve hook: vmapped in one program, or shard_mapped over
+        the block axis (``axis``), the slot batch (``data_axis``), or both.
 
-    def _drain_group(self, n: int, group: List[Tuple[int, SampleRequest]]):
-        init_fn, step_fn, B, S = self._program(n)
-        max_iters = self.max_iters if self.max_iters is not None else B
-        e = self.solver.evals_per_step
-        K = self.batch_size
-        shape = (K,) + self.sample_shape
+        Block parallelism slices the local blocks by ``axis_index`` and
+        re-joins them with one tiled ``all_gather`` per iteration (the
+        :func:`repro.core.pipelined.srds_sharded_local` layout); slot-batch
+        parallelism needs no collectives at all — lanes are independent, so
+        ``shard_map`` just splits the K axis with
+        :func:`repro.parallel.sharding.microbatch_spec`.
+        """
+        if self.mesh is None or (self.axis is None and self.data_axis is None):
+            def fine(x_heads):
+                return jax.vmap(F)(x_heads, starts)
+            return fine
 
-        x_init = jnp.zeros(shape, self.dtype)
-        x_tail = jnp.zeros((B,) + shape, self.dtype)
-        prev_coarse = jnp.zeros((B,) + shape, self.dtype)
-        active = np.zeros((K,), bool)
-        slots: List[Optional[_Slot]] = [None] * K
-        pending = list(group)
-        results: Dict[int, SampleResponse] = {}
+        heads_spec = microbatch_spec(self.data_axis) \
+            if self.data_axis is not None else P()
 
-        def finalize(k: int, slot: _Slot, tail_np):
-            results[slot.rid] = SampleResponse(
-                sample=np.asarray(tail_np[k]),
-                iterations=slot.iters,
-                final_delta=slot.history[-1] if slot.history else float("inf"),
-                delta_history=np.asarray(slot.history, np.float32),
-                model_evals=(B + slot.iters * (B * S + B)) * e)
-            self.requests_served += 1
-            slots[k] = None
-            active[k] = False
+        if self.axis is not None:
+            axis = self.axis
+            d_axis = self.mesh.shape[axis]
+            if B % d_axis != 0:
+                raise ValueError(
+                    f"num_blocks={B} not divisible by axis size {d_axis}")
 
-        while pending or any(s is not None for s in slots):
-            # ---- admit queued requests into free slots ----
-            newly = []
-            for k in range(K):
-                if slots[k] is None and pending:
-                    rid, req = pending.pop(0)
-                    x0 = jax.random.normal(jax.random.PRNGKey(req.seed),
-                                           self.sample_shape, self.dtype)
-                    x_init = x_init.at[k].set(x0)
-                    slots[k] = _Slot(rid, req)
-                    active[k] = True
-                    newly.append(k)
-            if newly:
-                # coarse-init the fixed batch; write back only the new lanes
-                # (occupied lanes must keep their refined trajectories)
-                tail0 = init_fn(x_init)
-                m = jnp.zeros((K,), bool).at[jnp.asarray(newly)].set(True)
-                m = m.reshape((1, K) + (1,) * len(self.sample_shape))
-                x_tail = jnp.where(m, tail0, x_tail)
-                prev_coarse = jnp.where(m, tail0, prev_coarse)
-                self.effective_evals += len(newly) * B * e
-                self.physical_evals += K * B * e
+            def fine_local(x_heads):
+                d = compat.axis_size(axis)
+                me = jax.lax.axis_index(axis)
+                b_local = B // d
+                my = jax.lax.dynamic_slice_in_dim(x_heads, me * b_local,
+                                                  b_local)
+                my_starts = jax.lax.dynamic_slice_in_dim(starts, me * b_local,
+                                                         b_local)
+                y_local = jax.vmap(F)(my, my_starts)
+                return jax.lax.all_gather(y_local, axis, tiled=True)
+        else:
+            def fine_local(x_heads):
+                return jax.vmap(F)(x_heads, starts)
 
-            # ---- one lockstep refinement across all occupied slots ----
-            amask = jnp.asarray(active)
-            x_tail, prev_coarse, delta = step_fn(x_init, x_tail, prev_coarse,
-                                                 amask)
-            n_active = int(active.sum())
-            self.effective_evals += n_active * (B * S + B) * e
-            self.physical_evals += K * (B * S + B) * e
-
-            delta_np = np.asarray(delta)
-            tail_np = None
-            for k in range(K):
-                slot = slots[k]
-                if slot is None or not active[k]:
-                    continue
-                slot.iters += 1
-                slot.history.append(float(delta_np[k]))
-                # f32 compare, matching the engine's still_refining gate
-                if (delta_np[k] < np.float32(slot.req.tol)
-                        or slot.iters >= max_iters):
-                    if tail_np is None:
-                        tail_np = np.asarray(x_tail[-1])
-                    finalize(k, slot, tail_np)
-        return results
+        return compat.shard_map(fine_local, mesh=self.mesh,
+                                in_specs=heads_spec, out_specs=heads_spec,
+                                check_vma=False)

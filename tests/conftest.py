@@ -12,6 +12,16 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def pytest_configure(config):
+    """CI tiers (see scripts/check.sh): ``--fast`` runs
+    ``-m "not slow and not distributed"``; the full leg runs everything."""
+    config.addinivalue_line(
+        "markers", "slow: long-running test (excluded by check.sh --fast)")
+    config.addinivalue_line(
+        "markers", "distributed: spawns subprocesses with fake multi-device "
+        "meshes (excluded by check.sh --fast)")
+
+
 def run_subprocess(code: str, devices: int = 8, timeout: int = 900, env_extra=None):
     """Run a python snippet with N fake devices; return CompletedProcess."""
     env = dict(os.environ)

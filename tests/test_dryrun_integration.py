@@ -5,6 +5,8 @@ import pytest
 
 from conftest import run_subprocess
 
+pytestmark = [pytest.mark.slow, pytest.mark.distributed]
+
 CODE_TEMPLATE = r"""
 import jax, dataclasses as dc
 from repro.compat import make_mesh

@@ -1,0 +1,389 @@
+"""Arrival-aware SLO scheduler: policies, determinism, exactness, cost
+model, compat-key grouping, and the ddpm lane-exactness guard.
+
+Everything here rides the engine's virtual clock (physical model evals x
+sec_per_eval), so every latency number is a discrete-event quantity —
+bit-reproducible across runs — and the per-request samples must stay
+bit-exact vs single-request ``srds_sample`` under EVERY policy (policies
+reorder admission; they never touch running-lane math)."""
+import math
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SolverConfig, SRDSConfig, iteration_cost,
+                        make_schedule, predicted_evals, srds_sample,
+                        srds_stats)
+from repro.serve import (EDF, FIFO, CostAware, DiffusionSamplingEngine,
+                         SampleRequest, Tier, bursty_trace, poisson_trace,
+                         simulate)
+from conftest import to_f64
+
+TIERS = [Tier(tol=1e-2, slo_ms=25, iters_hint=2, weight=0.96),
+         Tier(tol=1e-6, slo_ms=400, iters_hint=7, weight=0.04)]
+
+
+def _elementwise_model(dim=8):
+    scale = jnp.linspace(0.5, 1.5, dim)
+
+    def model_fn(x, t):
+        return jnp.tanh(x * scale) * (0.5 + 0.001 * t)
+
+    return model_fn
+
+
+def _engine(model, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("sec_per_eval", 1e-5)
+    return DiffusionSamplingEngine(model, (8,), SolverConfig("ddim"),
+                                   num_steps=64, dtype=jnp.float64, **kw)
+
+
+# --------------------------------------------------------------------------
+# traces + simulate determinism
+# --------------------------------------------------------------------------
+
+def test_trace_generators_deterministic():
+    a = poisson_trace(20, rate=100.0, tiers=TIERS, seed=7)
+    b = poisson_trace(20, rate=100.0, tiers=TIERS, seed=7)
+    assert [(r.arrival_time, r.tol, r.slo_ms) for r in a] == \
+           [(r.arrival_time, r.tol, r.slo_ms) for r in b]
+    c = bursty_trace(3, 5, period=0.5, tiers=TIERS, seed=7, jitter=0.01)
+    d = bursty_trace(3, 5, period=0.5, tiers=TIERS, seed=7, jitter=0.01)
+    assert [(r.arrival_time, r.tol) for r in c] == \
+           [(r.arrival_time, r.tol) for r in d]
+    # different seeds genuinely differ
+    e = poisson_trace(20, rate=100.0, tiers=TIERS, seed=8)
+    assert [r.arrival_time for r in a] != [r.arrival_time for r in e]
+
+
+@pytest.mark.parametrize("policy_cls", [FIFO, EDF, CostAware])
+def test_simulate_bit_deterministic(policy_cls):
+    """Same trace + policy + engine config -> identical SimReport, down to
+    sample bits, on a fresh AND on a warm (program-cached) engine — with a
+    trace spanning TWO compatibility groups, so the round-robin cursor's
+    reset is exercised too."""
+    model = _elementwise_model()
+    trace = poisson_trace(12, rate=300.0, tiers=TIERS, seed=0)
+    for r in trace[::3]:
+        r.num_steps = 36      # second compat group
+    eng = _engine(model)
+    r1 = simulate(eng, trace, policy_cls())
+    r2 = simulate(eng, trace, policy_cls())          # warm engine, reset clock
+    r3 = simulate(_engine(model), trace, policy_cls())  # fresh engine
+    for other in (r2, r3):
+        assert sorted(r1.responses) == sorted(other.responses)
+        for rid in r1.responses:
+            assert r1.responses[rid].latency == other.responses[rid].latency
+            assert r1.responses[rid].finish_time == \
+                other.responses[rid].finish_time
+            np.testing.assert_array_equal(r1.responses[rid].sample,
+                                          other.responses[rid].sample)
+        assert (r1.latency_p50, r1.latency_p95, r1.latency_p99) == \
+               (other.latency_p50, other.latency_p95, other.latency_p99)
+        assert r1.physical_evals == other.physical_evals
+
+
+# --------------------------------------------------------------------------
+# per-request exactness under every policy
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy_cls", [FIFO, EDF, CostAware])
+def test_policies_preserve_bit_exactness(policy_cls):
+    """Admission order must never perturb a sample: every completed request
+    equals the single-request srds_sample result bit for bit."""
+    model = _elementwise_model()
+    trace = poisson_trace(10, rate=300.0, tiers=TIERS, seed=1)
+    rep = simulate(_engine(model), trace, policy_cls())
+    assert not rep.rejected and not rep.preempted
+    assert len(rep.responses) == len(trace)
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    # simulate() submits in arrival order -> rid i is the i-th of the
+    # arrival-sorted trace
+    ordered = sorted(trace, key=lambda r: r.arrival_time)
+    for rid, req in enumerate(ordered):
+        x0 = jax.random.normal(jax.random.PRNGKey(req.seed), (8,),
+                               jnp.float64)
+        ind = srds_sample(model, sched, SolverConfig("ddim"), x0[None],
+                          SRDSConfig(tol=req.tol))
+        r = rep.responses[rid]
+        assert bool(np.all(r.sample == np.asarray(ind.sample[0]))), rid
+        assert r.iterations == int(ind.iterations), rid
+
+
+# --------------------------------------------------------------------------
+# EDF vs FIFO, cost-model admission, preemption
+# --------------------------------------------------------------------------
+
+def test_edf_beats_fifo_p95_on_fixed_trace():
+    """The tentpole's latency claim, pinned to a fixed Poisson trace: under
+    load, FIFO's head-of-line blocking (a rare heavy request stalls the
+    herd of light ones behind it) inflates p95; EDF's deadline order is
+    effectively shortest-job-first here and dodges it."""
+    model = _elementwise_model()
+    trace = poisson_trace(100, rate=380.0, tiers=TIERS, seed=0)
+    eng = _engine(model)
+    fifo = simulate(eng, trace, FIFO())
+    edf = simulate(eng, trace, EDF())
+    assert len(fifo.responses) == len(edf.responses) == len(trace)
+    assert edf.latency_p95 < fifo.latency_p95, \
+        (edf.latency_p95, fifo.latency_p95)
+    assert edf.slo_attainment >= fifo.slo_attainment
+
+
+def test_cost_model_matches_engine_accounting():
+    """predict_completion must be the engine's own iteration_cost arithmetic
+    — admission decisions and billing can never disagree."""
+    model = _elementwise_model()
+    eng = _engine(model)
+    req = SampleRequest(seed=0, tol=1e-3, iters_hint=3)
+    cost = iteration_cost(64, None, 1)
+    expect = eng.clock + eng.batch_size * predicted_evals(cost, 3) \
+        * eng.sec_per_eval
+    assert eng.predict_completion(req) == expect
+    # no hint -> worst case max_iters (= B)
+    req2 = SampleRequest(seed=0, tol=1e-3)
+    expect2 = eng.clock + eng.batch_size * predicted_evals(cost, 8) \
+        * eng.sec_per_eval
+    assert eng.predict_completion(req2) == expect2
+    # and srds_stats' total rides the same export
+    sched = make_schedule("ddpm_linear", 64)
+    st = srds_stats(sched, SolverConfig("ddim"), SRDSConfig(), 3)
+    assert st.total_evals == predicted_evals(cost, 3)
+
+
+def test_cost_aware_rejects_hopeless_requests():
+    """A request whose optimistic predicted completion already misses its
+    deadline is shed at admission; feasible batch-mates are unaffected."""
+    model = _elementwise_model()
+    eng = _engine(model)
+    # worst case for a 64-grid run: (B + B*(B*S+B)) * K evals * 1e-5 s/eval
+    # = 11.68 ms -> a 1 ms SLO is hopeless, a 1 s SLO is comfortable
+    trace = [SampleRequest(seed=0, tol=1e-6, arrival_time=0.0, slo_ms=1.0),
+             SampleRequest(seed=1, tol=1e-2, arrival_time=0.0, slo_ms=1000.0,
+                           iters_hint=2)]
+    rep = simulate(eng, trace, CostAware())
+    assert rep.rejected == [0]
+    assert sorted(rep.responses) == [1]
+    assert rep.responses[1].slo_met
+    # FIFO happily runs it (and the ledger shows the SLO miss)
+    rep_fifo = simulate(eng, trace, FIFO())
+    assert not rep_fifo.rejected
+    assert not rep_fifo.responses[0].slo_met
+    assert rep_fifo.slo_attainment < 1.0
+
+
+def test_cost_aware_preempts_blown_deadline():
+    """With preempt=True a runner whose deadline already passed is evicted
+    when a still-feasible request waits — and the survivor's sample is
+    STILL bit-exact (frozen-lane masking shields batch-mates)."""
+    model = _elementwise_model()
+    eng = _engine(model, batch_size=1)   # single slot forces the conflict
+    # iters_hint=1 lies optimistically: the request passes admission control
+    # (predicted 0.8 ms < 3 ms SLO) but actually refines for ~7 iterations,
+    # blowing its deadline mid-flight
+    trace = [SampleRequest(seed=0, tol=1e-6, arrival_time=0.0, slo_ms=3.0,
+                           iters_hint=1),
+             SampleRequest(seed=1, tol=1e-2, arrival_time=0.004,
+                           slo_ms=1000.0, iters_hint=2)]
+    rep = simulate(eng, trace, CostAware(preempt=True))
+    assert rep.preempted == [0]
+    assert sorted(rep.responses) == [1]
+    r = rep.responses[1]
+    assert r.slo_met
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (8,), jnp.float64)
+    ind = srds_sample(model, sched, SolverConfig("ddim"), x0[None],
+                      SRDSConfig(tol=1e-2))
+    assert bool(np.all(r.sample == np.asarray(ind.sample[0])))
+    # without preemption the late runner hogs the only slot to convergence
+    rep2 = simulate(eng, trace, CostAware(preempt=False))
+    assert not rep2.preempted and sorted(rep2.responses) == [0, 1]
+
+
+# --------------------------------------------------------------------------
+# compatibility key: (grid, solver, schedule, shape)
+# --------------------------------------------------------------------------
+
+def test_compat_key_splits_solver_schedule_shape():
+    """Mixed solver/schedule/shape workloads must not share one compiled
+    program — and every request still matches its own single-request run
+    bit for bit."""
+    model = _elementwise_model()
+    eng = _engine(model, batch_size=2)
+    reqs = [SampleRequest(seed=0, tol=1e-3),
+            SampleRequest(seed=1, tol=1e-3, solver=SolverConfig("heun")),
+            SampleRequest(seed=2, tol=1e-3, schedule="cosine"),
+            SampleRequest(seed=3, tol=1e-3, num_steps=36)]
+    rids = [eng.submit(r) for r in reqs]
+    out = eng.drain()
+    assert len(eng._batches) == 4          # four distinct compat groups
+    for rid, req in zip(rids, reqs):
+        n = req.num_steps or 64
+        sched = to_f64(make_schedule(req.schedule or "ddpm_linear", n))
+        solver = req.solver or SolverConfig("ddim")
+        x0 = jax.random.normal(jax.random.PRNGKey(req.seed), (8,),
+                               jnp.float64)
+        ind = srds_sample(model, sched, solver, x0[None],
+                          SRDSConfig(tol=req.tol))
+        assert bool(np.all(out[rid].sample == np.asarray(ind.sample[0]))), rid
+        assert out[rid].iterations == int(ind.iterations), rid
+
+
+def test_compat_key_shape_override():
+    model = _elementwise_model(dim=4)
+
+    def model_any(x, t):     # elementwise model independent of trailing dim
+        return jnp.tanh(x) * (0.5 + 0.001 * t)
+
+    eng = DiffusionSamplingEngine(model_any, (8,), SolverConfig("ddim"),
+                                  num_steps=64, batch_size=2,
+                                  dtype=jnp.float64)
+    r1 = eng.submit(SampleRequest(seed=0, tol=1e-3))
+    r2 = eng.submit(SampleRequest(seed=1, tol=1e-3, shape=(4,)))
+    out = eng.drain()
+    assert out[r1].sample.shape == (8,)
+    assert out[r2].sample.shape == (4,)
+    assert len(eng._batches) == 2
+
+
+# --------------------------------------------------------------------------
+# submit-time validation (incl. the ddpm lane-exactness guard)
+# --------------------------------------------------------------------------
+
+def test_submit_rejects_ddpm_without_optin():
+    model = _elementwise_model()
+    eng = _engine(model)
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="lane-exactness"):
+        eng.submit(SampleRequest(seed=0,
+                                 solver=SolverConfig("ddpm", noise_key=key)))
+    # engine-default ddpm is guarded too
+    eng2 = DiffusionSamplingEngine(model, (8,),
+                                   SolverConfig("ddpm", noise_key=key),
+                                   num_steps=64, dtype=jnp.float64)
+    with pytest.raises(ValueError, match="lane-exactness"):
+        eng2.submit(SampleRequest(seed=0))
+    # the queue stays clean: nothing to drain
+    assert eng.drain() == {}
+
+
+def test_submit_accepts_ddpm_with_optin():
+    model = _elementwise_model()
+    eng = _engine(model, allow_inexact=True)
+    key = jax.random.PRNGKey(0)
+    rid = eng.submit(SampleRequest(seed=0, tol=1e-3,
+                                   solver=SolverConfig("ddpm",
+                                                       noise_key=key)))
+    out = eng.drain()
+    assert out[rid].iterations >= 1
+    assert np.all(np.isfinite(out[rid].sample))
+
+
+def test_submit_rejects_unknown_solver_and_schedule():
+    model = _elementwise_model()
+    eng = _engine(model)
+    with pytest.raises(KeyError):
+        SampleRequest(seed=0, solver=SolverConfig("rk9")).solver.evals_per_step
+    with pytest.raises(ValueError, match="unknown solver"):
+        eng.submit(SampleRequest(seed=0, solver=SolverConfig("rk9")))
+    with pytest.raises(ValueError, match="unknown schedule"):
+        eng.submit(SampleRequest(seed=0, schedule="not_a_schedule"))
+    assert eng.drain() == {}
+
+
+# --------------------------------------------------------------------------
+# stats surface
+# --------------------------------------------------------------------------
+
+def test_stats_latency_and_goodput_counters():
+    model = _elementwise_model()
+    eng = _engine(model)
+    trace = poisson_trace(8, rate=300.0, tiers=TIERS, seed=3)
+    rep = simulate(eng, trace, EDF())
+    st = eng.stats()
+    assert st["requests_served"] == 8
+    assert 0.0 < st["latency_p50"] <= st["latency_p95"] <= st["latency_p99"]
+    assert st["latency_p95"] == rep.latency_p95
+    assert 0.0 <= st["slo_attainment"] <= 1.0
+    # engine goodput == report goodput: both span first-arrival -> idle
+    assert st["goodput_rps"] == rep.goodput_rps > 0
+    assert st["virtual_time"] > 0
+    # deadline-free requests never count against attainment
+    eng2 = _engine(model)
+    for i in range(3):
+        eng2.submit(SampleRequest(seed=i, tol=1e-3))
+    eng2.drain()
+    assert eng2.stats()["slo_attainment"] == 1.0
+    # a REJECTED first arrival (no completion record) still anchors the
+    # goodput span, so engine stats and SimReport agree even then
+    eng3 = _engine(model)
+    trace = [SampleRequest(seed=0, tol=1e-6, arrival_time=0.0, slo_ms=1.0),
+             SampleRequest(seed=1, tol=1e-2, arrival_time=0.5,
+                           slo_ms=1000.0, iters_hint=2)]
+    rep3 = simulate(eng3, trace, CostAware())
+    assert rep3.rejected == [0]
+    assert eng3.stats()["goodput_rps"] == pytest.approx(rep3.goodput_rps)
+
+
+def test_hold_back_policy_waits_for_next_arrival():
+    """A policy may legally return None from select() to hold requests back
+    (e.g. waiting to co-batch); simulate() must jump the clock to the next
+    arrival instead of declaring the engine wedged — and must still raise
+    when nothing can ever unblock the policy."""
+    model = _elementwise_model()
+
+    class CoBatch(FIFO):
+        name = "cobatch"
+
+        def select(self, now, queue, engine):
+            if len(queue) < 2 and not engine.busy():
+                return None          # wait for a batch-mate before starting
+            return super().select(now, queue, engine)
+
+    trace = [SampleRequest(seed=0, tol=1e-2, arrival_time=0.0),
+             SampleRequest(seed=1, tol=1e-2, arrival_time=0.05)]
+    rep = simulate(_engine(model), trace, CoBatch())
+    assert sorted(rep.responses) == [0, 1]
+    # request 0 was held until request 1 arrived at t=0.05
+    assert rep.responses[0].latency >= 0.05
+    with pytest.raises(RuntimeError, match="admitted nothing"):
+        simulate(_engine(model), trace[:1], CoBatch())
+
+
+def test_drain_clock_catches_up_to_arrival():
+    """drain() ignores deadlines but must keep the ledger honest for
+    future-stamped arrivals: no negative latencies, and admitting a
+    far-future request must not warp the clock past co-batched work."""
+    model = _elementwise_model()
+    eng = _engine(model)
+    eng.submit(SampleRequest(seed=0, tol=1e-2, arrival_time=10.0))
+    out = eng.drain()
+    assert out[0].latency >= 0.0
+    assert eng.stats()["latency_p50"] >= 0.0
+    assert eng.clock >= 10.0
+    # a present request batched alongside a far-future one keeps its own
+    # (small) latency and meets its SLO
+    eng2 = _engine(model, batch_size=4)
+    ra = eng2.submit(SampleRequest(seed=0, tol=1e-2, arrival_time=0.0,
+                                   slo_ms=100.0))
+    rb = eng2.submit(SampleRequest(seed=1, tol=1e-2, arrival_time=1000.0))
+    out2 = eng2.drain()
+    assert out2[ra].slo_met and out2[ra].latency < 0.1
+    assert out2[rb].latency >= 0.0
+    assert eng2.stats()["slo_attainment"] == 1.0
+
+
+def test_data_axis_requires_divisible_batch():
+    model = _elementwise_model()
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
+    # divisible: fine
+    _engine(model, batch_size=2, mesh=mesh, data_axis="data")
+    with pytest.raises(ValueError, match="data_axis requires a mesh"):
+        _engine(model, batch_size=2, data_axis="data")

@@ -53,6 +53,8 @@ def test_engine_ragged_batch():
 # sharding rules (pure unit tests on PartitionSpecs — no devices needed)
 # --------------------------------------------------------------------------
 
+@pytest.mark.slow
+@pytest.mark.distributed
 def test_param_sharding_rules_subprocess():
     from conftest import run_subprocess
     code = r"""
@@ -102,6 +104,8 @@ print("SHARDING RULES OK")
         f"{r.stdout}\n{r.stderr[-3000:]}"
 
 
+@pytest.mark.slow
+@pytest.mark.distributed
 def test_cache_sharding_rules_subprocess():
     from conftest import run_subprocess
     code = r"""

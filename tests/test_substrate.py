@@ -136,6 +136,8 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
         ck.restore(jax.eval_shape(lambda: bad))
 
 
+@pytest.mark.slow
+@pytest.mark.distributed
 def test_checkpoint_elastic_reshard_subprocess():
     """Save on a 4-device mesh, restore onto a 2-device mesh (scale-down) —
     values identical, shardings follow the new mesh."""
@@ -242,6 +244,8 @@ def test_permanent_fault_saves_state(tmp_path):
 # gradient compression
 # --------------------------------------------------------------------------
 
+@pytest.mark.slow
+@pytest.mark.distributed
 def test_compressed_allreduce_subprocess():
     """int8 error-feedback DP training tracks uncompressed DP closely."""
     from conftest import run_subprocess
