@@ -1,0 +1,96 @@
+"""CI regression gate for the core-hot-path benchmark (BENCH_core.json).
+
+Compares a freshly emitted ``benchmarks.table11_truncation`` artifact
+against the committed baseline and fails on a >20% evals/sample
+regression.  Only the *deterministic* fields are gated — physical model
+evals per sample (``evals_truncated``) and the truncation saving — never
+wall-clock, which is runner noise.  A baseline row that disappears is a
+failure too (silently dropping a measured config is how regressions hide).
+
+Usage (what .github/workflows/ci.yml runs):
+
+    PYTHONPATH=src python -m benchmarks.table11_truncation --out BENCH_core.json
+    PYTHONPATH=src python -m benchmarks.check_bench_core \
+        --current BENCH_core.json \
+        --baseline benchmarks/baselines/BENCH_core_baseline.json
+
+Refreshing the baseline after an intentional perf change: re-run the
+emitter and commit the new JSON to ``benchmarks/baselines/``.
+"""
+import argparse
+import json
+import sys
+
+TOLERANCE = 0.20      # fail when evals/sample grows by more than this
+
+
+def check(current: dict, baseline: dict, tolerance: float = TOLERANCE):
+    """Returns a list of failure strings (empty = gate passes).
+
+    Eval counts and the truncation saving ratio are pure arithmetic of
+    the iteration count, so they are compared only when the run's
+    iteration count matches the baseline's — a ±1-iteration shift near a
+    tolerance knife-edge (e.g. a JAX version changing residual roundoff;
+    the bench-smoke leg installs the unpinned latest) is an upstream
+    numerical matter, not a hot-loop regression.  Bit-identity is a
+    property of XLA's shape-dependent kernel selection, so it is gated
+    only when the artifact's (jax_version, backend) match the baseline's
+    — on a drifted environment it is informational.
+    """
+    failures = []
+    cur_rows = {r["name"]: r for r in current.get("rows", [])}
+    cm, bm = current.get("meta", {}), baseline.get("meta", {})
+    same_env = (cm.get("jax_version"), cm.get("backend")) == \
+        (bm.get("jax_version"), bm.get("backend"))
+    for base in baseline.get("rows", []):
+        name = base["name"]
+        cur = cur_rows.get(name)
+        if cur is None:
+            failures.append(f"{name}: row missing from current artifact")
+            continue
+        if cur.get("iterations") == base.get("iterations"):
+            for field in ("evals_truncated", "evals_untruncated"):
+                b, c = base[field], cur[field]
+                if c > b * (1.0 + tolerance):
+                    failures.append(
+                        f"{name}: {field} regressed {b} -> {c} "
+                        f"(+{100.0 * (c / b - 1.0):.1f}% > "
+                        f"{100 * tolerance:.0f}%)")
+        if same_env and base.get("bit_identical") \
+                and not cur.get("bit_identical"):
+            failures.append(f"{name}: truncated run no longer bit-identical")
+        # the tentpole claim itself is part of the contract — but the
+        # saving ratio is also pure arithmetic of the iteration count, so
+        # it only gates when the counts match (same reason as evals_*)
+        if cur.get("iterations") == base.get("iterations") \
+                and base["evals_saving_pct"] >= 25.0 \
+                > cur["evals_saving_pct"]:
+            failures.append(
+                f"{name}: truncation saving fell below 25% "
+                f"({cur['evals_saving_pct']:.1f}%)")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline, args.tolerance)
+    if failures:
+        print("BENCH_core regression gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print(f"BENCH_core gate OK ({len(baseline.get('rows', []))} rows within "
+          f"{100 * args.tolerance:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

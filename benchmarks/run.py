@@ -5,7 +5,8 @@ import time
 
 from . import (prop4_blocksize, table1_pixel, table2_sd, table3_pipelined,
                table4_paradigms, table5_solvers, table6_devices,
-               table8_tolerance, table9_batched, table10_slo)
+               table8_tolerance, table9_batched, table10_slo,
+               table11_truncation)
 
 TABLES = [
     ("table1 (pixel diffusion, N=1024)", table1_pixel.main),
@@ -17,6 +18,7 @@ TABLES = [
     ("table8 (tolerance ablation)", table8_tolerance.main),
     ("table9 (batched serving)", table9_batched.main),
     ("table10 (SLO scheduling)", table10_slo.main),
+    ("table11 (prefix truncation)", table11_truncation.main),
     ("prop4 (block-size optimum)", prop4_blocksize.main),
 ]
 

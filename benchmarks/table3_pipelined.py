@@ -25,9 +25,10 @@ sched = DiffusionSchedule(ab=sched.ab.astype(jnp.float64),
 x0 = jax.random.normal(jax.random.PRNGKey(1), (1, 8), dtype=jnp.float64)
 samp = make_pipelined_sampler(mesh, "time", model_fn, sched,
                               SolverConfig("ddim"), SRDSConfig(tol=1e-4))
-res, steps = samp(x0)
+res, steps, evals = samp(x0)
 ref = sample_sequential(model_fn, sched, SolverConfig("ddim"), x0)
 print(json.dumps({{"supersteps": int(steps), "iters": int(res.iterations),
+                  "evals": int(evals),
                   "err": float(jnp.mean(jnp.abs(res.sample - ref)))}}))
 """
 
@@ -45,11 +46,13 @@ def main():
         out = subprocess.run([sys.executable, "-c", CODE.format(n=n, b=b)],
                              capture_output=True, text=True, env=env)
         wf = json.loads(out.stdout.strip().splitlines()[-1]) \
-            if out.returncode == 0 else {"supersteps": -1, "iters": -1, "err": -1}
+            if out.returncode == 0 else {"supersteps": -1, "iters": -1,
+                                         "evals": -1, "err": -1}
         emit(f"table3/ddim{n}", r["t_srds"] * 1e6,
              f"seq_evals={n};vanilla_eff={r['eff_serial']};"
              f"pipelined_supersteps={wf['supersteps']};"
-             f"pipelined_iters={wf['iters']};wf_err={wf['err']:.1e}")
+             f"pipelined_iters={wf['iters']};wf_evals={wf['evals']};"
+             f"wf_err={wf['err']:.1e}")
 
 
 if __name__ == "__main__":

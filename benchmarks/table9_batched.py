@@ -10,7 +10,10 @@ next request immediately; lockstep gating (the pre-batch-aware behaviour,
 one scalar residual for the whole batch) makes every sample pay for the
 slowest in its batch: ``K * max_k(iters_k)`` refinements per batch vs
 ``sum_k(iters_k)``.  Both are reported in the paper's hardware-independent
-unit (model evals per sample; DDIM = 1 eval per step).
+unit (model evals per sample; DDIM = 1 eval per step).  Since PR 4 the
+engine's effective evals are additionally *prefix-truncated* (refinement
+``p`` of a lane only pays for its non-frozen block suffix), so the saving
+vs the untruncated lockstep baseline compounds recycling + truncation.
 """
 import jax
 import jax.numpy as jnp

@@ -36,6 +36,16 @@ res = srds_sample(model_fn, sched, solver, x0, SRDSConfig(tol=1e-5))
 print(f"vanilla SRDS:     iters={int(res.iterations)} "
       f"err={float(jnp.mean(jnp.abs(res.sample-ref))):.2e}")
 
+from repro.core import iteration_cost, predicted_evals, truncated_evals
+res_t = srds_sample(model_fn, sched, solver, x0,
+                    SRDSConfig(tol=1e-5, truncate=True))
+cost = iteration_cost(N, None, 1)
+k = int(res_t.iterations)
+print(f"truncated SRDS:   iters={k} bit-identical="
+      f"{bool(jnp.all(res_t.sample == res.sample))} "
+      f"evals={truncated_evals(cost, k)} vs {predicted_evals(cost, k)} "
+      f"untruncated (converged-prefix truncation)")
+
 samp = make_sharded_sampler(mesh, "time", model_fn, sched, solver,
                             SRDSConfig(tol=1e-5, num_blocks=8))
 res = samp(x0)
@@ -44,10 +54,11 @@ print(f"block-parallel:   iters={int(res.iterations)} "
 
 samp, = [make_pipelined_sampler(mesh, "time", model_fn, sched, solver,
                                 SRDSConfig(tol=1e-5))]
-res, steps = samp(x0)
+res, steps, evals = samp(x0)
 print(f"wavefront:        iters={int(res.iterations)} supersteps={int(steps)} "
+      f"physical_evals={int(evals)} "
       f"err={float(jnp.mean(jnp.abs(res.sample-ref))):.2e}  "
-      f"(vs {N} sequential evals)")
+      f"(vs {N} sequential evals; retired devices skip theirs)")
 
 def strag(p):
     m = jnp.zeros((8,), bool).at[3].set(True)

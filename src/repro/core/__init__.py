@@ -8,7 +8,7 @@ from .schedules import DiffusionSchedule, make_schedule
 from .solvers import SolverConfig, solve, solver_step, solver_names
 from .sequential import SampleStats, sample_sequential, sequential_stats
 from .engine import (IterationCost, SRDSConfig, SRDSResult, iteration_cost,
-                     predicted_evals, resolve_blocks)
+                     predicted_evals, resolve_blocks, truncated_evals)
 from .parareal import srds_sample, srds_stats
 from .paradigms import ParaDiGMSConfig, ParaDiGMSResult, paradigms_sample, paradigms_stats
 
@@ -17,6 +17,6 @@ __all__ = [
     "SolverConfig", "solve", "solver_step", "solver_names",
     "SampleStats", "sample_sequential", "sequential_stats",
     "SRDSConfig", "SRDSResult", "resolve_blocks", "srds_sample", "srds_stats",
-    "IterationCost", "iteration_cost", "predicted_evals",
+    "IterationCost", "iteration_cost", "predicted_evals", "truncated_evals",
     "ParaDiGMSConfig", "ParaDiGMSResult", "paradigms_sample", "paradigms_stats",
 ]

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +38,28 @@ class SRDSConfig:
                   exact convergence by then).
     norm:         'l1_mean' (paper) or 'l2_mean' or 'linf'.
     use_fused_update: route the predictor-corrector update + residual
-                  accumulation through the Pallas kernel.
+                  accumulation through the Pallas kernel.  ``None`` (the
+                  default) resolves at run time to "on where supported":
+                  compiled kernels on TPU, plain jnp elsewhere (interpreted
+                  Pallas would dominate CPU runtime) — see
+                  :func:`repro.kernels.ops.fused_default`.
+    truncate:     converged-prefix truncation: refinement ``p`` runs its
+                  fine solves and corrector sweep only on the active block
+                  suffix ``[frontier, B)`` where ``frontier =
+                  prefix_frontier(p)`` is the provably *bitwise-frozen*
+                  prefix (classical Parareal exactness, lagged one
+                  refinement — see :func:`prefix_frontier`), advancing by
+                  one block per refinement.  The refinement loop unrolls
+                  over ``p`` so
+                  each iteration's suffix shape is static — strictly less
+                  work per iteration, all on device.  Results are
+                  bit-identical to the untruncated loop (same sample,
+                  iterations, delta_history) for elementwise-deterministic
+                  models; matmul denoisers match to dtype roundoff because
+                  the shrinking fine-solve batch hits shape-dependent gemm
+                  kernels (the same caveat as ``per_sample``).
+                  Incompatible with ``block_sharding`` and straggler reuse
+                  (both keep the while_loop path).
     per_sample:   gate convergence independently per sample over the leading
                   batch axis of ``x_init`` (shape ``(K, ...)``): the residual,
                   iteration counter and delta history become per-sample
@@ -52,8 +73,9 @@ class SRDSConfig:
     tol: float = 1e-3
     max_iters: Optional[int] = None
     norm: str = "l1_mean"
-    use_fused_update: bool = False
+    use_fused_update: Optional[bool] = None
     per_sample: bool = False
+    truncate: bool = False
     # Distribution hook: NamedSharding whose first axis is the parareal
     # block dim — constrains the trajectory/fine-solve tensors so GSPMD
     # maps blocks onto a mesh axis (time-parallelism on `data`).
@@ -143,13 +165,28 @@ class IterationCost(NamedTuple):
     """Per-lane model-eval cost of one SRDS run, split by phase.
 
     ``init_evals`` is the sequential coarse sweep (B coarse steps);
-    ``refine_evals`` is one Parareal refinement (B*S parallel fine steps +
-    the B-step sequential corrector sweep).  All counts are in *model
-    evals* — the paper's hardware-independent unit — already scaled by the
-    solver's evals-per-step.
+    ``refine_evals`` is one *untruncated* Parareal refinement (B*S parallel
+    fine steps + the B-step sequential corrector sweep).  All counts are in
+    *model evals* — the paper's hardware-independent unit — already scaled
+    by the solver's evals-per-step.  ``num_blocks``/``fine_steps``/
+    ``evals_per_step`` carry the decomposition so truncated refinements
+    (:meth:`refine_evals_at`) are derivable from the same record.
     """
     init_evals: int
     refine_evals: int
+    num_blocks: int = 0
+    fine_steps: int = 0
+    evals_per_step: int = 1
+
+    def refine_evals_at(self, frontier: int) -> int:
+        """Evals of one refinement truncated to the suffix ``[frontier, B)``
+        (fine solves + corrector sweep on the live blocks only).  Frontier 0
+        is the untruncated cost; the final block never retires, so the cost
+        floors at one live block."""
+        if not self.num_blocks:            # legacy record: no decomposition
+            return self.refine_evals
+        live = self.num_blocks - min(int(frontier), self.num_blocks - 1)
+        return live * (self.fine_steps + 1) * self.evals_per_step
 
 
 def iteration_cost(num_steps: int, num_blocks: Optional[int] = None,
@@ -163,17 +200,66 @@ def iteration_cost(num_steps: int, num_blocks: Optional[int] = None,
     """
     B, S = resolve_blocks(num_steps, num_blocks)
     return IterationCost(init_evals=B * evals_per_step,
-                         refine_evals=(B * S + B) * evals_per_step)
+                         refine_evals=(B * S + B) * evals_per_step,
+                         num_blocks=B, fine_steps=S,
+                         evals_per_step=evals_per_step)
 
 
-def predicted_evals(cost: IterationCost, iterations: int) -> int:
-    """Total per-lane evals for a run that takes ``iterations`` refinements."""
+def predicted_evals(cost: IterationCost, iterations: Union[int, float]):
+    """Total per-lane evals for an *untruncated* run of ``iterations``
+    refinements (the pre-truncation hot loop; kept for baselines and
+    ``truncate=False`` engines).  Linear, so float iteration estimates
+    (the EMA's) extend continuously."""
     return cost.init_evals + iterations * cost.refine_evals
 
 
-def parareal_update(y, g_cur, g_prev, use_fused: bool = False):
+def prefix_frontier(completed: int) -> int:
+    """The provably *bitwise-frozen* prefix after ``completed`` refinements.
+
+    Classical Parareal exactness makes block ``i`` mathematically exact
+    after ``i`` refinements, but bitwise stability — what truncation must
+    preserve — arrives one refinement later: a block's first value mixes a
+    coarse term from the *init* sweep with one from the *corrector* sweep
+    (two separately compiled scans whose last bits may differ), so only
+    from its second recomputation onward are both coarse terms the same
+    compiled computation on identical inputs, making the update a bitwise
+    fixed point.  Hence the frontier advances by exactly one block per
+    refinement, one refinement behind the exactness bound.
+    """
+    return max(int(completed) - 1, 0)
+
+
+def truncated_evals(cost: IterationCost, iterations: Union[int, float]):
+    """Total per-lane evals for a prefix-truncated run: refinement ``p``
+    (0-indexed) costs ``cost.refine_evals_at(prefix_frontier(p))`` because
+    its fine solves and corrector sweep cover only the non-frozen suffix —
+    the same frontier schedule :func:`run_parareal` executes, so billing
+    and benchmarks can never disagree with the loop.  A float
+    ``iterations`` (e.g. an EMA estimate) is extended continuously: the
+    fractional part is charged at the next refinement's truncated rate.
+    """
+    k = int(iterations)
+    total = cost.init_evals + sum(cost.refine_evals_at(prefix_frontier(p))
+                                  for p in range(k))
+    frac = float(iterations) - k
+    if frac > 0.0:
+        return total + frac * cost.refine_evals_at(prefix_frontier(k))
+    return total
+
+
+def resolve_fused(flag: Optional[bool]) -> bool:
+    """Resolve a ``use_fused_*`` tri-state: an explicit bool wins; ``None``
+    means "on where supported" (compiled Pallas on TPU — interpreted Pallas
+    on CPU/GPU would dominate runtime, so those stay on the jnp path)."""
+    if flag is None:
+        from repro.kernels import ops as kops
+        return kops.fused_default()
+    return bool(flag)
+
+
+def parareal_update(y, g_cur, g_prev, use_fused: Optional[bool] = False):
     """Predictor-corrector update (Alg 1, line 11): ``y + G_cur - G_prev``."""
-    if use_fused:
+    if resolve_fused(use_fused):
         from repro.kernels import ops as kops
         out, _ = kops.parareal_update(y, g_cur, g_prev)
         return out
@@ -197,12 +283,38 @@ def coarse_init_sweep(G, x_init: jnp.ndarray, starts: jnp.ndarray,
 
 def corrector_sweep(G, x_init: jnp.ndarray, y: jnp.ndarray,
                     prev_coarse: jnp.ndarray, starts: jnp.ndarray, *,
-                    use_fused: bool = False, unroll: bool = False):
+                    use_fused: bool = False, unroll: bool = False,
+                    residual_from: Optional[jnp.ndarray] = None,
+                    batched: bool = False):
     """Sequential coarse sweep + predictor-corrector (Alg 1, lines 9-12).
 
     Returns ``(new_tail, cur_all)``: the refined trajectory tail and the
     coarse results ``G(x_i^p)`` that become next iteration's prev_coarse.
+
+    ``residual_from`` (the previous trajectory tail, same shape as ``y``)
+    switches on the fused-residual feed: the Pallas update kernel's
+    per-tile L1 partials accumulate ``sum|x_new - x_old|`` in the same pass
+    as the update — no second full-tensor reduction — and the sweep returns
+    a third output, the final block's raw L1 sum (scalar, or ``(K,)`` per
+    sample with ``batched``).  Callers divide by the per-sample element
+    count to obtain the ``l1_mean`` convergence residual.  Only meaningful
+    with ``use_fused=True``; requires the fused kernel path.
     """
+    if residual_from is not None:
+        from repro.kernels import ops as kops
+
+        def sweep_r(x_cur, inp):
+            y_i, prev_i, old_i, i0 = inp
+            cur = G(x_cur, i0)
+            x_next, r = kops.parareal_update_residual(y_i, cur, prev_i, old_i,
+                                                      batched=batched)
+            return x_next, (x_next, cur, r)
+
+        _, (new_tail, cur_all, r_all) = jax.lax.scan(
+            sweep_r, x_init, (y, prev_coarse, residual_from, starts),
+            unroll=unroll)
+        return new_tail, cur_all, r_all[-1]
+
     def sweep(x_cur, inp):
         y_i, prev_i, i0 = inp
         cur = G(x_cur, i0)
@@ -213,6 +325,60 @@ def corrector_sweep(G, x_init: jnp.ndarray, y: jnp.ndarray,
                                           (y, prev_coarse, starts),
                                           unroll=unroll)
     return new_tail, cur_all
+
+
+def suffix_refinement(G, y, x_init: jnp.ndarray, x_tail: jnp.ndarray,
+                      prev_coarse: jnp.ndarray, starts: jnp.ndarray,
+                      frontier: int, *, use_fused: bool = False,
+                      norm: str = "l1_mean", batched: bool = False,
+                      unroll: bool = False):
+    """One predictor-corrector refinement truncated to ``[frontier, B)``.
+
+    The single implementation of the sliding-window refinement body,
+    shared by :func:`run_parareal`'s unrolled loop and the serving
+    engine's per-frontier step programs — the frontier plumbing (suffix
+    sweep resuming from the last frozen boundary, prefix re-concatenation,
+    fused-vs-plain residual dispatch) can never drift between the two.
+
+    ``y`` holds the fine-solve results for the suffix heads (the
+    sampler-specific part stays with the caller).  Returns ``(new_tail,
+    cur_all, resid)`` where ``resid`` is the final-block convergence
+    residual in ``norm`` (scalar, or per-sample ``(K,)`` with
+    ``batched``), computed *before* any caller-side freezing — callers
+    that mask converged lanes discard those entries, and active lanes'
+    values are unaffected by the mask.  With the fused path and
+    ``l1_mean`` the residual comes from the update kernel's per-tile L1
+    partials (no second full-tensor pass).
+    """
+    f = int(frontier)
+    fused_resid = use_fused and norm == "l1_mean"
+    # the sweep resumes from the last frozen boundary: the prefix's
+    # recomputation is a bitwise fixed point, so skipping it changes
+    # nothing downstream
+    x_carry = x_init if f == 0 else x_tail[f - 1]
+    old_sfx = x_tail[f:] if f else x_tail
+    prev_sfx = prev_coarse[f:] if f else prev_coarse
+    st = starts[f:] if f else starts
+    if fused_resid:
+        new_sfx, cur_sfx, r_sum = corrector_sweep(
+            G, x_carry, y, prev_sfx, st, use_fused=True, unroll=unroll,
+            residual_from=old_sfx, batched=batched)
+        n_per = x_init[0].size if batched else x_init.size
+        resid = (r_sum / float(n_per)).astype(jnp.float32)
+    else:
+        new_sfx, cur_sfx = corrector_sweep(G, x_carry, y, prev_sfx, st,
+                                           use_fused=use_fused,
+                                           unroll=unroll)
+        resid = None
+    if f:
+        new_tail = jnp.concatenate([x_tail[:f], new_sfx], axis=0)
+        cur_all = jnp.concatenate([prev_coarse[:f], cur_sfx], axis=0)
+    else:
+        new_tail, cur_all = new_sfx, cur_sfx
+    if resid is None:
+        resid = convergence_norm(new_tail[-1] - x_tail[-1], norm,
+                                 batched=batched)
+    return new_tail, cur_all, resid
 
 
 class RefineState(NamedTuple):
@@ -244,16 +410,20 @@ def _batch_mask(mask: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
 
 def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
                  starts: jnp.ndarray, *, tol, max_iters: int,
-                 norm: str = "l1_mean", use_fused_update: bool = False,
+                 norm: str = "l1_mean",
+                 use_fused_update: Optional[bool] = None,
                  fixed_iters: bool = False, scan_unroll: bool = False,
                  constrain=None, carry_fine_results: bool = False,
-                 batched: bool = False) -> RefineState:
+                 batched: bool = False, truncate: bool = False) -> RefineState:
     """The complete Parareal refinement loop (Alg 1 minus the fine solves).
 
-    ``fine_fn(x_heads, p, y_prev) -> y`` computes the (B, ...) fine-solve
-    results for block heads ``x_heads = [x_0, ..., x_{B-1}]`` at refinement
-    ``p`` — this is the only sampler-specific part (vmap in one program;
-    local vmap + all_gather + straggler masking under shard_map).
+    ``fine_fn(x_heads, p, y_prev) -> y`` computes the fine-solve results
+    for block heads ``x_heads`` at refinement ``p`` — this is the only
+    sampler-specific part (vmap in one program; local vmap + all_gather +
+    straggler masking under shard_map).  Untruncated, ``x_heads`` is the
+    full ``(B, ...)`` stack ``[x_0, ..., x_{B-1}]``; under ``truncate`` it
+    is the active suffix ``[x_frontier, ..., x_{B-1}]`` — samplers recover
+    the static offset as ``B - x_heads.shape[0]``.
     ``tol`` may be a python float, a traced scalar, or — with ``batched`` —
     a per-sample ``(K,)`` vector (mixed-tolerance micro-batches).
     ``constrain`` (optional) re-applies a block-dim sharding constraint to
@@ -270,8 +440,29 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
     sample converged or at ``max_iters``.  Under ``fixed_iters`` no freezing
     happens (all samples run the full budget, matching K independent
     fixed-budget runs) but the carries stay per-sample.
+
+    ``truncate`` switches the loop to converged-prefix truncation (see
+    :class:`SRDSConfig`): the loop unrolls over ``p`` so refinement ``p``
+    statically restricts its fine solves and corrector sweep to the suffix
+    ``[prefix_frontier(p), B)`` — the frozen prefix's recomputation is a
+    bitwise fixed point (see :func:`prefix_frontier`), so skipping it is a
+    no-op.
+    Early exit is preserved via ``lax.cond`` per unrolled step (the skipped
+    branch is genuinely not executed), so ``iterations``/``delta_history``
+    match the while_loop bit for bit.  Incompatible with ``constrain`` and
+    ``carry_fine_results``.
     """
+    if truncate and constrain is not None:
+        raise ValueError("truncate is incompatible with a block-sharding "
+                         "constraint (the GSPMD path keeps full-width "
+                         "trajectory tensors); drop one of the two.")
+    if truncate and carry_fine_results:
+        raise ValueError("truncate is incompatible with straggler reuse "
+                         "(carry_fine_results): stale fine results are "
+                         "indexed on the full block axis.")
     cb = constrain if constrain is not None else (lambda t: t)
+    use_fused = resolve_fused(use_fused_update)
+    B = starts.shape[0]
     # Early-exit per-sample mode freezes converged samples; fixed-iters mode
     # never gates updates (scan runs the full budget for every sample).
     gate = batched and not fixed_iters
@@ -297,26 +488,30 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
     def cond(c: RefineState):
         return jnp.logical_and(c.p < max_iters, jnp.any(c.active))
 
-    def body(c: RefineState) -> RefineState:
-        x_heads = jnp.concatenate([x_init[None], c.x_tail[:-1]], axis=0)
+    def body(c: RefineState, f: int = 0) -> RefineState:
+        """One refinement; ``f`` is the static frontier (0 = untruncated)."""
+        heads = jnp.concatenate([x_init[None], c.x_tail[:-1]], axis=0)
+        if f:
+            heads = heads[f:]
         # ---- fine solves (Alg 1, lines 7-8) — sampler-specific ----
-        y = fine_fn(x_heads, c.p, c.y_prev)
-        # ---- sequential coarse sweep + predictor-corrector (lines 9-12) --
-        new_tail, cur_all = corrector_sweep(G, x_init, y, c.prev_coarse,
-                                            starts, use_fused=use_fused_update,
-                                            unroll=scan_unroll)
+        y = fine_fn(heads, c.p, c.y_prev)
+        # ---- sequential coarse sweep + predictor-corrector (lines 9-12),
+        # truncated to the suffix — the one shared implementation ----
+        new_tail, cur_all, resid = suffix_refinement(
+            G, y, x_init, c.x_tail, c.prev_coarse, starts, f,
+            use_fused=use_fused, norm=norm, batched=batched,
+            unroll=scan_unroll)
         new_tail = cb(new_tail)
         cur_all = cb(cur_all)
         if gate:
             # converged samples' fine solves are no-ops: freeze their
             # trajectory and coarse state so they stay bit-identical to an
             # independent run that exited at their convergence iteration
+            # (their pre-mask resid entries are discarded just below)
             m = _batch_mask(c.active, new_tail)
             new_tail = jnp.where(m, new_tail, c.x_tail)
             cur_all = jnp.where(m, cur_all, c.prev_coarse)
 
-        resid = convergence_norm(new_tail[-1] - c.x_tail[-1], norm,
-                                 batched=batched)
         if gate:
             delta = jnp.where(c.active, resid, c.delta)
             history = c.history.at[c.p].set(
@@ -335,6 +530,23 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
         return RefineState(c.p + 1, new_tail, cur_all, y_keep, delta, history,
                            iters, active)
 
+    if truncate:
+        # Unrolled: refinement p's suffix shape is static, so the fine
+        # solves and corrector sweep genuinely shrink each iteration; the
+        # cond's skipped branch is never executed, preserving the early
+        # exit physically as well as in the reported iteration counts.
+        state = init
+        for p in range(max_iters):
+            # the bitwise-frozen prefix lags exactness by one refinement
+            # (see prefix_frontier); the final block never retires
+            f = min(prefix_frontier(p), B - 1)
+            step = lambda c, _f=f: body(c, _f)
+            if fixed_iters:
+                state = step(state)
+            else:
+                state = jax.lax.cond(jnp.any(state.active), step,
+                                     lambda c: c, state)
+        return state
     if fixed_iters:
         out, _ = jax.lax.scan(lambda c, _: (body(c), None), init, None,
                               length=max_iters, unroll=scan_unroll)

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from .engine import (SRDSConfig, SRDSResult, iteration_cost, predicted_evals,
-                     resolve_blocks, result_from_state, run_parareal)
+                     prefix_frontier, resolve_blocks, result_from_state,
+                     run_parareal, truncated_evals)
 from .schedules import DiffusionSchedule
 from .sequential import SampleStats
 from .solvers import ModelFn, SolverConfig, solve
@@ -33,6 +34,11 @@ def srds_sample(model_fn: ModelFn, sched: DiffusionSchedule, solver: SolverConfi
     ``iterations``/``final_delta``/``delta_history`` gain a K axis.
     ``tol`` overrides ``cfg.tol`` and may be traced — per-sample mode accepts
     a ``(K,)`` tolerance vector (mixed-tolerance micro-batches).
+    With ``cfg.truncate`` refinement ``p`` only fine-solves the non-frozen
+    block suffix ``[prefix_frontier(p), B)`` — the frontier lags exactness
+    by one refinement for bitwise stability (see
+    :func:`repro.core.engine.prefix_frontier`) — bit-identical, strictly
+    less work per iteration from the third refinement on.
     """
     n = sched.num_steps
     B, S = resolve_blocks(n, cfg.num_blocks)
@@ -51,16 +57,22 @@ def srds_sample(model_fn: ModelFn, sched: DiffusionSchedule, solver: SolverConfi
         return t
 
     def fine_fn(x_heads, p, y_prev):
-        # parallel fine solves, batched over the block dim
-        return _cb(jax.vmap(lambda xi, i0: F(xi, i0))(_cb(x_heads), starts))
+        # parallel fine solves, batched over the block dim; under
+        # truncation the heads are the active suffix — recover the static
+        # offset from the stack length
+        f = B - x_heads.shape[0]
+        st = starts[f:] if f else starts
+        return _cb(jax.vmap(lambda xi, i0: F(xi, i0))(_cb(x_heads), st))
 
     out = run_parareal(G, fine_fn, x_init, starts,
                        tol=cfg.tol if tol is None else tol,
                        max_iters=max_iters, norm=cfg.norm,
                        use_fused_update=cfg.use_fused_update,
                        fixed_iters=cfg.fixed_iters,
-                       scan_unroll=cfg.scan_unroll, constrain=_cb,
-                       batched=cfg.per_sample)
+                       scan_unroll=cfg.scan_unroll,
+                       constrain=_cb if cfg.block_sharding is not None
+                       else None,
+                       batched=cfg.per_sample, truncate=cfg.truncate)
 
     traj = None
     if return_trajectory:
@@ -76,13 +88,22 @@ def srds_stats(sched: DiffusionSchedule, solver: SolverConfig, cfg: SRDSConfig,
                  across blocks → S serial) + B coarse (sequential sweep)].
     Pipelined:   wavefront hides the sweep behind fine evals; one superstep
                  = one batched eval → eff ≈ B + k*(S+1)  (paper Table 3).
+    Truncated (``cfg.truncate``): refinement p fine-solves and sweeps only
+                 the suffix [prefix_frontier(p), B), so total evals follow
+                 :func:`repro.core.engine.truncated_evals` and the serial
+                 sweep shortens with the frontier.
     """
     B, S = resolve_blocks(sched.num_steps, cfg.num_blocks)
     e = solver.evals_per_step
     k = int(iterations)
-    total = predicted_evals(iteration_cost(sched.num_steps, cfg.num_blocks, e), k)
+    cost = iteration_cost(sched.num_steps, cfg.num_blocks, e)
+    total = truncated_evals(cost, k) if cfg.truncate \
+        else predicted_evals(cost, k)
     if pipelined:
         serial = e * (B + k * (S + 1))
+    elif cfg.truncate:
+        serial = e * (B + sum(S + B - min(prefix_frontier(p), B - 1)
+                              for p in range(k)))
     else:
         serial = e * (B + k * (S + B))
     return SampleStats(serial_evals=serial, total_evals=total, iterations=k)

@@ -72,6 +72,9 @@ def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
     b_total, s_steps = resolve_blocks(n, cfg.num_blocks)
     if b_total % d != 0:
         raise ValueError(f"num_blocks={b_total} not divisible by axis size {d}")
+    if cfg.truncate and straggler_fn is not None:
+        raise ValueError("truncate is incompatible with straggler_fn (stale "
+                         "fine results are indexed on the full block axis)")
     b_local = b_total // d
     max_iters = cfg.max_iters if cfg.max_iters is not None else b_total
 
@@ -85,14 +88,43 @@ def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
         return solve(model_fn, sched, solver, x, i0, s_steps, 1)
 
     def fine_fn(x_heads, p, y_prev):
-        # ---- local fine solves (the parallel part) ----
-        my_heads = jax.lax.dynamic_slice_in_dim(x_heads, me * b_local, b_local)
-        y_local = jax.vmap(F)(my_heads, my_starts)                 # (B_local, ...)
-        y = jax.lax.all_gather(y_local, axis, tiled=True)          # (B, ...)
-        if straggler_fn is not None:
-            mask = straggler_fn(p).reshape((-1,) + (1,) * (y.ndim - 1))
-            y = jnp.where(jnp.logical_and(mask, p > 0), y_prev, y)
-        return y
+        live = x_heads.shape[0]
+        if live == b_total:
+            # ---- full-width local fine solves (the parallel part) ----
+            my_heads = jax.lax.dynamic_slice_in_dim(x_heads, me * b_local,
+                                                    b_local)
+            y_local = jax.vmap(F)(my_heads, my_starts)             # (B_local, ...)
+            y = jax.lax.all_gather(y_local, axis, tiled=True)      # (B, ...)
+            if straggler_fn is not None:
+                mask = straggler_fn(p).reshape((-1,) + (1,) * (y.ndim - 1))
+                y = jnp.where(jnp.logical_and(mask, p > 0), y_prev, y)
+            return y
+        # ---- truncated suffix: redistribute the live blocks over the axis
+        # so retired prefix blocks free whole devices.  Every device takes a
+        # ceil(live/d) chunk of the suffix (padded with copies of the last
+        # head so the lockstep shapes stay static); devices whose chunk
+        # starts past the suffix skip their fine solves entirely — real
+        # per-device retirement, not masking.  Block->device placement
+        # shifts as the frontier advances, which is fine: results are
+        # re-joined by one all_gather either way.
+        f = b_total - live
+        m = -(-live // d)
+        pad = d * m - live
+        heads = x_heads
+        st = all_starts[f:]
+        if pad:
+            heads = jnp.concatenate(
+                [heads, jnp.broadcast_to(heads[-1:],
+                                         (pad,) + heads.shape[1:])], axis=0)
+            st = jnp.concatenate([st, jnp.broadcast_to(st[-1:], (pad,))])
+        start = me * m
+        my_heads = jax.lax.dynamic_slice_in_dim(heads, start, m)
+        my_st = jax.lax.dynamic_slice_in_dim(st, start, m)
+        y_local = jax.lax.cond(
+            start < live,
+            lambda: jax.vmap(F)(my_heads, my_st),
+            lambda: jnp.zeros((m,) + x_heads.shape[1:], x_heads.dtype))
+        return jax.lax.all_gather(y_local, axis, tiled=True)[:live]
 
     # The coarse sweep / predictor-corrector / convergence gating all come
     # from the shared engine; the coarse sweep is computed redundantly on
@@ -104,27 +136,49 @@ def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
                        fixed_iters=cfg.fixed_iters,
                        scan_unroll=cfg.scan_unroll,
                        carry_fine_results=straggler_fn is not None,
-                       batched=cfg.per_sample)
+                       batched=cfg.per_sample, truncate=cfg.truncate)
     return out.x_tail[-1], out.iters, out.delta, out.history
 
 
 def make_sharded_sampler(mesh, axis: str, model_fn: ModelFn,
                          sched: DiffusionSchedule, solver: SolverConfig,
-                         cfg: SRDSConfig, straggler_fn=None):
+                         cfg: SRDSConfig, straggler_fn=None,
+                         data_axis: str = None):
     """jit-compiled SPMD sampler: x_init (replicated) -> SRDSResult.
 
     The returned callable takes an optional runtime ``tol`` (scalar, or a
     per-sample ``(K,)`` vector with ``cfg.per_sample``) so a serving layer
     can pack requests with different tolerances into one micro-batch without
     recompiling; ``tol=None`` uses ``cfg.tol``.
+
+    ``data_axis`` (optional) shards the leading K sample batch of
+    ``x_init`` — and the runtime ``tol`` vector with it — over a second
+    mesh axis: lanes are independent, so the split needs no collectives and
+    composes with the block ``axis`` on a 2D mesh.  Requires
+    ``cfg.per_sample`` (joint-norm gating couples lanes: each data shard
+    would gate on its local residual and iteration counts would diverge)
+    and a ``K`` divisible by the axis size.
     """
+    if data_axis is not None and not cfg.per_sample:
+        raise ValueError("data_axis shards the sample batch, which is only "
+                         "exact under per-sample gating — set "
+                         "SRDSConfig.per_sample=True")
+    d_data = mesh.shape[data_axis] if data_axis is not None else 1
+
     def local(x_init, tol):
         s, it, d, h = srds_sharded_local(model_fn, sched, solver, x_init, axis,
                                          cfg, straggler_fn, tol=tol)
         return s, it, d, h
 
+    if data_axis is not None:
+        in_specs = (P(data_axis), P(data_axis))
+        out_specs = (P(data_axis), P(data_axis), P(data_axis),
+                     P(None, data_axis))
+    else:
+        in_specs = (P(), P())
+        out_specs = (P(), P(), P(), P())
     fn = compat.shard_map(local, mesh=mesh,
-                          in_specs=(P(), P()), out_specs=(P(), P(), P(), P()),
+                          in_specs=in_specs, out_specs=out_specs,
                           check_vma=False)
 
     @jax.jit
@@ -134,6 +188,13 @@ def make_sharded_sampler(mesh, axis: str, model_fn: ModelFn,
 
     def sample(x_init, tol=None):
         tolv = jnp.asarray(cfg.tol if tol is None else tol, jnp.float32)
+        if data_axis is not None:
+            k = x_init.shape[0]
+            if k % d_data != 0:
+                raise ValueError(f"sample batch K={k} not divisible by "
+                                 f"data axis size {d_data}")
+            if tolv.ndim == 0:
+                tolv = jnp.broadcast_to(tolv, (k,))
         return _sample(x_init, tolv)
 
     return sample
@@ -158,6 +219,8 @@ class _WaveCarry(NamedTuple):
     conv: jnp.ndarray          # per-sample converged mask on device B-1,
                                # bool () or (K,) (always False elsewhere)
     done: jnp.ndarray          # all-samples-converged flag (replicated)
+    my_evals: jnp.ndarray      # int32 model evals this device actually ran
+                               # (retired/ramp supersteps skip the eval)
 
 
 def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
@@ -165,11 +228,17 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
                          axis: str, cfg: SRDSConfig):
     """Per-shard wavefront body; one parareal block per device along ``axis``.
 
-    Every superstep performs exactly ONE model call on a 2-sample batch
-    (fine slot + coarse slot) per device — the paper's unit of "effective
-    serial evals".  The coarse slot is live only on block-boundary and init
-    supersteps; it is evaluated unconditionally to keep SPMD lockstep (cost:
-    a 2x smaller micro-batch would not be faster on the MXU anyway).
+    Every *working* superstep performs exactly ONE model call on a 2-sample
+    batch (fine slot + coarse slot) per device — the paper's unit of
+    "effective serial evals".  The coarse slot is live only on
+    block-boundary and init supersteps; it rides the same call (cost: a 2x
+    smaller micro-batch would not be faster on the MXU anyway).  Devices
+    whose block is past the converged-prefix frontier are *retired* — block
+    ``i`` is provably exact after ``i`` refinements, so device ``i-1``
+    skips its model call entirely from then on (``lax.cond``; the ring
+    exchange still runs every superstep) — and devices ahead of the ramp
+    skip theirs too.  The returned ``evals`` counts the model evals that
+    actually ran.
 
     The wavefront restructures *scheduling*, not math: the corrector update
     and convergence gate below are :func:`repro.core.engine.parareal_update`
@@ -187,6 +256,7 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
     if n % d != 0:
         raise ValueError(f"N={n} must be divisible by device count {d}")
     s_steps = n // d                       # fine steps per block
+    evals_per_step = solver.evals_per_step
     max_iters = cfg.max_iters if cfg.max_iters is not None else d
     max_supersteps = max_iters * s_steps + d + 2
     right = [(i, (i + 1) % d) for i in range(d)]
@@ -223,15 +293,51 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
         is_last = jnp.logical_and(active, j == s_steps - 1)
         is_init = jnp.logical_and(is_first, p == 1)
 
+        # --- per-device retirement (the wavefront's converged-prefix
+        # truncation): block me+1 is provably exact after me+1 refinements
+        # (classical Parareal), so once this device has completed
+        # min(me+1, max_iters) refinements every further eval would
+        # reproduce its boundary bit for bit.  Note the frontier does NOT
+        # need the engine's one-refinement lag (prefix_frontier): that lag
+        # exists because the engine's init sweep and corrector sweep are
+        # two separately compiled scans whose coarse values can differ in
+        # the last bits — here BOTH coarse terms of every update come from
+        # the same batched_eval call site in this one loop body, so equal
+        # inputs give bitwise-equal terms already at the first
+        # recomputation (inductively: block i's boundary is a bitwise
+        # fixed point from refinement i).  Retired (and not-yet-ramped)
+        # devices genuinely skip the model call via lax.cond — the
+        # predicate is device-local and the branch holds no collectives, so
+        # SPMD stays sound; the ring exchange below still runs every
+        # superstep on every device.
+        completed = jnp.where(active, rel // s_steps, 0)
+        # the tail device keeps computing until `over` freezes it: its
+        # residuals feed delta/history, and with max_iters > d a retired
+        # tail would report a pinned 0.0 in place of a computed residual
+        # (identical by the fixed-point argument, but never synthesize a
+        # number that gates convergence)
+        retire_at = jnp.where(me == d - 1, max_iters,
+                              jnp.minimum(me + 1, max_iters))
+        retired = jnp.logical_and(active, completed >= retire_at)
+        do_eval = jnp.logical_and(active, jnp.logical_not(retired))
+
         # fine input: at j==0 restart from the boundary value x_i^{p-1}
         z_in = jnp.where(is_first, c.x_new, c.z)
-        z_out, coarse_out = batched_eval(z_in, j, c.x_new)
+        z_out, coarse_out = jax.lax.cond(
+            do_eval,
+            lambda: batched_eval(z_in, j, c.x_new),
+            lambda: (c.z, c.prev_coarse))
+        my_evals = c.my_evals + jnp.where(do_eval, 2 * evals_per_step, 0)
 
         # --- init superstep: coarse_out = G(x_i^0): seed prev_coarse, send
         # --- last superstep:  coarse_out = G(x_i^p): predictor-corrector
         prev_eff = jnp.where(is_init, coarse_out, c.prev_coarse)
         out_block = parareal_update(z_out, coarse_out, prev_eff,
                                     cfg.use_fused_update)
+        # a retired device's boundary is already final: pin out_block to it
+        # so every downstream consumer (send, residual, out_last) sees the
+        # stable value instead of the skipped eval's placeholders
+        out_block = jnp.where(retired, c.out_last, out_block)
         send_val = jnp.where(is_last, out_block,
                              jnp.where(is_init, coarse_out, c.out_last))
         send_flag = jnp.logical_or(is_init, is_last)
@@ -254,8 +360,9 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
                                  jnp.where(frozen, c.out_last, out_block),
                                  jnp.where(is_init, coarse_out, c.out_last))
         new_p_done = jnp.where(
-            jnp.logical_and(is_last,
-                            jnp.logical_not(jnp.logical_or(c.conv, over))),
+            jnp.logical_and(
+                jnp.logical_and(is_last, jnp.logical_not(retired)),
+                jnp.logical_not(jnp.logical_or(c.conv, over))),
             p, c.p_done)
 
         # convergence residual on the final block (per sample when gated)
@@ -286,7 +393,8 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
                           jnp.where(active, new_prev_coarse, c.prev_coarse),
                           jnp.where(active, new_out_last, c.out_last),
                           delta, history,
-                          jnp.where(active, new_p_done, c.p_done), conv, done)
+                          jnp.where(active, new_p_done, c.p_done), conv, done,
+                          my_evals)
 
     def cond(c: _WaveCarry):
         return jnp.logical_and(c.s < max_supersteps, jnp.logical_not(c.done))
@@ -306,7 +414,8 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
                       prev_coarse=jnp.zeros_like(x_init),
                       out_last=jnp.zeros_like(x_init),
                       delta=delta0, history=hist0, p_done=p_done0,
-                      conv=conv0, done=jnp.asarray(False))
+                      conv=conv0, done=jnp.asarray(False),
+                      my_evals=jnp.int32(0))
     c = jax.lax.while_loop(cond, body, init)
 
     # broadcast the tail device's answers to every shard
@@ -319,7 +428,10 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
     delta = from_tail(c.delta)
     history = from_tail(c.history)
     supersteps = c.s
-    return sample, iters, delta, history, supersteps
+    # physical model evals actually run across the ring (retired and
+    # not-yet-ramped devices skipped theirs)
+    evals = jax.lax.psum(c.my_evals, axis)
+    return sample, iters, delta, history, supersteps, evals
 
 
 def make_pipelined_sampler(mesh, axis: str, model_fn: ModelFn,
@@ -329,12 +441,12 @@ def make_pipelined_sampler(mesh, axis: str, model_fn: ModelFn,
         return srds_pipelined_local(model_fn, sched, solver, x_init, axis, cfg)
 
     fn = compat.shard_map(local, mesh=mesh, in_specs=P(),
-                          out_specs=(P(), P(), P(), P(), P()),
+                          out_specs=(P(), P(), P(), P(), P(), P()),
                           check_vma=False)
 
     @jax.jit
     def sample(x_init):
-        s, p, dlt, hist, steps = fn(x_init)
-        return assemble_result(s, p, dlt, hist), steps
+        s, p, dlt, hist, steps, evals = fn(x_init)
+        return assemble_result(s, p, dlt, hist), steps, evals
 
     return sample

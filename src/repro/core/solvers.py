@@ -43,7 +43,10 @@ class SolverConfig:
     name: str = "ddim"
     eta: float = 0.0          # DDIM stochasticity (ddpm solver uses eta=1)
     noise_key: Optional[Any] = None  # PRNGKey for stochastic solvers (frozen noise)
-    use_fused_kernel: bool = False   # route the DDIM update through the Pallas op
+    # Route the DDIM update through the Pallas op.  None = "on where
+    # supported" (compiled kernels on TPU; CPU/GPU keep the jnp path — see
+    # repro.kernels.ops.fused_default); an explicit bool always wins.
+    use_fused_kernel: Optional[bool] = None
     unroll: bool = False             # unroll multi-step solves (analysis mode)
 
     @property
@@ -67,7 +70,8 @@ def ddim_step(model_fn: ModelFn, sched: DiffusionSchedule, cfg: SolverConfig,
     a, t0 = sched.gather(i0)
     b, _ = sched.gather(i1)
     eps = model_fn(x, t0)
-    if cfg.use_fused_kernel:
+    from .engine import resolve_fused
+    if resolve_fused(cfg.use_fused_kernel):
         from repro.kernels import ops as kops
         return kops.ddim_fused(x, eps, a, b)
     return _ddim_update(x, eps, a, b)

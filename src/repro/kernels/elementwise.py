@@ -18,6 +18,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 LANES = 128
+# Default row-tile size of the elementwise kernels.  The ops wrappers pad
+# row counts to a multiple of THIS constant whenever per-tile reduction
+# partials are consumed (a partial tile mapped past the array is an
+# unspecified read on compiled backends) — change them together.
+TILE_ROWS = 256
 
 
 def _ddim_kernel(x_ref, e_ref, ab_ref, o_ref):
@@ -29,7 +34,8 @@ def _ddim_kernel(x_ref, e_ref, ab_ref, o_ref):
     o_ref[...] = (jnp.sqrt(b) * x0 + jnp.sqrt(1.0 - b) * e).astype(o_ref.dtype)
 
 
-def ddim_fused_pallas(x2d, eps2d, ab, *, block_rows=256, interpret=False):
+def ddim_fused_pallas(x2d, eps2d, ab, *, block_rows=TILE_ROWS,
+                      interpret=False):
     """x2d/eps2d: (R, 128); ab: (1, 2) [alpha_bar_from, alpha_bar_to]."""
     r = x2d.shape[0]
     br = min(block_rows, r)
@@ -48,6 +54,53 @@ def ddim_fused_pallas(x2d, eps2d, ab, *, block_rows=256, interpret=False):
     )(x2d, eps2d, ab)
 
 
+def _parareal_resid_kernel(y_ref, c_ref, p_ref, x_ref, o_ref, r_ref):
+    y = y_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    xo = x_ref[...].astype(jnp.float32)
+    out = y + c - p
+    o_ref[...] = out.astype(o_ref.dtype)
+    r_ref[0, 0] = jnp.sum(jnp.abs(out - xo))
+
+
+def parareal_update_residual_pallas(y2d, c2d, p2d, x2d, *,
+                                    block_rows=TILE_ROWS, interpret=False):
+    """Fused ``out = y + cur - prev`` with per-tile L1(out - x_old) partials.
+
+    This is the convergence-norm feed: ``x2d`` holds the block's previous
+    trajectory value, so summing the partials gives exactly the raw L1 sum
+    behind the engine's ``l1_mean`` residual — the separate full-tensor
+    reduction pass disappears.  Returns ``(out (R, 128),
+    partials (tiles, 1) f32)``; the caller sums (or per-sample reshapes)
+    the partials.  ``block_rows`` must tile the row count so partials can
+    be regrouped per sample by the ops wrapper.
+    """
+    r = y2d.shape[0]
+    br = min(block_rows, r)
+    tiles = pl.cdiv(r, br)
+    return pl.pallas_call(
+        _parareal_resid_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(y2d.shape, y2d.dtype),
+            jax.ShapeDtypeStruct((tiles, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        name="srds_parareal_update_residual",
+    )(y2d, c2d, p2d, x2d)
+
+
 def _parareal_kernel(y_ref, c_ref, p_ref, o_ref, r_ref):
     y = y_ref[...].astype(jnp.float32)
     c = c_ref[...].astype(jnp.float32)
@@ -56,7 +109,8 @@ def _parareal_kernel(y_ref, c_ref, p_ref, o_ref, r_ref):
     r_ref[0, 0] = jnp.sum(jnp.abs(c - p))
 
 
-def parareal_update_pallas(y2d, c2d, p2d, *, block_rows=256, interpret=False):
+def parareal_update_pallas(y2d, c2d, p2d, *, block_rows=TILE_ROWS,
+                           interpret=False):
     """Fused out = y + cur - prev with per-tile L1(cur - prev) partials.
 
     Returns (out (R, 128), partials (tiles, 1) f32) — caller sums partials.

@@ -16,7 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .elementwise import LANES, ddim_fused_pallas, parareal_update_pallas
+from .elementwise import (LANES, TILE_ROWS, ddim_fused_pallas,
+                          parareal_update_pallas,
+                          parareal_update_residual_pallas)
 from .flash_attention import flash_attention_bwd, flash_attention_fwd
 from .rwkv6_scan import rwkv6_wkv_pallas
 
@@ -25,6 +27,18 @@ FORCE_REF = False
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def fused_default() -> bool:
+    """Whether the fused elementwise Pallas path is on by default.
+
+    "On where supported" means the *compiled* kernels — i.e. a TPU backend.
+    Everywhere else the kernels only exist in ``interpret=True`` mode
+    (Python-executed, for semantics validation), which would dominate the
+    sampler's runtime, so CPU/GPU default to the pure-jnp reference path.
+    ``FORCE_REF`` force-disables the kernels regardless of backend.
+    """
+    return (not FORCE_REF) and jax.default_backend() == "tpu"
 
 
 # --------------------------------------------------------------------------
@@ -138,9 +152,19 @@ def rwkv6_wkv(r, k, v, w, u, state=None, *, chunk: Optional[int] = None,
 # Fused elementwise ops
 # --------------------------------------------------------------------------
 
-def _to_2d(x):
+def _to_2d(x, row_multiple: int = 1):
+    """Flatten/pad to (rows, 128); ``row_multiple`` additionally pads the
+    row count to a multiple of the kernel's tile size (zero rows) when it
+    exceeds one tile, so a fixed tile size never maps a partial tile past
+    the array — compiled Pallas reads of out-of-bounds block regions are
+    unspecified (interpret mode zero-fills, masking the bug on CPU), which
+    matters whenever per-tile *reductions* are consumed, not just the
+    masked elementwise outputs.  (At ``rows <= row_multiple`` the kernels
+    shrink the tile to ``rows`` exactly — a single full tile.)"""
     n = x.size
     rows = -(-n // LANES)
+    if rows > row_multiple:
+        rows += (-rows) % row_multiple
     pad = rows * LANES - n
     flat = x.reshape(-1)
     if pad:
@@ -167,8 +191,73 @@ def parareal_update(y, cur, prev, *, use_kernel: Optional[bool] = None):
         use_kernel = not FORCE_REF
     if not use_kernel:
         return ref.parareal_update(y, cur, prev)
-    y2, n = _to_2d(y)
-    c2, _ = _to_2d(cur)
-    p2, _ = _to_2d(prev)
+    # pad rows to the tile size: the L1 partials are consumed, so the last
+    # tile must not read past the array (see _to_2d)
+    y2, n = _to_2d(y, row_multiple=TILE_ROWS)
+    c2, _ = _to_2d(cur, row_multiple=TILE_ROWS)
+    p2, _ = _to_2d(prev, row_multiple=TILE_ROWS)
     o, partials = parareal_update_pallas(y2, c2, p2, interpret=_interpret())
     return o.reshape(-1)[:n].reshape(y.shape), jnp.sum(partials)
+
+
+def _to_2d_per_sample(x):
+    """(K, ...) -> (K * rows_per_sample, 128) with per-sample padding, so
+    row tiles never straddle two samples and per-tile partials regroup into
+    per-sample sums.  Returns (x2d, rows_per_sample, per_sample_size)."""
+    k = x.shape[0]
+    n = x.size // k
+    rows = -(-n // LANES)
+    pad = rows * LANES - n
+    flat = x.reshape(k, n)
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat.reshape(k * rows, LANES), rows, n
+
+
+def _sample_tile_rows(rows: int, cap: int = TILE_ROWS) -> int:
+    """Largest divisor of ``rows`` not exceeding ``cap`` (tile rows must
+    divide the per-sample row count so partial tiles stay sample-local)."""
+    for br in range(min(rows, cap), 0, -1):
+        if rows % br == 0:
+            return br
+    return 1
+
+
+def parareal_update_residual(y, cur, prev, old, *, batched: bool = False,
+                             use_kernel: Optional[bool] = None):
+    """Fused predictor-corrector update + convergence-residual partials.
+
+    Returns ``(y + cur - prev, sum|out - old|)`` in one pass — ``old`` is
+    the block's previous trajectory value, so the second output is exactly
+    the raw L1 sum behind the engine's ``l1_mean`` convergence norm (the
+    kernel's per-tile partials feed it directly; no second full-tensor
+    reduction).  With ``batched`` the leading axis of every operand is a
+    sample batch K and the residual is a per-sample ``(K,)`` f32 vector.
+    """
+    if use_kernel is None:
+        use_kernel = not FORCE_REF
+    if not use_kernel:
+        return ref.parareal_update_residual(y, cur, prev, old,
+                                            batched=batched)
+    if not batched:
+        # pad rows to the tile size so the consumed partials never cover
+        # an out-of-bounds block region on compiled backends (zero rows
+        # contribute |0 + 0 - 0 - 0| = 0 to the L1 sums)
+        y2, n = _to_2d(y, row_multiple=TILE_ROWS)
+        c2, _ = _to_2d(cur, row_multiple=TILE_ROWS)
+        p2, _ = _to_2d(prev, row_multiple=TILE_ROWS)
+        x2, _ = _to_2d(old, row_multiple=TILE_ROWS)
+        o, partials = parareal_update_residual_pallas(
+            y2, c2, p2, x2, interpret=_interpret())
+        return o.reshape(-1)[:n].reshape(y.shape), jnp.sum(partials)
+    k = y.shape[0]
+    y2, rows, n = _to_2d_per_sample(y)
+    c2, _, _ = _to_2d_per_sample(cur)
+    p2, _, _ = _to_2d_per_sample(prev)
+    x2, _, _ = _to_2d_per_sample(old)
+    br = _sample_tile_rows(rows)
+    o, partials = parareal_update_residual_pallas(
+        y2, c2, p2, x2, block_rows=br, interpret=_interpret())
+    resid = partials.reshape(k, rows // br).sum(axis=1)
+    out = o.reshape(k, rows * LANES)[:, :n].reshape(y.shape)
+    return out, resid

@@ -171,3 +171,22 @@ def parareal_update(y: jnp.ndarray, cur: jnp.ndarray, prev: jnp.ndarray):
     out = y + cur - prev
     resid = jnp.sum(jnp.abs((cur - prev).astype(jnp.float32)))
     return out, resid
+
+
+def parareal_update_residual(y: jnp.ndarray, cur: jnp.ndarray,
+                             prev: jnp.ndarray, old: jnp.ndarray, *,
+                             batched: bool = False):
+    """out = y + cur - prev;  resid = L1 sum |out - old| — the exact raw
+    sum behind the engine's ``l1_mean`` convergence residual (``old`` is
+    the block's previous trajectory value), accumulated in the same pass
+    as the update so the convergence norm needs no second full-tensor
+    reduction.  All accumulation in f32 (matching the kernel).
+
+    Returns ``(out, resid)`` with resid a scalar f32 sum, or a per-sample
+    ``(K,)`` f32 vector over the leading axis with ``batched``.
+    """
+    yf, cf, pf, of = (t.astype(jnp.float32) for t in (y, cur, prev, old))
+    outf = yf + cf - pf
+    axes = tuple(range(1, y.ndim)) if batched else None
+    resid = jnp.sum(jnp.abs(outf - of), axis=axes)
+    return (y + cur - prev), resid

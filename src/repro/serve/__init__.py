@@ -1,5 +1,5 @@
 from .diffusion import (CompletionRecord, DiffusionSamplingEngine,
-                        SampleRequest, SampleResponse)
+                        IterationEMA, SampleRequest, SampleResponse)
 from .engine import Request, ServingEngine, make_decode_fn, make_prefill_fn
 from .scheduler import (EDF, FIFO, CostAware, Policy, SimReport, Tier,
                         bursty_trace, poisson_trace, simulate)

@@ -25,6 +25,16 @@ with recycling it pays ``sum_k(iters_k)`` (plus a drain tail), which is
 where the "effective model evals per sample" win in
 ``benchmarks/table9_batched.py`` comes from.
 
+The refinement step is a **sliding-window hot loop**: each step program is
+compiled for the group's quantized minimum *frontier* (the provably
+bitwise-frozen block prefix — every lane's first ``prefix_frontier(j)``
+blocks are final after ``j`` refinements), statically skipping the frozen
+prefix's fine solves and corrector sweep; ``x_tail``/``prev_coarse`` are
+donated to XLA so trajectory-sized buffers are reused in place, and the
+host loop performs exactly ONE device sync per refinement (the batched
+``(K,)`` residual vector) plus one per completion (that lane's final
+state only — never the ``(B, K, *shape)`` trajectory).
+
 Arrival-aware serving rides a deterministic **virtual clock**: every
 engine step advances ``clock`` by its *physical* model-eval cost times
 ``sec_per_eval`` (the deployment's calibrated per-eval wall time), so
@@ -32,7 +42,10 @@ latency, SLO-attainment and goodput numbers are bit-reproducible
 discrete-event quantities, not wall-clock noise.  The admission *policy*
 (who gets a freed slot, who is rejected or preempted) lives in
 :mod:`repro.serve.scheduler`; this module only exposes the mechanism:
-``admit`` / ``step_once`` / ``evict`` / ``free_slots``.
+``admit`` / ``step_once`` / ``evict`` / ``free_slots``.  Completion-time
+prediction feeds on :class:`IterationEMA`, an online per-tier iterations
+estimate learned from the engine's own completions (falling back to the
+caller's ``iters_hint``, then worst-case ``max_iters``).
 
 What the engine does / does not guarantee:
 
@@ -40,7 +53,12 @@ What the engine does / does not guarantee:
   SRDS result for that ``(tol, num_steps, seed, solver, schedule)`` —
   admission order, batch-mates and preemption of *other* requests do not
   perturb it (converged/empty lanes are frozen with ``jnp.where``, never
-  fed back);
+  fed back).  *Bitwise* for elementwise-deterministic denoisers; matmul
+  denoisers carry the repo's standing shape-dependent-gemm carve-out
+  (roundoff-level: XLA picks gemm kernels by batch shape, and with
+  ``truncate`` the group frontier sets the fine-solve width, so lane bits
+  can depend on batch composition at roundoff scale — build with
+  ``truncate=False`` for width-independence at full cost);
 * eval accounting is *effective* (per-active-slot): lockstep SPMD still
   computes masked lanes, so physical compute equals effective compute only
   while the queue keeps every slot busy — exactly the heavy-traffic regime
@@ -76,15 +94,58 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.engine import (IterationCost, coarse_init_sweep,
-                               convergence_norm, corrector_sweep,
                                iteration_cost, predicted_evals,
-                               resolve_blocks)
+                               prefix_frontier, resolve_blocks,
+                               resolve_fused, suffix_refinement,
+                               truncated_evals)
 from repro.core.schedules import DiffusionSchedule, make_schedule
 from repro.core.solvers import ModelFn, SolverConfig, solve, solver_names
 from repro.parallel.sharding import microbatch_spec
 
 __all__ = ["SampleRequest", "SampleResponse", "CompletionRecord",
-           "DiffusionSamplingEngine"]
+           "DiffusionSamplingEngine", "IterationEMA"]
+
+
+def _host_fetch(x) -> np.ndarray:
+    """The single device->host transfer point of the serving hot loop.
+
+    ``step()`` calls it exactly once per refinement (the batched ``(K,)``
+    residual vector) plus once per *completed* request (that lane's final
+    state only — never the whole trajectory).  Tests monkeypatch this to
+    count syncs and hold the one-sync-per-iteration contract.
+    """
+    return np.asarray(jax.device_get(x))
+
+
+class IterationEMA:
+    """Online per-tier expected-iterations predictor.
+
+    Replaces trust in the caller's static ``iters_hint`` once real
+    completions exist: an exponential moving average of observed refinement
+    counts, keyed per tier — ``(compat_key, tol)`` — so a mixed workload
+    learns one estimate per (grid, solver, schedule, shape, tolerance)
+    class.  Feeds :meth:`DiffusionSamplingEngine.predict_completion` (and
+    through it the CostAware scheduler); before the first observation of a
+    tier the predictor abstains and callers fall back to ``iters_hint``
+    then worst-case ``max_iters``, preserving the optimistic-rejection
+    soundness story.
+    """
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self._mean: Dict[tuple, float] = {}
+
+    def observe(self, key: tuple, iterations: int) -> None:
+        prev = self._mean.get(key)
+        # incremental form: exact fixed point when observations repeat
+        self._mean[key] = float(iterations) if prev is None \
+            else prev + self.alpha * (float(iterations) - prev)
+
+    def predict(self, key: tuple) -> Optional[float]:
+        return self._mean.get(key)
+
+    def reset(self) -> None:
+        self._mean.clear()
 
 
 @dataclasses.dataclass
@@ -177,12 +238,16 @@ class _MicroBatch:
         self.schedule = schedule
         self.shape = shape
         self.solver = solver
-        (self.init_fn, self.step_fn, self.B, self.S) = \
+        (self.init_fn, self.step_for, self.B, self.S) = \
             engine._build_program(n, schedule, shape, solver)
         self.cost: IterationCost = iteration_cost(n, engine.num_blocks,
                                                   solver.evals_per_step)
         self.max_iters = engine.max_iters if engine.max_iters is not None \
             else self.B
+        # truncated step programs are compiled per quantized frontier value;
+        # the quantum bounds the cache at ~4 programs per group
+        self.trunc_q = engine.truncate_quantum \
+            if engine.truncate_quantum is not None else max(1, self.B // 4)
         K = engine.batch_size
         self.x_init = jnp.zeros((K,) + shape, engine.dtype)
         self.x_tail = jnp.zeros((self.B, K) + shape, engine.dtype)
@@ -233,16 +298,47 @@ class _MicroBatch:
                     delta_history=np.asarray(s.history, np.float32),
                     # a lane evicted before its coarse init ran did no work
                     model_evals=0 if uninitialized
-                    else predicted_evals(self.cost, s.iters),
+                    else self._lane_evals(s.iters),
                     status="preempted")
         raise KeyError(f"request {rid} is not running in this batch")
 
     # ----------------------------------------------------------------- step
 
+    def _lane_evals(self, iters: int) -> int:
+        """Per-lane eval charge for ``iters`` refinements, in the engine's
+        mode: truncated frontier schedule when the step programs truncate,
+        the flat untruncated rate otherwise — billing always matches what
+        an ideally-packed engine of this configuration would execute."""
+        return truncated_evals(self.cost, iters) if self.engine.truncate \
+            else predicted_evals(self.cost, iters)
+
+    def _refine_evals_at(self, frontier: int) -> int:
+        return self.cost.refine_evals_at(frontier) if self.engine.truncate \
+            else self.cost.refine_evals
+
+    def _frontier(self) -> int:
+        """Quantized group frontier: the min provably-frozen prefix over
+        active lanes (each lane's frontier is its own completed-refinement
+        count, lagged per ``prefix_frontier``), snapped *down* to the
+        truncation quantum so at most ~B/quantum step programs compile.
+        Snapping down is always sound — less truncation than provable."""
+        fr = [prefix_frontier(s.iters) for k, s in enumerate(self.slots)
+              if s is not None and self.active[k]]
+        if not fr:
+            return 0
+        minf = (min(fr) // self.trunc_q) * self.trunc_q
+        return min(minf, self.B - 1)
+
     def step(self):
-        """Init newly admitted lanes, run one lockstep refinement, finalize
-        converged slots.  Returns ``(completions, effective_evals,
-        physical_evals)`` where completions are ``(rid, req, response)``."""
+        """Init newly admitted lanes, run one lockstep refinement truncated
+        to the group frontier, finalize converged slots.  Returns
+        ``(completions, effective_evals, physical_evals)`` where
+        completions are ``(rid, req, response)``.
+
+        Host traffic: exactly ONE device->host sync (the batched ``(K,)``
+        residual vector) per refinement, plus one per completed request
+        (that lane's final state only).
+        """
         K = self.engine.batch_size
         eff = phys = 0
         if self.newly:
@@ -257,16 +353,20 @@ class _MicroBatch:
             phys += K * self.cost.init_evals
             self.newly = []
 
+        minf = self._frontier() if self.engine.truncate else 0
         amask = jnp.asarray(self.active)
-        self.x_tail, self.prev_coarse, delta = self.step_fn(
+        self.x_tail, self.prev_coarse, delta = self.step_for(minf)(
             self.x_init, self.x_tail, self.prev_coarse, amask)
-        n_active = int(self.active.sum())
-        eff += n_active * self.cost.refine_evals
-        phys += K * self.cost.refine_evals
+        # effective = per-lane ideal (each lane truncated at its OWN
+        # frontier when the engine truncates); physical = what the lockstep
+        # program actually ran (K lanes truncated at the group frontier)
+        eff += sum(self._refine_evals_at(prefix_frontier(s.iters))
+                   for k, s in enumerate(self.slots)
+                   if s is not None and self.active[k])
+        phys += K * self._refine_evals_at(minf)
 
-        delta_np = np.asarray(delta)
+        delta_np = _host_fetch(delta)        # the one per-iteration sync
         completed: List[Tuple[int, SampleRequest, SampleResponse]] = []
-        tail_np = None
         for k in range(K):
             slot = self.slots[k]
             if slot is None or not self.active[k]:
@@ -276,14 +376,15 @@ class _MicroBatch:
             # f32 compare, matching the engine's still_refining gate
             if (delta_np[k] < np.float32(slot.req.tol)
                     or slot.iters >= self.max_iters):
-                if tail_np is None:
-                    tail_np = np.asarray(self.x_tail[-1])
                 completed.append((slot.rid, slot.req, SampleResponse(
-                    sample=np.asarray(tail_np[k]),
+                    # fetch ONLY the completed lane's final state — not the
+                    # (B, K, *shape) trajectory, not even the (K, *shape)
+                    # final row
+                    sample=_host_fetch(self.x_tail[-1, k]),
                     iterations=slot.iters,
                     final_delta=slot.history[-1],
                     delta_history=np.asarray(slot.history, np.float32),
-                    model_evals=predicted_evals(self.cost, slot.iters))))
+                    model_evals=self._lane_evals(slot.iters))))
                 self.slots[k] = None
                 self.active[k] = False
         return completed, eff, phys
@@ -313,6 +414,22 @@ class DiffusionSamplingEngine:
                     lane-exactness caveat (see module docstring).
       sec_per_eval: virtual seconds charged per *physical* model eval —
                     the deterministic clock behind latency/SLO metrics.
+      truncate:     converged-prefix truncation of the refinement step
+                    (default on): each step program is compiled for the
+                    group's quantized minimum frontier and statically skips
+                    the provably bitwise-frozen block prefix — fewer
+                    physical evals per step; bit-identical results for
+                    elementwise-deterministic denoisers (matmul denoisers:
+                    roundoff-level, see the guarantee block above).  Forced
+                    off when ``axis`` is set (the block-parallel fine-solve
+                    layout slices the full block dim).
+      truncate_quantum: frontier quantization step (None -> B//4): bounds
+                    the per-group compiled-step-program cache at
+                    ~B/quantum variants.
+      use_fused:    route the predictor-corrector + residual through the
+                    fused Pallas kernel, whose per-tile L1 partials feed
+                    the ``(K,)`` convergence residual directly.  ``None``
+                    (default) = on where supported (TPU), off elsewhere.
     """
 
     def __init__(self, model_fn: ModelFn, sample_shape: Tuple[int, ...],
@@ -323,7 +440,9 @@ class DiffusionSamplingEngine:
                  mesh=None, axis: Optional[str] = None,
                  data_axis: Optional[str] = None,
                  allow_inexact: bool = False, sec_per_eval: float = 1e-6,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, truncate: bool = True,
+                 truncate_quantum: Optional[int] = None,
+                 use_fused: Optional[bool] = None, ema_alpha: float = 0.3):
         self.model_fn = model_fn
         self.sample_shape = tuple(sample_shape)
         self.solver = solver
@@ -339,6 +458,16 @@ class DiffusionSamplingEngine:
         self.allow_inexact = allow_inexact
         self.sec_per_eval = sec_per_eval
         self.dtype = dtype
+        # block-parallel fine solves slice the full (B, K, ...) head stack
+        # per device; suffix truncation would unbalance the shards
+        self.truncate = truncate and axis is None
+        self.truncate_quantum = truncate_quantum
+        self.use_fused = resolve_fused(use_fused)
+        # buffer donation lets XLA reuse the trajectory-sized x_tail /
+        # prev_coarse allocations across refinements; the CPU backend
+        # ignores donation (with a warning), so only donate off-CPU
+        self._donate = (1, 2) if jax.default_backend() != "cpu" else ()
+        self.iters_ema = IterationEMA(alpha=ema_alpha)
         if data_axis is not None:
             if mesh is None:
                 raise ValueError("data_axis requires a mesh")
@@ -492,6 +621,9 @@ class DiffusionSamplingEngine:
         self.requests_served = 0
         self.clock = 0.0
         self.records = []
+        # the learned per-tier iteration estimates are run state too: a
+        # warm re-run must make the same admission decisions as a fresh one
+        self.iters_ema.reset()
 
     # ------------------------------------------------- scheduling primitives
 
@@ -563,22 +695,47 @@ class DiffusionSamplingEngine:
         """Idle the engine forward (no work to do before the next arrival)."""
         self.clock = max(self.clock, until)
 
+    def predict_iterations(self, req: SampleRequest) -> float:
+        """Expected refinement count for ``req``: the *most optimistic* of
+        the online per-tier EMA (:class:`IterationEMA`, fed by completed
+        requests of the same ``(compat_key, tol)`` tier) and the caller's
+        static ``iters_hint``; worst-case ``max_iters`` when neither
+        exists.  Taking the minimum keeps CostAware's rejection on the
+        optimistic side: the EMA is a *mean*, so alone it could exceed an
+        easier-than-average request's true need and over-reject."""
+        n, _, _, _ = self._resolve(req)
+        B, _ = resolve_blocks(n, self.num_blocks)
+        cap = self.max_iters if self.max_iters is not None else B
+        cands = [self.iters_ema.predict((self.compat_key(req),
+                                         float(req.tol)))]
+        if req.iters_hint is not None:
+            cands.append(float(req.iters_hint))
+        cands = [c for c in cands if c is not None]
+        est = min(cands) if cands else float(cap)
+        return min(float(est), float(cap))
+
     def predict_completion(self, req: SampleRequest,
                            now: Optional[float] = None) -> float:
         """Cost-model completion estimate (virtual seconds) if ``req`` were
-        admitted now: the engine's own per-iteration eval accounting
-        (:func:`repro.core.engine.iteration_cost`) times the physical K-lane
-        width, for ``iters_hint`` refinements (worst-case ``max_iters`` when
-        the caller gave no hint).  Optimistic: assumes the request's batch
-        steps back-to-back (no cross-group contention)."""
+        admitted now: the engine's own truncated per-iteration eval
+        accounting (:func:`repro.core.engine.truncated_evals` — the same
+        frontier schedule the step programs execute) times the physical
+        K-lane width, for :meth:`predict_iterations` refinements.
+        Optimistic on every axis it controls: the batch is assumed to step
+        back-to-back (no cross-group contention), the frontier to advance
+        every refinement, and the iteration estimate is the smallest
+        available one — so rejection sheds only requests hopeless even
+        under this best case.  (The iteration estimate itself is still an
+        estimate: a pathologically easy request in a hard tier can beat
+        it, so 'never over-rejects' holds relative to the estimate, not as
+        an absolute.)"""
         now = self.clock if now is None else now
         n, _, _, solver = self._resolve(req)
         cost = iteration_cost(n, self.num_blocks, solver.evals_per_step)
-        B, _ = resolve_blocks(n, self.num_blocks)
-        cap = self.max_iters if self.max_iters is not None else B
-        iters = req.iters_hint if req.iters_hint is not None else cap
-        iters = min(iters, cap)
-        evals = self.batch_size * predicted_evals(cost, iters)
+        iters = self.predict_iterations(req)
+        per_lane = truncated_evals(cost, iters) if self.truncate \
+            else predicted_evals(cost, iters)
+        evals = self.batch_size * per_lane
         return now + evals * self.sec_per_eval
 
     def _finalize(self, rid: int, req: SampleRequest,
@@ -591,6 +748,9 @@ class DiffusionSamplingEngine:
         resp.slo_met = resp.status == "ok" and self.clock <= resp.deadline
         if resp.status == "ok":
             self.requests_served += 1
+            # feed the online per-tier iterations predictor
+            self.iters_ema.observe((self.compat_key(req), float(req.tol)),
+                                   resp.iterations)
         self.records.append(CompletionRecord(
             rid=rid, arrival_time=resp.arrival_time,
             finish_time=resp.finish_time, deadline=resp.deadline,
@@ -601,7 +761,14 @@ class DiffusionSamplingEngine:
 
     def _build_program(self, n: int, schedule: str, shape: Tuple[int, ...],
                        solver: SolverConfig):
-        """(init_fn, step_fn, B, S) for one compatibility group (cached)."""
+        """(init_fn, step_for, B, S) for one compatibility group (cached).
+
+        ``step_for(minf)`` returns the jitted one-refinement program whose
+        fine solves and corrector sweep are statically truncated to the
+        block suffix ``[minf, B)`` (one compiled variant per quantized
+        frontier value, cached).  ``x_tail``/``prev_coarse`` are donated so
+        XLA reuses the trajectory-sized buffers across refinements.
+        """
         key = (n, schedule, shape, _solver_fp(solver))
         if key in self._programs:
             return self._programs[key]
@@ -614,6 +781,7 @@ class DiffusionSamplingEngine:
                                   kind=sched.kind)
         starts = jnp.arange(B, dtype=jnp.int32) * S
         model_fn, norm = self.model_fn, self.norm
+        use_fused = self.use_fused
 
         def G(x, i0):
             return solve(model_fn, sched, solver, x, i0, 1, S)
@@ -628,24 +796,39 @@ class DiffusionSamplingEngine:
             # coarse initialization sweep for the whole slot batch
             return coarse_init_sweep(G, x_init, starts)
 
-        @jax.jit
-        def step_fn(x_init, x_tail, prev_coarse, active):
-            """One Parareal refinement over all K slots; inactive slots
-            (free, or holding a finished sample) are frozen no-ops."""
-            x_heads = jnp.concatenate([x_init[None], x_tail[:-1]], axis=0)
-            y = fine(x_heads)
-            new_tail, cur_all = corrector_sweep(G, x_init, y, prev_coarse,
-                                                starts)
-            m = active.reshape((1,) + active.shape
-                               + (1,) * (x_tail.ndim - 2))
-            new_tail = jnp.where(m, new_tail, x_tail)
-            cur_all = jnp.where(m, cur_all, prev_coarse)
-            delta = convergence_norm(new_tail[-1] - x_tail[-1], norm,
-                                     batched=True)
-            delta = jnp.where(active, delta, jnp.inf)
-            return new_tail, cur_all, delta
+        step_cache: Dict[int, Callable] = {}
 
-        self._programs[key] = (init_fn, step_fn, B, S)
+        def make_step(minf: int):
+            def step_fn(x_init, x_tail, prev_coarse, active):
+                """One Parareal refinement over all K slots, truncated to
+                the suffix [minf, B) via the engine's shared
+                :func:`suffix_refinement`; inactive slots (free, or
+                holding a finished sample) are frozen no-ops."""
+                heads = jnp.concatenate([x_init[None], x_tail[:-1]], axis=0)
+                if minf:
+                    heads = heads[minf:]
+                y = fine(heads)
+                new_tail, cur_all, delta = suffix_refinement(
+                    G, y, x_init, x_tail, prev_coarse, starts, minf,
+                    use_fused=use_fused, norm=norm, batched=True)
+                m = active.reshape((1,) + active.shape
+                                   + (1,) * (x_tail.ndim - 2))
+                new_tail = jnp.where(m, new_tail, x_tail)
+                cur_all = jnp.where(m, cur_all, prev_coarse)
+                # inactive lanes' pre-mask residual entries are discarded
+                delta = jnp.where(active, delta, jnp.inf)
+                return new_tail, cur_all, delta
+
+            return jax.jit(step_fn, donate_argnums=self._donate)
+
+        def step_for(minf: int) -> Callable:
+            if minf not in step_cache:
+                step_cache[minf] = make_step(minf)
+            return step_cache[minf]
+
+        step_for.cache = step_cache     # introspectable: compiled variants
+
+        self._programs[key] = (init_fn, step_for, B, S)
         return self._programs[key]
 
     def _make_fine(self, F, starts, B: int):
@@ -661,7 +844,10 @@ class DiffusionSamplingEngine:
         """
         if self.mesh is None or (self.axis is None and self.data_axis is None):
             def fine(x_heads):
-                return jax.vmap(F)(x_heads, starts)
+                # truncated step programs pass the active suffix; recover
+                # the static offset from the stack length
+                f = B - x_heads.shape[0]
+                return jax.vmap(F)(x_heads, starts[f:] if f else starts)
             return fine
 
         heads_spec = microbatch_spec(self.data_axis) \
@@ -686,7 +872,8 @@ class DiffusionSamplingEngine:
                 return jax.lax.all_gather(y_local, axis, tiled=True)
         else:
             def fine_local(x_heads):
-                return jax.vmap(F)(x_heads, starts)
+                f = B - x_heads.shape[0]
+                return jax.vmap(F)(x_heads, starts[f:] if f else starts)
 
         return compat.shard_map(fine_local, mesh=self.mesh,
                                 in_specs=heads_spec, out_specs=heads_spec,

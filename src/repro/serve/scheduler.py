@@ -35,10 +35,14 @@ Guarantees / non-guarantees (mirroring the serving layer's):
   ``numpy.random.Generator`` streams; the event loop has no ties broken by
   id/hash order);
 * the cost model is *optimistic* (assumes the request's micro-batch steps
-  back-to-back with no cross-group contention and trusts ``iters_hint``):
-  CostAware rejection is sound only for requests that would miss their SLO
-  even under this best case — it under-rejects, never over-rejects, and it
-  does NOT guarantee admitted requests meet their deadlines.
+  back-to-back with no cross-group contention, charges the truncated
+  per-refinement cost, and takes the most optimistic of the engine's
+  learned per-tier :class:`~repro.serve.diffusion.IterationEMA` estimate
+  and the caller's ``iters_hint``): CostAware rejection sheds only
+  requests that would miss their SLO even under this best case.  It does
+  NOT guarantee admitted requests meet their deadlines, and
+  "never over-rejects" is relative to the iteration estimate — an
+  unusually easy request in a hard tier can still beat it.
 
 Adding a policy: subclass :class:`Policy` and implement ``select(now,
 queue, engine)`` returning the index of the queue entry to admit next

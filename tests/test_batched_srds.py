@@ -13,8 +13,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (SolverConfig, SRDSConfig, make_schedule,
-                        sample_sequential, srds_sample)
+from repro.core import (SolverConfig, SRDSConfig, iteration_cost,
+                        make_schedule, sample_sequential, srds_sample,
+                        truncated_evals)
 from repro.serve.diffusion import DiffusionSamplingEngine, SampleRequest
 from conftest import to_f64
 
@@ -179,9 +180,11 @@ def test_serving_engine_beats_lockstep_gating():
     lockstep = sum(len(g) * (b + max(g) * (b * s + b)) * e
                    for g in (iters[i:i + k] for i in range(0, len(iters), k)))
     assert eng.stats()["effective_evals"] < lockstep
-    # and the per-sample effective evals equal the independent-run cost
+    # and the per-sample effective evals equal the truncated
+    # independent-run cost (the engine's own frontier schedule)
+    cost = iteration_cost(64, None, 1)
     for rid, it in zip(rids, iters):
-        assert out[rid].model_evals == (b + it * (b * s + b)) * e
+        assert out[rid].model_evals == truncated_evals(cost, it)
 
 
 def test_serving_engine_groups_incompatible_grids():

@@ -71,10 +71,13 @@ def test_wavefront_exact_and_superstep_model():
     _run(r"""
 samp = make_pipelined_sampler(mesh, "time", model_fn, sched, solver,
                               SRDSConfig(tol=0.0))
-res, steps = samp(x0)
+res, steps, evals = samp(x0)
 assert float(jnp.max(jnp.abs(res.sample - ref))) < 1e-10
 k = int(res.iterations); S = N // 8
 assert int(steps) <= k * S + 8 + 2, (int(steps), k)
+# retirement: device i stops evaluating after refinement i+1, so physical
+# evals stay strictly below all-devices-every-superstep
+assert 0 < int(evals) < int(steps) * 8 * 2, (int(evals), int(steps))
 """)
 
 
@@ -82,7 +85,7 @@ def test_wavefront_early_convergence():
     _run(r"""
 samp = make_pipelined_sampler(mesh, "time", model_fn, sched, solver,
                               SRDSConfig(tol=1e-4))
-res, steps = samp(x0)
+res, steps, evals = samp(x0)
 k = int(res.iterations)
 assert k < 8, k
 assert float(jnp.mean(jnp.abs(res.sample - ref))) < 1e-3
@@ -101,8 +104,8 @@ import numpy as np
 cfg = SRDSConfig(tol=1e-4, num_blocks=8)
 res_seq = srds_sample(model_fn, sched, solver, x0, cfg)
 res_sh = make_sharded_sampler(mesh, "time", model_fn, sched, solver, cfg)(x0)
-res_wf, steps = make_pipelined_sampler(mesh, "time", model_fn, sched, solver,
-                                       SRDSConfig(tol=1e-4))(x0)
+res_wf, steps, _ = make_pipelined_sampler(mesh, "time", model_fn, sched,
+                                          solver, SRDSConfig(tol=1e-4))(x0)
 assert res_wf.delta_history.shape == res_sh.delta_history.shape \
     == res_seq.delta_history.shape == (8,), res_wf.delta_history.shape
 for res in (res_seq, res_sh, res_wf):
@@ -156,7 +159,7 @@ xb = jax.random.normal(jax.random.PRNGKey(3), (2, 6), dtype=jnp.float64) \
 refb = sample_sequential(model_fn, sched, solver, xb)
 samp = make_pipelined_sampler(mesh, "time", model_fn, sched, solver,
                               SRDSConfig(tol=1e-4, per_sample=True))
-res, steps = samp(xb)
+res, steps, _ = samp(xb)
 assert res.iterations.shape == (2,) and res.delta_history.shape == (8, 2)
 it = np.asarray(res.iterations)
 assert it.min() >= 1 and it.max() <= 8
@@ -188,7 +191,7 @@ sched16 = DiffusionSchedule(ab=sched16.ab.astype(jnp.float64),
 ref16 = sample_sequential(model_fn, sched16, solver, x0)
 samp = make_pipelined_sampler(mesh, "time", model_fn, sched16, solver,
                               SRDSConfig(tol=0.0))   # s_steps = 2
-res, steps = samp(x0)
+res, steps, _ = samp(x0)
 k = int(res.iterations)
 assert k <= 8, k
 h = np.asarray(res.delta_history)
@@ -343,3 +346,127 @@ withs = make_sharded_sampler(mesh, "time", model_fn, sched, solver,
                              straggler_fn=strag)(x0)
 assert int(withs.iterations) >= int(base.iterations)
 """)
+
+
+def test_sharded_truncation_matches_untruncated():
+    """Converged-prefix truncation under shard_map: the suffix is
+    redistributed over the axis (retired prefix blocks free whole
+    devices).  Iterations and (f32) delta_history match the untruncated
+    distributed run bitwise; samples match to a few f64 ulps — under
+    shard_map the while_loop -> unrolled-cond swap perturbs XLA's loop
+    codegen in the last bits even for identical math (the same effect
+    makes while vs scan differ here), so the single-program driver's
+    bitwise guarantee relaxes to ulp-level for the sharded one."""
+    _run(r"""
+import numpy as np
+scale = jnp.linspace(0.5, 1.5, 6)
+emodel = lambda x, t: jnp.tanh(x * scale) * (0.5 + 0.001 * t)
+eref = sample_sequential(emodel, sched, solver, x0)
+for tol in (0.0, 1e-4):
+    cfg_p = SRDSConfig(tol=tol, num_blocks=8)
+    cfg_t = SRDSConfig(tol=tol, num_blocks=8, truncate=True)
+    res_p = make_sharded_sampler(mesh, "time", emodel, sched, solver, cfg_p)(x0)
+    res_t = make_sharded_sampler(mesh, "time", emodel, sched, solver, cfg_t)(x0)
+    assert int(res_p.iterations) == int(res_t.iterations), tol
+    assert np.array_equal(np.asarray(res_p.delta_history),
+                          np.asarray(res_t.delta_history)), tol
+    np.testing.assert_allclose(np.asarray(res_t.sample),
+                               np.asarray(res_p.sample),
+                               rtol=0, atol=1e-12, err_msg=str(tol))
+    res_s = srds_sample(emodel, sched, solver, x0, cfg_t)
+    np.testing.assert_allclose(np.asarray(res_t.sample),
+                               np.asarray(res_s.sample),
+                               rtol=0, atol=1e-12, err_msg=str(tol))
+    if tol == 0.0 and \
+            float(jnp.max(jnp.abs(res_t.sample - eref))) > 1e-10:
+        raise SystemExit("truncated sharded run lost exactness")
+# 16 blocks on 8 devices: truncation shrinks per-device chunks too
+cfg16 = SRDSConfig(tol=0.0, num_blocks=16, truncate=True)
+res16 = make_sharded_sampler(mesh, "time", emodel, sched, solver, cfg16)(x0)
+ref16 = make_sharded_sampler(mesh, "time", emodel, sched, solver,
+                             SRDSConfig(tol=0.0, num_blocks=16))(x0)
+assert int(res16.iterations) == int(ref16.iterations)
+np.testing.assert_allclose(np.asarray(res16.sample),
+                           np.asarray(ref16.sample), rtol=0, atol=1e-12)
+""")
+
+
+def test_sharded_truncation_rejects_stragglers():
+    _run(r"""
+try:
+    make_sharded_sampler(mesh, "time", model_fn, sched, solver,
+                         SRDSConfig(tol=0.0, num_blocks=8, truncate=True),
+                         straggler_fn=lambda p: jnp.zeros((8,), bool))(x0)
+    raise SystemExit("expected ValueError for truncate + straggler_fn")
+except ValueError as e:
+    assert "straggler" in str(e), e
+""")
+
+
+def test_sharded_sampler_data_axis_runtime_tol():
+    """make_sharded_sampler's runtime-tol path shards the K sample batch
+    over a data mesh axis (2D (time, data) mesh): bit-identical to the
+    unsharded per-sample run, lane for lane — and non-per-sample configs
+    are rejected."""
+    code = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+from repro.core import *
+from repro.core.pipelined import make_sharded_sampler
+from repro.compat import make_mesh
+
+assert len(jax.devices()) == 8
+mesh = make_mesh((4, 2), ("time", "data"))
+scale = jnp.linspace(0.5, 1.5, 6)
+emodel = lambda x, t: jnp.tanh(x * scale) * (0.5 + 0.001 * t)
+N = 64
+sched = make_schedule("ddpm_linear", N)
+sched = DiffusionSchedule(ab=sched.ab.astype(jnp.float64),
+                          t_model=sched.t_model.astype(jnp.float64))
+solver = SolverConfig("ddim")
+xb = jax.random.normal(jax.random.PRNGKey(3), (4, 6), dtype=jnp.float64) \
+    * jnp.linspace(0.4, 2.0, 4)[:, None]
+tols = jnp.array([1e-2, 1e-4, 1e-6, 1e-3], jnp.float32)
+cfg = SRDSConfig(per_sample=True, num_blocks=8)
+res_s = srds_sample(emodel, sched, solver, xb, cfg, tol=tols)
+samp = make_sharded_sampler(mesh, "time", emodel, sched, solver, cfg,
+                            data_axis="data")
+res_d = samp(xb, tols)
+assert np.array_equal(np.asarray(res_d.iterations), np.asarray(res_s.iterations))
+assert bool(jnp.all(res_d.sample == res_s.sample))
+assert np.array_equal(np.asarray(res_d.delta_history),
+                      np.asarray(res_s.delta_history))
+# scalar runtime tol broadcasts over the sharded batch
+res_sc = samp(xb, 1e-4)
+res_sc_ref = srds_sample(emodel, sched, solver, xb, cfg,
+                         tol=jnp.full((4,), 1e-4, jnp.float32))
+assert bool(jnp.all(res_sc.sample == res_sc_ref.sample))
+# joint-norm gating cannot shard the batch: loud error
+try:
+    make_sharded_sampler(mesh, "time", emodel, sched, solver,
+                         SRDSConfig(num_blocks=8), data_axis="data")
+    raise SystemExit("expected ValueError without per_sample")
+except ValueError as e:
+    assert "per_sample" in str(e) or "per-sample" in str(e), e
+# K=3 does not divide the 2-wide data axis: loud error at call time
+try:
+    samp(xb[:3], tols[:3])
+    raise SystemExit("expected ValueError for indivisible K")
+except ValueError as e:
+    assert "not divisible" in str(e), e
+# truncation composes with the data-sharded batch (samples to a few f64
+# ulps: under shard_map the unrolled-cond loop codegen shifts last bits)
+cfg_t = SRDSConfig(per_sample=True, num_blocks=8, truncate=True)
+res_t = make_sharded_sampler(mesh, "time", emodel, sched, solver, cfg_t,
+                             data_axis="data")(xb, tols)
+assert np.array_equal(np.asarray(res_t.iterations),
+                      np.asarray(res_s.iterations))
+np.testing.assert_allclose(np.asarray(res_t.sample),
+                           np.asarray(res_s.sample), rtol=0, atol=1e-12)
+print("DATA AXIS OK")
+"""
+    r = run_subprocess(code, devices=8)
+    assert r.returncode == 0 and "DATA AXIS OK" in r.stdout, \
+        f"stdout={r.stdout}\nstderr={r.stderr}"

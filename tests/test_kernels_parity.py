@@ -1,0 +1,130 @@
+"""Pallas/ref parity for the sampler's fused elementwise kernels —
+``ddim_fused``, ``parareal_update`` and the new fused-residual feed —
+swept over f32/bf16, non-lane-multiple shapes (the padding path) and the
+explicit ``interpret=True`` CPU entry points.
+
+Unlike tests/test_kernels.py this file needs no ``hypothesis``: the parity
+matrix here must run on every environment (it is the ground truth for
+flipping the fused path on by default where kernels compile)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEYS = jax.random.split(jax.random.PRNGKey(42), 4)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("shape", [(7,), (128,), (33, 5), (4, 129), (1000,)])
+def test_parareal_update_dtype_and_padding(shape, dtype):
+    """Kernel/ref parity across dtypes and non-lane-multiple shapes (the
+    padding path pads the flattened operands to a multiple of 128)."""
+    dt = jnp.dtype(dtype)
+    y = jax.random.normal(KEYS[0], shape, dt)
+    c = jax.random.normal(KEYS[1], shape, dt)
+    p = jax.random.normal(KEYS[2], shape, dt)
+    out_k, r_k = ops.parareal_update(y, c, p, use_kernel=True)
+    out_r, r_r = ref.parareal_update(y, c, p)
+    assert out_k.shape == shape and out_k.dtype == dt
+    tol = 2e-2 if dtype == "bfloat16" else 1e-6
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(float(r_k), float(r_r),
+                               rtol=3e-2 if dtype == "bfloat16" else 1e-4)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("shape", [(13,), (256,), (33, 5), (4, 129)])
+def test_parareal_update_residual_parity(shape, dtype):
+    """The fused-residual kernel (per-tile L1 partials feeding the
+    convergence norm) vs the jnp oracle, across dtypes + padding shapes."""
+    dt = jnp.dtype(dtype)
+    y, c, p, o = (jax.random.normal(k, shape, dt) for k in KEYS)
+    out_k, r_k = ops.parareal_update_residual(y, c, p, o, use_kernel=True)
+    out_r, r_r = ref.parareal_update_residual(y, c, p, o)
+    assert out_k.shape == shape and out_k.dtype == dt
+    tol = 2e-2 if dtype == "bfloat16" else 1e-6
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(float(r_k), float(r_r),
+                               rtol=3e-2 if dtype == "bfloat16" else 1e-4)
+
+
+@pytest.mark.parametrize("shape", [(3, 7), (2, 128), (4, 33, 5), (2, 129),
+                                   (5, 1000)])
+def test_parareal_update_residual_batched(shape):
+    """Batched (K,) path: per-sample partials (rows are padded per sample
+    so tiles never straddle samples) vs the oracle's per-sample sums."""
+    y, c, p, o = (jax.random.normal(k, shape) for k in KEYS)
+    out_k, r_k = ops.parareal_update_residual(y, c, p, o, batched=True,
+                                              use_kernel=True)
+    out_r, r_r = ref.parareal_update_residual(y, c, p, o, batched=True)
+    assert r_k.shape == (shape[0],)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_r), rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("n", [1, 127, 128, 129, 4096])
+def test_ddim_fused_padding_and_dtypes_interpret(n, dtype):
+    """ddim_fused kernel/ref parity on CPU via interpret=True, pinned to
+    the non-lane-multiple (padding) and exact-multiple row layouts."""
+    from repro.kernels.elementwise import ddim_fused_pallas
+    dt = jnp.dtype(dtype)
+    x = jax.random.normal(KEYS[0], (n,), dt)
+    e = jax.random.normal(KEYS[1], (n,), dt)
+    a, b = 0.37, 0.61
+    out = ops.ddim_fused(x, e, a, b, use_kernel=True)
+    exp = ref.ddim_fused(x, e, a, b)
+    assert out.shape == x.shape and out.dtype == dt
+    tol = 1e-2 if dtype == "bfloat16" else 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+    # and the raw 2D kernel entry point under explicit interpret=True
+    rows = -(-n // 128)
+    x2 = jnp.zeros((rows, 128), dt).at[0, 0].set(1.0)
+    e2 = jnp.zeros((rows, 128), dt)
+    ab = jnp.asarray([[a, b]], jnp.float32)
+    o2 = ddim_fused_pallas(x2, e2, ab, interpret=True)
+    exp2 = ref.ddim_fused(x2, e2, a, b)
+    np.testing.assert_allclose(np.asarray(o2, np.float32),
+                               np.asarray(exp2, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_parareal_residual_kernel_interpret_entry_point():
+    """The raw 2D fused-residual kernel under explicit interpret=True."""
+    from repro.kernels.elementwise import parareal_update_residual_pallas
+    y, c, p, o = (jax.random.normal(k, (6, 128)) for k in KEYS)
+    out, partials = parareal_update_residual_pallas(y, c, p, o,
+                                                    block_rows=2,
+                                                    interpret=True)
+    assert partials.shape == (3, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(y + c - p),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        float(jnp.sum(partials)),
+        float(jnp.sum(jnp.abs((y + c - p) - o))), rtol=1e-5)
+
+
+def test_fused_default_resolution():
+    """fused_default is on only where compiled kernels exist (TPU) and
+    never under FORCE_REF; the tri-state resolver honors explicit bools."""
+    from repro.core.engine import resolve_fused
+    on_tpu = jax.default_backend() == "tpu"
+    assert ops.fused_default() == on_tpu
+    assert resolve_fused(None) == on_tpu
+    assert resolve_fused(True) is True
+    assert resolve_fused(False) is False
+    saved = ops.FORCE_REF
+    try:
+        ops.FORCE_REF = True
+        assert ops.fused_default() is False
+    finally:
+        ops.FORCE_REF = saved

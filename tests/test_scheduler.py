@@ -18,7 +18,7 @@ import pytest
 
 from repro.core import (SolverConfig, SRDSConfig, iteration_cost,
                         make_schedule, predicted_evals, srds_sample,
-                        srds_stats)
+                        srds_stats, truncated_evals)
 from repro.serve import (EDF, FIFO, CostAware, DiffusionSamplingEngine,
                          SampleRequest, Tier, bursty_trace, poisson_trace,
                          simulate)
@@ -138,23 +138,63 @@ def test_edf_beats_fifo_p95_on_fixed_trace():
 
 def test_cost_model_matches_engine_accounting():
     """predict_completion must be the engine's own iteration_cost arithmetic
+    (truncated, matching the frontier schedule the step programs execute)
     — admission decisions and billing can never disagree."""
     model = _elementwise_model()
     eng = _engine(model)
     req = SampleRequest(seed=0, tol=1e-3, iters_hint=3)
     cost = iteration_cost(64, None, 1)
-    expect = eng.clock + eng.batch_size * predicted_evals(cost, 3) \
+    expect = eng.clock + eng.batch_size * truncated_evals(cost, 3) \
         * eng.sec_per_eval
     assert eng.predict_completion(req) == expect
     # no hint -> worst case max_iters (= B)
     req2 = SampleRequest(seed=0, tol=1e-3)
-    expect2 = eng.clock + eng.batch_size * predicted_evals(cost, 8) \
+    expect2 = eng.clock + eng.batch_size * truncated_evals(cost, 8) \
         * eng.sec_per_eval
     assert eng.predict_completion(req2) == expect2
-    # and srds_stats' total rides the same export
+    # a truncation-disabled engine predicts with the untruncated unit cost
+    eng_u = _engine(model, truncate=False)
+    expect_u = eng_u.clock + eng_u.batch_size * predicted_evals(cost, 3) \
+        * eng_u.sec_per_eval
+    assert eng_u.predict_completion(req) == expect_u
+    # and srds_stats' totals ride the same exports
     sched = make_schedule("ddpm_linear", 64)
     st = srds_stats(sched, SolverConfig("ddim"), SRDSConfig(), 3)
     assert st.total_evals == predicted_evals(cost, 3)
+    st_t = srds_stats(sched, SolverConfig("ddim"), SRDSConfig(truncate=True), 3)
+    assert st_t.total_evals == truncated_evals(cost, 3)
+
+
+def test_online_iters_predictor_learns_from_completions():
+    """The EMA predictor replaces iters_hint once the tier has completions:
+    predictions converge toward observed iteration counts, reset with
+    engine metrics, and never exceed the worst-case cap."""
+    model = _elementwise_model()
+    eng = _engine(model)
+    req = SampleRequest(seed=0, tol=1e-2, iters_hint=7)
+    # before any completion: falls back to the (bad) static hint
+    assert eng.predict_iterations(req) == 7.0
+    for i in range(4):
+        eng.submit(SampleRequest(seed=i, tol=1e-2))
+    out = eng.drain()
+    observed = {out[r].iterations for r in out}
+    est = eng.predict_iterations(req)
+    assert min(observed) <= est <= max(observed)
+    # learned estimate now beats the static hint in predict_completion
+    cost = iteration_cost(64, None, 1)
+    expect = eng.clock + eng.batch_size * truncated_evals(cost, est) \
+        * eng.sec_per_eval
+    assert eng.predict_completion(req) == pytest.approx(expect)
+    # other tiers (different tol) are unaffected: hint fallback
+    assert eng.predict_iterations(SampleRequest(seed=9, tol=1e-6,
+                                                iters_hint=5)) == 5.0
+    # the estimate is the MOST OPTIMISTIC of EMA and hint (an EMA is a
+    # mean, so alone it could over-reject an easier-than-average request)
+    low_hint = SampleRequest(seed=9, tol=1e-2, iters_hint=1)
+    assert eng.predict_iterations(low_hint) == 1.0
+    # reset_metrics clears the learned state (warm-run determinism)
+    eng.reset_metrics()
+    assert eng.predict_iterations(req) == 7.0
 
 
 def test_cost_aware_rejects_hopeless_requests():
@@ -162,8 +202,8 @@ def test_cost_aware_rejects_hopeless_requests():
     deadline is shed at admission; feasible batch-mates are unaffected."""
     model = _elementwise_model()
     eng = _engine(model)
-    # worst case for a 64-grid run: (B + B*(B*S+B)) * K evals * 1e-5 s/eval
-    # = 11.68 ms -> a 1 ms SLO is hopeless, a 1 s SLO is comfortable
+    # worst case for a truncated 64-grid run: ~790 K-lane evals * 1e-5
+    # s/eval = 7.9 ms -> a 1 ms SLO is hopeless, a 1 s SLO is comfortable
     trace = [SampleRequest(seed=0, tol=1e-6, arrival_time=0.0, slo_ms=1.0),
              SampleRequest(seed=1, tol=1e-2, arrival_time=0.0, slo_ms=1000.0,
                            iters_hint=2)]

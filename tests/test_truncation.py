@@ -1,0 +1,276 @@
+"""Converged-prefix truncation: the sliding-window hot loop must be
+bit-identical to the untruncated engine while provably doing less work,
+and the serve hot path must honor its host-traffic contract (one device
+sync per refinement, completed-lane-only fetches, truncated accounting).
+
+Bitwise tests use an elementwise denoiser (the repo's standard trick: lane
+math is then identical across fine-solve batch widths, so any mismatch is
+a real truncation bug, not an XLA gemm-kernel shape effect)."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SolverConfig, SRDSConfig, iteration_cost,
+                        make_schedule, predicted_evals, sample_sequential,
+                        srds_sample, srds_stats, truncated_evals)
+from repro.core.engine import prefix_frontier, run_parareal
+from repro.serve.diffusion import DiffusionSamplingEngine, SampleRequest
+import repro.serve.diffusion as serve_diffusion
+from conftest import to_f64
+
+TOLS = [1e-2, 1e-4, 1e-6, 1e-3, 1e-5]
+
+
+def _elementwise_model(dim=8):
+    scale = jnp.linspace(0.5, 1.5, dim)
+
+    def model_fn(x, t):
+        return jnp.tanh(x * scale) * (0.5 + 0.001 * t)
+
+    return model_fn
+
+
+def _x0(batch=3, dim=8):
+    return jax.random.normal(jax.random.PRNGKey(1), (batch, dim),
+                             dtype=jnp.float64)
+
+
+# --------------------------------------------------------------------------
+# engine / srds_sample
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("solver", ["ddim", "heun"])
+@pytest.mark.parametrize("tol", [0.0, 1e-4])
+def test_truncated_bit_identical_to_untruncated(solver, tol):
+    """The tentpole guarantee: same sample, iterations and delta_history as
+    the while_loop engine, for every solver/tolerance combination."""
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    cfg = SolverConfig(solver)
+    a = srds_sample(model, sched, cfg, _x0(), SRDSConfig(tol=tol))
+    b = srds_sample(model, sched, cfg, _x0(), SRDSConfig(tol=tol,
+                                                         truncate=True))
+    assert bool(jnp.all(a.sample == b.sample))
+    assert int(a.iterations) == int(b.iterations)
+    np.testing.assert_array_equal(np.asarray(a.delta_history),
+                                  np.asarray(b.delta_history))
+    assert float(a.final_delta) == float(b.final_delta)
+
+
+def test_truncated_exact_to_cap_equals_sequential():
+    """Prop 1 survives truncation: tol=0 run to the cap reproduces the
+    sequential solve."""
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 36))
+    ref = sample_sequential(model, sched, SolverConfig("ddim"), _x0())
+    res = srds_sample(model, sched, SolverConfig("ddim"), _x0(),
+                      SRDSConfig(tol=0.0, truncate=True))
+    np.testing.assert_allclose(np.asarray(res.sample), np.asarray(ref),
+                               rtol=0, atol=1e-12)
+
+
+def test_truncated_per_sample_gating_bit_identical():
+    """Truncation composes with per-sample convergence gating under a
+    mixed-tolerance vector."""
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    X = _x0(len(TOLS)) * jnp.linspace(0.3, 2.5, len(TOLS))[:, None]
+    tols = jnp.asarray(TOLS, jnp.float32)
+    a = srds_sample(model, sched, SolverConfig("ddim"), X,
+                    SRDSConfig(per_sample=True), tol=tols)
+    b = srds_sample(model, sched, SolverConfig("ddim"), X,
+                    SRDSConfig(per_sample=True, truncate=True), tol=tols)
+    assert len(set(int(i) for i in a.iterations)) > 1
+    assert bool(jnp.all(a.sample == b.sample))
+    np.testing.assert_array_equal(np.asarray(a.iterations),
+                                  np.asarray(b.iterations))
+    np.testing.assert_array_equal(np.asarray(a.delta_history),
+                                  np.asarray(b.delta_history))
+
+
+def test_truncated_fixed_iters_bit_identical():
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    a = srds_sample(model, sched, SolverConfig("ddim"), _x0(),
+                    SRDSConfig(fixed_iters=True, max_iters=5))
+    b = srds_sample(model, sched, SolverConfig("ddim"), _x0(),
+                    SRDSConfig(fixed_iters=True, max_iters=5, truncate=True))
+    assert bool(jnp.all(a.sample == b.sample))
+    np.testing.assert_array_equal(np.asarray(a.delta_history),
+                                  np.asarray(b.delta_history))
+
+
+def test_truncate_rejects_incompatible_modes():
+    """block_sharding (GSPMD constraint) and straggler reuse keep the
+    while_loop path — truncating them must fail loudly."""
+    fine = lambda h, p, y: h
+    G = lambda x, i0: x
+    starts = jnp.arange(4, dtype=jnp.int32)
+    x0 = jnp.ones((2,))
+    with pytest.raises(ValueError, match="block-sharding"):
+        run_parareal(G, fine, x0, starts, tol=0.0, max_iters=2,
+                     constrain=lambda t: t, truncate=True)
+    with pytest.raises(ValueError, match="carry_fine_results"):
+        run_parareal(G, fine, x0, starts, tol=0.0, max_iters=2,
+                     carry_fine_results=True, truncate=True)
+
+
+# --------------------------------------------------------------------------
+# accounting
+# --------------------------------------------------------------------------
+
+def test_frontier_schedule_and_truncated_accounting():
+    """The frontier advances one block per refinement, one refinement
+    behind exactness (bitwise stability needs the second recomputation);
+    truncated totals are strictly below untruncated ones from the third
+    refinement on and floor at one live block per refinement."""
+    assert [prefix_frontier(p) for p in range(5)] == [0, 0, 1, 2, 3]
+    cost = iteration_cost(100, None, 1)          # B=10, S=10
+    assert cost.num_blocks == 10 and cost.fine_steps == 10
+    assert cost.refine_evals_at(0) == cost.refine_evals == 110
+    assert cost.refine_evals_at(3) == 7 * 11
+    assert cost.refine_evals_at(99) == 1 * 11    # floor: last block lives
+    assert truncated_evals(cost, 0) == cost.init_evals
+    assert truncated_evals(cost, 2) == predicted_evals(cost, 2)
+    for k in range(3, 11):
+        assert truncated_evals(cost, k) < predicted_evals(cost, k)
+    # the headline: >= 25% fewer physical evals at N=100 run to the cap
+    assert truncated_evals(cost, 10) <= 0.75 * predicted_evals(cost, 10)
+    # continuous extension for EMA estimates
+    assert truncated_evals(cost, 2.5) == \
+        truncated_evals(cost, 2) + 0.5 * cost.refine_evals_at(1)
+    # srds_stats rides the same arithmetic
+    sched = make_schedule("ddpm_linear", 100)
+    st = srds_stats(sched, SolverConfig("ddim"), SRDSConfig(truncate=True), 10)
+    assert st.total_evals == truncated_evals(cost, 10)
+    st_u = srds_stats(sched, SolverConfig("ddim"), SRDSConfig(), 10)
+    assert st.serial_evals < st_u.serial_evals
+
+
+# --------------------------------------------------------------------------
+# the serve hot path
+# --------------------------------------------------------------------------
+
+class _FetchCounter:
+    """Monkeypatch hook for repro.serve.diffusion._host_fetch: records one
+    entry (the fetched array's shape) per device->host sync."""
+
+    def __init__(self, real):
+        self.real = real
+        self.shapes = []
+
+    def __call__(self, x):
+        out = self.real(x)
+        self.shapes.append(out.shape)
+        return out
+
+
+def _engine(model, **kw):
+    kw.setdefault("batch_size", 3)
+    return DiffusionSamplingEngine(model, (8,), SolverConfig("ddim"),
+                                   num_steps=64, dtype=jnp.float64, **kw)
+
+
+def test_step_once_single_host_sync_per_iteration(monkeypatch):
+    """The serve hot loop performs exactly ONE device sync (the batched
+    (K,) residual) per refinement, plus one per completed request — and
+    the completion fetch is the lane's final state only, never a
+    trajectory- or batch-shaped tensor."""
+    model = _elementwise_model()
+    counter = _FetchCounter(serve_diffusion._host_fetch)
+    monkeypatch.setattr(serve_diffusion, "_host_fetch", counter)
+    eng = _engine(model)
+    rids = [eng.submit(SampleRequest(seed=i, tol=TOLS[i % len(TOLS)]))
+            for i in range(5)]
+    queue = eng.pull_queue()
+    for rid, req in queue[:eng.batch_size]:
+        eng.admit(rid, req)
+    queue = queue[eng.batch_size:]
+    done = {}
+    while eng.busy() or queue:
+        while queue and eng.free_slots(queue[0][1]) > 0:
+            rid, req = queue.pop(0)
+            eng.admit(rid, req)
+        before = len(counter.shapes)
+        completions = eng.step_once()
+        done.update(dict(completions))
+        fetched = counter.shapes[before:]
+        # exactly 1 residual sync + 1 lane fetch per completion
+        assert len(fetched) == 1 + len(completions), fetched
+        assert fetched[0] == (eng.batch_size,)           # (K,) residuals
+        for shp in fetched[1:]:
+            assert shp == (8,), shp                      # one lane's sample
+    assert set(done) == set(rids)
+    for rid in rids:
+        assert done[rid].sample.shape == (8,)
+
+
+def test_serve_truncated_engine_bit_identical_and_cheaper():
+    """truncate=True (the default) vs truncate=False: identical responses
+    (samples, iterations, history), strictly fewer physical evals on a
+    drain whose tail advances the group frontier."""
+    model = _elementwise_model()
+    reqs = [SampleRequest(seed=i, tol=TOLS[i % len(TOLS)]) for i in range(6)]
+
+    def run(**kw):
+        eng = _engine(model, truncate_quantum=1, **kw)
+        rids = [eng.submit(r) for r in reqs]
+        out = eng.drain()
+        return [out[r] for r in rids], eng.stats()
+
+    trunc, st_t = run()
+    plain, st_p = run(truncate=False)
+    for a, b in zip(trunc, plain):
+        assert np.array_equal(a.sample, b.sample)
+        assert a.iterations == b.iterations
+        np.testing.assert_array_equal(a.delta_history, b.delta_history)
+    assert st_t["physical_evals"] < st_p["physical_evals"]
+    # billing follows the engine's mode: truncated schedule for the
+    # truncating engine, the flat untruncated rate for truncate=False
+    # (whose programs really do run full-width refinements)
+    cost = iteration_cost(64, None, 1)
+    for r in trunc:
+        assert r.model_evals == truncated_evals(cost, r.iterations)
+    for r in plain:
+        assert r.model_evals == predicted_evals(cost, r.iterations)
+    assert st_p["effective_evals"] == sum(r.model_evals for r in plain)
+
+
+def test_serve_truncation_quantum_bounds_program_cache():
+    """The quantized frontier compiles at most ~B/quantum step variants
+    (all of them multiples of the quantum)."""
+    model = _elementwise_model()
+    eng = _engine(model, truncate_quantum=4)    # B=8 -> minf in {0, 4}
+    for i in range(4):
+        eng.submit(SampleRequest(seed=i, tol=TOLS[i % len(TOLS)]))
+    eng.drain()
+    (_, step_for, B, _) = eng._programs[next(iter(eng._programs))]
+    assert B == 8
+    assert set(step_for.cache) <= {0, 4}
+    # the default quantum is B//4 -> at most 4 variants
+    eng2 = _engine(model)
+    for i in range(3):
+        eng2.submit(SampleRequest(seed=i, tol=TOLS[i % len(TOLS)]))
+    eng2.drain()
+    (_, step_for2, _, _) = eng2._programs[next(iter(eng2._programs))]
+    assert set(step_for2.cache) <= {0, 2, 4, 6}
+
+
+def test_serve_block_axis_disables_truncation():
+    """Block-parallel fine solves slice the full block dim per device, so
+    the engine must force truncation off rather than mis-shard."""
+    model = _elementwise_model()
+    eng = DiffusionSamplingEngine(model, (8,), SolverConfig("ddim"),
+                                  num_steps=64, batch_size=2,
+                                  dtype=jnp.float64, mesh=None, axis=None)
+    assert eng.truncate
+    # axis set (mesh checked lazily at program build) -> truncation off
+    eng2 = DiffusionSamplingEngine(model, (8,), SolverConfig("ddim"),
+                                   num_steps=64, batch_size=2,
+                                   dtype=jnp.float64, mesh=object(),
+                                   axis="time")
+    assert not eng2.truncate
