@@ -1,27 +1,38 @@
 """CI regression gate for the core-hot-path benchmark (BENCH_core.json).
 
-Compares a freshly emitted ``benchmarks.table11_truncation`` artifact
+Compares a freshly emitted artifact (``benchmarks.table11_truncation``
+rows plus ``benchmarks.table12_window`` rows, appended into one file)
 against the committed baseline and fails on a >20% evals/sample
 regression.  Only the *deterministic* fields are gated — physical model
-evals per sample (``evals_truncated``) and the truncation saving — never
-wall-clock, which is runner noise.  A baseline row that disappears is a
-failure too (silently dropping a measured config is how regressions hide).
+evals per sample (every ``evals_*`` count a row carries) and the
+truncation saving — never wall-clock, which is runner noise.  A baseline
+row that disappears is a failure too (silently dropping a measured config
+is how regressions hide), as is an ``ExactPrefix`` run that lost
+bit-identity with the untruncated engine (``bit_identical`` /
+``bit_identical_exact``) on a matching environment, or a table12 row
+whose residual window stopped doing strictly fewer evals than the exact
+prefix.
 
 Usage (what .github/workflows/ci.yml runs):
 
     PYTHONPATH=src python -m benchmarks.table11_truncation --out BENCH_core.json
+    PYTHONPATH=src python -m benchmarks.table12_window --out BENCH_core.json
     PYTHONPATH=src python -m benchmarks.check_bench_core \
         --current BENCH_core.json \
         --baseline benchmarks/baselines/BENCH_core_baseline.json
 
-Refreshing the baseline after an intentional perf change: re-run the
-emitter and commit the new JSON to ``benchmarks/baselines/``.
+Refreshing the baseline after an intentional perf change: re-run both
+emitters into one JSON and commit it to ``benchmarks/baselines/``.
 """
 import argparse
 import json
 import sys
 
 TOLERANCE = 0.20      # fail when evals/sample grows by more than this
+
+# boolean bit-identity fields, by table: losing any of them on a matching
+# environment fails the gate
+_BIT_FIELDS = ("bit_identical", "bit_identical_exact")
 
 
 def check(current: dict, baseline: dict, tolerance: float = TOLERANCE):
@@ -49,20 +60,39 @@ def check(current: dict, baseline: dict, tolerance: float = TOLERANCE):
             failures.append(f"{name}: row missing from current artifact")
             continue
         if cur.get("iterations") == base.get("iterations"):
-            for field in ("evals_truncated", "evals_untruncated"):
-                b, c = base[field], cur[field]
-                if c > b * (1.0 + tolerance):
+            # every deterministic eval count the row carries (table11:
+            # evals_truncated/untruncated; table12: evals_window/
+            # exact_prefix/flat) gates at the same tolerance
+            for field in sorted(base):
+                if not field.startswith("evals_") or field.endswith("_pct"):
+                    continue
+                b, c = base[field], cur.get(field)
+                if c is not None and c > b * (1.0 + tolerance):
                     failures.append(
                         f"{name}: {field} regressed {b} -> {c} "
                         f"(+{100.0 * (c / b - 1.0):.1f}% > "
                         f"{100 * tolerance:.0f}%)")
-        if same_env and base.get("bit_identical") \
-                and not cur.get("bit_identical"):
-            failures.append(f"{name}: truncated run no longer bit-identical")
-        # the tentpole claim itself is part of the contract — but the
-        # saving ratio is also pure arithmetic of the iteration count, so
-        # it only gates when the counts match (same reason as evals_*)
-        if cur.get("iterations") == base.get("iterations") \
+        for bf in _BIT_FIELDS:
+            # a field the baseline measured True must stay True — absent
+            # counts as lost too (an emitter that stopped writing it is
+            # the silent-drop failure mode this gate exists for)
+            if same_env and base.get(bf) and not cur.get(bf):
+                failures.append(f"{name}: {bf} lost (exact path no longer "
+                                f"bit-identical)")
+        # table12 contract: the residual window must do strictly fewer
+        # evals than the exact prefix (checked on the current run alone —
+        # a window that stopped windowing is a regression at any count)
+        if "evals_window" in cur and "evals_exact_prefix" in cur \
+                and not cur["evals_window"] < cur["evals_exact_prefix"]:
+            failures.append(
+                f"{name}: residual window no longer beats the exact "
+                f"prefix ({cur['evals_window']} >= "
+                f"{cur['evals_exact_prefix']} evals)")
+        # the table11 tentpole claim itself is part of the contract — but
+        # the saving ratio is also pure arithmetic of the iteration count,
+        # so it only gates when the counts match (same reason as evals_*)
+        if "evals_truncated" in base \
+                and cur.get("iterations") == base.get("iterations") \
                 and base["evals_saving_pct"] >= 25.0 \
                 > cur["evals_saving_pct"]:
             failures.append(

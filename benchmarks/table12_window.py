@@ -1,0 +1,178 @@
+"""Table 12 (new): residual-driven sliding window — evals per sample and
+trajectory-vs-serial error for ``window_tol`` sweeps, vs the bit-exact
+``ExactPrefix`` frontier, at N=100 and N=1000.
+
+The residual window (``repro.core.window.ResidualWindow``) is the opt-in
+*approximate* mode: the refinement frontier advances past every leading
+block whose per-block residual passed ``window_tol``, not just the
+provably-exact prefix — fewer model evals at a quality cost this
+benchmark measures head-on.  Two deterministic quantities per row:
+
+* ``evals_window`` — per-sample model evals of the *realized* window
+  schedule (``SRDSResult.window_history`` priced by
+  :func:`repro.core.engine.windowed_evals`), vs ``evals_exact_prefix``
+  (:func:`truncated_evals`, the provable schedule) and ``evals_flat``
+  (no truncation);
+* ``max_err_window`` — max abs trajectory error vs the serial solve,
+  reported next to the exact engine's own ``max_err_exact`` floor and
+  asserted bounded (a window that drifts must crash the benchmark, not
+  emit pretty numbers).
+
+Before any window row is measured, the ``ExactPrefix`` *policy* run is
+asserted identical to the PR 4 ``truncate=True`` engine (same sample,
+iterations, delta_history) — the policy seam must not have changed the
+exact path — and recorded as ``bit_identical_exact`` (gated by
+``benchmarks.check_bench_core``).
+
+Appends its rows to the ``BENCH_core.json`` artifact (creating it if
+absent), alongside ``table11_truncation``'s:
+
+    PYTHONPATH=src python -m benchmarks.table11_truncation --out BENCH_core.json
+    PYTHONPATH=src python -m benchmarks.table12_window --out BENCH_core.json
+
+Row schema: ``{name, n, tol, window_tol, iterations, evals_flat,
+evals_exact_prefix, evals_window, evals_saving_pct, max_err_exact,
+max_err_window, err_bound, bit_identical_exact, t_window_s}`` —
+``evals_*`` and errors are deterministic (the regression gate keys on the
+eval counts); ``t_window_s`` is an informational wall-clock median.
+"""
+import argparse
+import json
+import os
+import platform
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ExactPrefix, ResidualWindow, SolverConfig, SRDSConfig,
+                        iteration_cost, make_schedule, predicted_evals,
+                        sample_sequential, srds_sample, truncated_evals,
+                        windowed_evals)
+
+from .common import emit, timeit, toy_denoiser
+
+# pinned configs: N=100 -> B=10 x S=10 (Prop 4's sqrt-N optimum); N=1000 ->
+# B=25 x S=40, capped at 8 refinements (CI-sized: convergence at TOL lands
+# well inside the cap, and the unrolled loop compiles 8 suffixes, not 25)
+CONFIGS = [dict(n=100, max_iters=None), dict(n=1000, max_iters=8)]
+DIM = 16
+SEED = 0
+TOL = 1e-4                        # convergence tolerance of every run
+WINDOW_TOLS = [1e-2, 1e-3, 1e-4]  # the approximation knob sweep
+
+
+def run_rows(n: int, max_iters=None, dim: int = DIM,
+             window_tols=tuple(WINDOW_TOLS)):
+    model_fn = toy_denoiser(dim=dim)
+    x0 = jax.random.normal(jax.random.PRNGKey(SEED), (2, dim))
+    sched = make_schedule("ddpm_linear", n)
+    solver = SolverConfig("ddim")
+    cost = iteration_cost(n, None, 1)
+    ref = jax.jit(lambda x: sample_sequential(model_fn, sched, solver, x))(x0)
+
+    def sample_with(cfg):
+        return jax.jit(lambda x, c=cfg: srds_sample(
+            model_fn, sched, solver, x, c))
+
+    # --- the exact side: PR 4 truncate engine vs the ExactPrefix policy —
+    # the policy seam must reproduce it bit for bit
+    samp_t = sample_with(SRDSConfig(tol=TOL, max_iters=max_iters,
+                                    truncate=True))
+    samp_e = sample_with(SRDSConfig(tol=TOL, max_iters=max_iters,
+                                    window=ExactPrefix()))
+    res_t = samp_t(x0)
+    res_e = samp_e(x0)
+    bit_identical_exact = (
+        bool(jnp.all(res_t.sample == res_e.sample))
+        and int(res_t.iterations) == int(res_e.iterations)
+        and bool(jnp.all(res_t.delta_history == res_e.delta_history)))
+    assert bit_identical_exact, (
+        f"ExactPrefix policy diverged from the truncate=True engine at "
+        f"n={n}: iters {int(res_e.iterations)} vs {int(res_t.iterations)}")
+    k_exact = int(res_t.iterations)
+    ev_flat = predicted_evals(cost, k_exact)
+    ev_exact = truncated_evals(cost, k_exact)
+    err_exact = float(jnp.max(jnp.abs(res_t.sample - ref)))
+
+    rows = []
+    for wt in window_tols:
+        samp_w = sample_with(SRDSConfig(tol=TOL, max_iters=max_iters,
+                                        window=ResidualWindow(wt)))
+        res_w = samp_w(x0)
+        k = int(res_w.iterations)
+        ev_w = windowed_evals(cost, np.asarray(res_w.window_history))
+        err_w = float(jnp.max(jnp.abs(res_w.sample - ref)))
+        # the approximation contract: drift is bounded by the knob (plus
+        # the convergence-tolerance floor every run already accepted);
+        # a real window bug is O(1)
+        bound = 20.0 * (wt + TOL) + 10.0 * err_exact
+        assert err_w <= bound, (
+            f"n={n} window_tol={wt}: trajectory error {err_w} exceeds "
+            f"bound {bound}")
+        t_w = timeit(samp_w, x0)
+        name = f"table12/n{n}_wtol{wt:g}"
+        saving = 100.0 * (1.0 - ev_w / ev_exact)
+        emit(name, t_w * 1e6,
+             f"iters={k};evals={ev_w}vs{ev_exact}exact/{ev_flat}flat;"
+             f"saving_vs_exact={saving:.1f}%;err={err_w:.2e};"
+             f"bit_identical_exact={bit_identical_exact}")
+        rows.append(dict(
+            name=name, n=n, tol=TOL, window_tol=wt, iterations=k,
+            evals_flat=ev_flat, evals_exact_prefix=ev_exact,
+            evals_window=ev_w, evals_saving_pct=saving,
+            max_err_exact=err_exact, max_err_window=err_w, err_bound=bound,
+            bit_identical_exact=bit_identical_exact, t_window_s=t_w))
+    # the tentpole claim: the residual window at window_tol=1e-3 does
+    # strictly fewer evals/sample than the provable exact prefix
+    head = [r for r in rows if r["window_tol"] == 1e-3]
+    for r in head:
+        assert r["evals_window"] < r["evals_exact_prefix"], r
+    return rows
+
+
+def merge_out(out: str, rows, meta_key: str, meta_val):
+    """Append rows into an existing BENCH_core.json (same schema), so
+    table11 and table12 share one gated artifact; same-name rows are
+    replaced, others preserved."""
+    payload = {"schema": 1, "meta": {}, "rows": []}
+    if out and os.path.exists(out):
+        with open(out) as f:
+            payload = json.load(f)
+    payload.setdefault("meta", {}).update({
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        meta_key: meta_val,
+    })
+    kept = [r for r in payload.get("rows", [])
+            if r["name"] not in {r2["name"] for r2 in rows}]
+    payload["rows"] = kept + rows
+    if out:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {out}")
+    return payload
+
+
+def main(out: str = None, configs=None):
+    rows = []
+    for cfg in (configs if configs is not None else CONFIGS):
+        rows.extend(run_rows(**cfg))
+    return merge_out(out, rows, "pinned_window",
+                     {"configs": CONFIGS, "dim": DIM, "seed": SEED,
+                      "tol": TOL, "window_tols": WINDOW_TOLS})
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="BENCH_core.json artifact to append rows into")
+    ap.add_argument("--n", type=int, default=None,
+                    help="run a single grid size instead of the pinned set")
+    args = ap.parse_args()
+    cfgs = None
+    if args.n is not None:
+        cfgs = [c for c in CONFIGS if c["n"] == args.n] \
+            or [dict(n=args.n, max_iters=8)]
+    main(out=args.out, configs=cfgs)

@@ -29,9 +29,10 @@ if violations=$(grep -rnE 'jax\.shard_map\(|jax\.experimental\.shard_map|jax\.ma
   exit 1
 fi
 
-# Artifact lint (the PR 1 -> 2 regression class): build caches and dry-run
-# experiment outputs must never be tracked.
-if tracked=$(git ls-files | grep -E '(^|/)__pycache__(/|$)|\.pyc$|^experiments/dryrun'); then
+# Artifact lint (the PR 1 -> 2 regression class): build caches (incl.
+# pytest's .pytest_cache droppings) and dry-run experiment outputs must
+# never be tracked.
+if tracked=$(git ls-files | grep -E '(^|/)__pycache__(/|$)|(^|/)\.pytest_cache(/|$)|\.pyc$|^experiments/dryrun'); then
   echo "artifact lint FAILED: build/experiment artifacts are tracked in git" >&2
   echo "${tracked}" >&2
   echo "git rm --cached them and keep .gitignore covering the pattern." >&2

@@ -8,7 +8,10 @@ from .schedules import DiffusionSchedule, make_schedule
 from .solvers import SolverConfig, solve, solver_step, solver_names
 from .sequential import SampleStats, sample_sequential, sequential_stats
 from .engine import (IterationCost, SRDSConfig, SRDSResult, iteration_cost,
-                     predicted_evals, resolve_blocks, truncated_evals)
+                     predicted_evals, resolve_blocks, truncated_evals,
+                     windowed_evals)
+from .window import (ExactPrefix, FixedBudget, FrontierPolicy,
+                     ResidualWindow, resolve_policy)
 from .parareal import srds_sample, srds_stats
 from .paradigms import ParaDiGMSConfig, ParaDiGMSResult, paradigms_sample, paradigms_stats
 
@@ -18,5 +21,8 @@ __all__ = [
     "SampleStats", "sample_sequential", "sequential_stats",
     "SRDSConfig", "SRDSResult", "resolve_blocks", "srds_sample", "srds_stats",
     "IterationCost", "iteration_cost", "predicted_evals", "truncated_evals",
+    "windowed_evals",
+    "FrontierPolicy", "ExactPrefix", "ResidualWindow", "FixedBudget",
+    "resolve_policy",
     "ParaDiGMSConfig", "ParaDiGMSResult", "paradigms_sample", "paradigms_stats",
 ]

@@ -24,6 +24,7 @@ from typing import Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,7 +60,18 @@ class SRDSConfig:
                   the shrinking fine-solve batch hits shape-dependent gemm
                   kernels (the same caveat as ``per_sample``).
                   Incompatible with ``block_sharding`` and straggler reuse
-                  (both keep the while_loop path).
+                  (both keep the while_loop path).  Shorthand for
+                  ``window=repro.core.window.ExactPrefix()``.
+    window:       a :class:`repro.core.window.FrontierPolicy` controlling
+                  the active refinement window explicitly — the seam all
+                  frontier rules live behind.  ``None`` resolves from
+                  ``truncate``: ``ExactPrefix()`` (bit-exact, the above)
+                  when True, ``FixedBudget()`` (no truncation) when
+                  False.  ``ResidualWindow(window_tol=...)`` enables the
+                  opt-in *approximate* residual-driven window: blocks
+                  whose per-block residual passed ``window_tol`` freeze
+                  even before exactness is provable (error knob and
+                  guarantees in :mod:`repro.core.window`).
     per_sample:   gate convergence independently per sample over the leading
                   batch axis of ``x_init`` (shape ``(K, ...)``): the residual,
                   iteration counter and delta history become per-sample
@@ -76,6 +88,10 @@ class SRDSConfig:
     use_fused_update: Optional[bool] = None
     per_sample: bool = False
     truncate: bool = False
+    # Frontier policy (repro.core.window.FrontierPolicy); None resolves
+    # from `truncate`.  ResidualWindow(...) opts into the approximate
+    # residual-driven sliding window.
+    window: Optional[object] = None
     # Distribution hook: NamedSharding whose first axis is the parareal
     # block dim — constrains the trajectory/fine-solve tensors so GSPMD
     # maps blocks onto a mesh axis (time-parallelism on `data`).
@@ -96,6 +112,26 @@ class SRDSResult(NamedTuple):
     delta_history: jnp.ndarray     # f32 (max_iters,) or (max_iters, K),
                                    # +inf beyond `iterations`
     trajectory: Optional[jnp.ndarray] = None  # (B+1, ...) final running traj
+    window_history: Optional[jnp.ndarray] = None  # int32 (max_iters,[ K]) —
+                                   # window lower bound each refinement ran
+                                   # with (-1 beyond `iterations`); only
+                                   # populated by residual-window policies
+
+
+def _leading_axes_norm(diff: jnp.ndarray, kind: str,
+                       lead: int) -> jnp.ndarray:
+    """The one norm-kind dispatch: reduce every axis past the first
+    ``lead``, preserving those (the ``batch_dims`` idiom the fused
+    kernels use) — ``lead=0`` is a full reduction."""
+    diff = diff.astype(jnp.float32)
+    axes = tuple(range(lead, diff.ndim)) if lead else None
+    if kind == "l1_mean":
+        return jnp.mean(jnp.abs(diff), axis=axes)
+    if kind == "l2_mean":
+        return jnp.sqrt(jnp.mean(diff * diff, axis=axes))
+    if kind == "linf":
+        return jnp.max(jnp.abs(diff), axis=axes)
+    raise ValueError(f"unknown norm {kind!r}")
 
 
 def convergence_norm(diff: jnp.ndarray, kind: str,
@@ -105,15 +141,20 @@ def convergence_norm(diff: jnp.ndarray, kind: str,
     With ``batched=True`` the reduction skips the leading batch axis and
     returns one residual per sample: ``(K, ...) -> (K,)``.
     """
-    diff = diff.astype(jnp.float32)
-    axes = tuple(range(1, diff.ndim)) if batched else None
-    if kind == "l1_mean":
-        return jnp.mean(jnp.abs(diff), axis=axes)
-    if kind == "l2_mean":
-        return jnp.sqrt(jnp.mean(diff * diff, axis=axes))
-    if kind == "linf":
-        return jnp.max(jnp.abs(diff), axis=axes)
-    raise ValueError(f"unknown norm {kind!r}")
+    return _leading_axes_norm(diff, kind, 1 if batched else 0)
+
+
+def blockwise_norm(diff: jnp.ndarray, kind: str,
+                   batched: bool = False) -> jnp.ndarray:
+    """Per-block residual norms over a block-stacked difference tensor:
+    ``(B, ...) -> (B,)``, or ``(B, K, ...) -> (B, K)`` with ``batched``
+    (one norm per block per sample).  Same norm kinds as
+    :func:`convergence_norm` — one shared dispatch, so the convergence
+    gate and the window-advance residuals can never disagree on a norm;
+    residual-window policies consume these to advance the frontier past
+    blocks whose residual passed tolerance.
+    """
+    return _leading_axes_norm(diff, kind, 2 if batched else 1)
 
 
 def still_refining(delta: jnp.ndarray, tol) -> jnp.ndarray:
@@ -178,15 +219,23 @@ class IterationCost(NamedTuple):
     fine_steps: int = 0
     evals_per_step: int = 1
 
-    def refine_evals_at(self, frontier: int) -> int:
-        """Evals of one refinement truncated to the suffix ``[frontier, B)``
-        (fine solves + corrector sweep on the live blocks only).  Frontier 0
-        is the untruncated cost; the final block never retires, so the cost
-        floors at one live block."""
+    def refine_evals_window(self, lo: int, hi: Optional[int] = None) -> int:
+        """Evals of one refinement restricted to the block window
+        ``[lo, hi)`` (fine solves + corrector sweep on the live blocks
+        only).  ``hi=None`` means ``B`` — the common suffix case; the
+        final in-window block never retires, so the window floors at one
+        live block.  This is the unit every windowed consumer prices
+        with: billing, ``predict_completion``, the CostAware scheduler
+        and the benches all derive from it."""
         if not self.num_blocks:            # legacy record: no decomposition
             return self.refine_evals
-        live = self.num_blocks - min(int(frontier), self.num_blocks - 1)
+        hi = self.num_blocks if hi is None else min(int(hi), self.num_blocks)
+        live = hi - min(int(lo), hi - 1)
         return live * (self.fine_steps + 1) * self.evals_per_step
+
+    def refine_evals_at(self, frontier: int) -> int:
+        """Suffix shorthand: ``refine_evals_window(frontier, B)``."""
+        return self.refine_evals_window(frontier)
 
 
 def iteration_cost(num_steps: int, num_blocks: Optional[int] = None,
@@ -247,6 +296,27 @@ def truncated_evals(cost: IterationCost, iterations: Union[int, float]):
     return total
 
 
+def windowed_evals(cost: IterationCost, lo_schedule):
+    """Total per-lane evals for a run whose refinement ``p`` executed the
+    window ``[lo_schedule[p], B)`` — the *realized* schedule of a
+    residual-window run (e.g. ``SRDSResult.window_history``), as opposed
+    to :func:`truncated_evals`'s provable ExactPrefix schedule.  Entries
+    ``< 0`` mark refinements that never ran (the history's fill value)
+    and are skipped.  A per-sample ``(max_iters, K)`` history (the
+    ``per_sample`` engines') returns a ``(K,)`` array of per-sample
+    totals."""
+    los = np.asarray(lo_schedule)
+    if los.ndim == 2:
+        return np.asarray([windowed_evals(cost, los[:, s])
+                           for s in range(los.shape[1])])
+    total = cost.init_evals
+    for lo in los:
+        lo = int(lo)
+        if lo >= 0:
+            total += cost.refine_evals_window(lo)
+    return total
+
+
 def resolve_fused(flag: Optional[bool]) -> bool:
     """Resolve a ``use_fused_*`` tri-state: an explicit bool wins; ``None``
     means "on where supported" (compiled Pallas on TPU — interpreted Pallas
@@ -285,35 +355,65 @@ def corrector_sweep(G, x_init: jnp.ndarray, y: jnp.ndarray,
                     prev_coarse: jnp.ndarray, starts: jnp.ndarray, *,
                     use_fused: bool = False, unroll: bool = False,
                     residual_from: Optional[jnp.ndarray] = None,
-                    batched: bool = False):
+                    batched: bool = False,
+                    frozen: Optional[jnp.ndarray] = None):
     """Sequential coarse sweep + predictor-corrector (Alg 1, lines 9-12).
 
     Returns ``(new_tail, cur_all)``: the refined trajectory tail and the
     coarse results ``G(x_i^p)`` that become next iteration's prev_coarse.
 
     ``residual_from`` (the previous trajectory tail, same shape as ``y``)
-    switches on the fused-residual feed: the Pallas update kernel's
-    per-tile L1 partials accumulate ``sum|x_new - x_old|`` in the same pass
-    as the update — no second full-tensor reduction — and the sweep returns
-    a third output, the final block's raw L1 sum (scalar, or ``(K,)`` per
-    sample with ``batched``).  Callers divide by the per-sample element
-    count to obtain the ``l1_mean`` convergence residual.  Only meaningful
-    with ``use_fused=True``; requires the fused kernel path.
+    switches on the in-sweep residual feed: each block's raw L1 sum
+    ``sum|x_new - x_old|`` is accumulated in the same pass as the update
+    (the Pallas kernel's per-tile partials when ``use_fused``, a plain
+    per-block reduction otherwise) — no second full-tensor pass — and the
+    sweep returns a third output, the per-block raw L1 sums ``(B,)`` (or
+    ``(B, K)`` per sample with ``batched``).  Callers divide by the
+    per-sample element count to obtain ``l1_mean`` residuals; the final
+    entry is the convergence residual's raw sum.
+
+    ``frozen`` (per-block bool, ``(B,)`` or ``(B, K)`` per sample with
+    ``batched``; requires ``residual_from`` for the old values) is the
+    residual-window mask: a frozen block's update is discarded — its
+    trajectory value stays ``residual_from[i]``, its coarse result stays
+    ``prev_coarse[i]``, its residual reports 0 — and, because the scan
+    carry takes the frozen (old) value, downstream blocks see exactly the
+    boundary a sweep that *started* past the frozen run would have seen.
+    This is the masked equivalent of the serving engine's physical window
+    skip, so both drivers realize the same math.
     """
+    if frozen is not None and residual_from is None:
+        raise ValueError("frozen blocks need residual_from (the previous "
+                         "trajectory tail) to hold their old values")
     if residual_from is not None:
-        from repro.kernels import ops as kops
+        if use_fused:
+            from repro.kernels import ops as kops
 
         def sweep_r(x_cur, inp):
-            y_i, prev_i, old_i, i0 = inp
+            y_i, prev_i, old_i, i0 = inp[:4]
             cur = G(x_cur, i0)
-            x_next, r = kops.parareal_update_residual(y_i, cur, prev_i, old_i,
-                                                      batched=batched)
+            if use_fused:
+                x_next, r = kops.parareal_update_residual(
+                    y_i, cur, prev_i, old_i, batched=batched)
+            else:
+                x_next = y_i + cur - prev_i
+                d = (x_next - old_i).astype(jnp.float32)
+                r = jnp.sum(jnp.abs(d),
+                            axis=tuple(range(1, d.ndim)) if batched else None)
+            if frozen is not None:
+                fz_i = inp[4]
+                m = fz_i.reshape(fz_i.shape + (1,) * (x_next.ndim - fz_i.ndim))
+                x_next = jnp.where(m, old_i, x_next)
+                cur = jnp.where(m, prev_i, cur)
+                r = jnp.where(fz_i, jnp.zeros_like(r), r)
             return x_next, (x_next, cur, r)
 
-        _, (new_tail, cur_all, r_all) = jax.lax.scan(
-            sweep_r, x_init, (y, prev_coarse, residual_from, starts),
-            unroll=unroll)
-        return new_tail, cur_all, r_all[-1]
+        xs = (y, prev_coarse, residual_from, starts)
+        if frozen is not None:
+            xs = xs + (frozen,)
+        _, (new_tail, cur_all, r_all) = jax.lax.scan(sweep_r, x_init, xs,
+                                                     unroll=unroll)
+        return new_tail, cur_all, r_all
 
     def sweep(x_cur, inp):
         y_i, prev_i, i0 = inp
@@ -331,14 +431,16 @@ def suffix_refinement(G, y, x_init: jnp.ndarray, x_tail: jnp.ndarray,
                       prev_coarse: jnp.ndarray, starts: jnp.ndarray,
                       frontier: int, *, use_fused: bool = False,
                       norm: str = "l1_mean", batched: bool = False,
-                      unroll: bool = False):
+                      unroll: bool = False, window_lo=None,
+                      block_resids: bool = False):
     """One predictor-corrector refinement truncated to ``[frontier, B)``.
 
     The single implementation of the sliding-window refinement body,
     shared by :func:`run_parareal`'s unrolled loop and the serving
     engine's per-frontier step programs — the frontier plumbing (suffix
     sweep resuming from the last frozen boundary, prefix re-concatenation,
-    fused-vs-plain residual dispatch) can never drift between the two.
+    fused-vs-plain residual dispatch, residual-window freezing) can never
+    drift between the two.
 
     ``y`` holds the fine-solve results for the suffix heads (the
     sampler-specific part stays with the caller).  Returns ``(new_tail,
@@ -349,8 +451,20 @@ def suffix_refinement(G, y, x_init: jnp.ndarray, x_tail: jnp.ndarray,
     values are unaffected by the mask.  With the fused path and
     ``l1_mean`` the residual comes from the update kernel's per-tile L1
     partials (no second full-tensor pass).
+
+    ``window_lo`` (traced int, scalar or per-sample ``(K,)`` with
+    ``batched``) enables the residual-window path: suffix blocks with
+    absolute index ``< window_lo`` are *frozen* — their update is masked
+    to a no-op inside the sweep (see :func:`corrector_sweep`), exactly
+    mirroring the serving engine's physical window skip.  Implies
+    ``block_resids``.  With ``block_resids`` (or ``window_lo``) the
+    return grows a fourth element: the per-block residual norms of the
+    suffix, ``(B - frontier,)`` or ``(B - frontier, K)``, frozen blocks
+    reporting 0 — the feed for ``FrontierPolicy.advance``.
     """
     f = int(frontier)
+    windowed = window_lo is not None
+    block_resids = block_resids or windowed
     fused_resid = use_fused and norm == "l1_mean"
     # the sweep resumes from the last frozen boundary: the prefix's
     # recomputation is a bitwise fixed point, so skipping it changes
@@ -359,12 +473,46 @@ def suffix_refinement(G, y, x_init: jnp.ndarray, x_tail: jnp.ndarray,
     old_sfx = x_tail[f:] if f else x_tail
     prev_sfx = prev_coarse[f:] if f else prev_coarse
     st = starts[f:] if f else starts
-    if fused_resid:
-        new_sfx, cur_sfx, r_sum = corrector_sweep(
-            G, x_carry, y, prev_sfx, st, use_fused=True, unroll=unroll,
+    n_per = x_init[0].size if batched else x_init.size
+    n_sfx = old_sfx.shape[0]
+    block_resid = None
+    if windowed:
+        # frozen mask per suffix block (trailing sample axis rides along
+        # when window_lo is per-sample): absolute block index < lo
+        idx = f + jnp.arange(n_sfx, dtype=jnp.int32)
+        lo = jnp.asarray(window_lo, jnp.int32)
+        fz = idx.reshape((n_sfx,) + (1,) * lo.ndim) < lo
+        if norm == "l1_mean":
+            # in-sweep residual feed (fused kernel partials or the plain
+            # per-block reduction) — no second full-tensor pass
+            new_sfx, cur_sfx, r_all = corrector_sweep(
+                G, x_carry, y, prev_sfx, st, use_fused=use_fused,
+                unroll=unroll, residual_from=old_sfx, batched=batched,
+                frozen=fz)
+            block_resid = (r_all / float(n_per)).astype(jnp.float32)
+        else:
+            new_sfx, cur_sfx, _ = corrector_sweep(
+                G, x_carry, y, prev_sfx, st, use_fused=use_fused,
+                unroll=unroll, residual_from=old_sfx, batched=batched,
+                frozen=fz)
+            # frozen blocks hold their old value -> their norm is 0
+            block_resid = blockwise_norm(new_sfx - old_sfx, norm,
+                                         batched=batched)
+        resid = block_resid[-1]
+    elif fused_resid or block_resids:
+        new_sfx, cur_sfx, r_all = corrector_sweep(
+            G, x_carry, y, prev_sfx, st, use_fused=use_fused, unroll=unroll,
             residual_from=old_sfx, batched=batched)
-        n_per = x_init[0].size if batched else x_init.size
-        resid = (r_sum / float(n_per)).astype(jnp.float32)
+        if norm == "l1_mean":
+            if block_resids:
+                block_resid = (r_all / float(n_per)).astype(jnp.float32)
+                resid = block_resid[-1]
+            else:
+                resid = (r_all[-1] / float(n_per)).astype(jnp.float32)
+        else:
+            block_resid = blockwise_norm(new_sfx - old_sfx, norm,
+                                         batched=batched)
+            resid = block_resid[-1]
     else:
         new_sfx, cur_sfx = corrector_sweep(G, x_carry, y, prev_sfx, st,
                                            use_fused=use_fused,
@@ -378,6 +526,8 @@ def suffix_refinement(G, y, x_init: jnp.ndarray, x_tail: jnp.ndarray,
     if resid is None:
         resid = convergence_norm(new_tail[-1] - x_tail[-1], norm,
                                  batched=batched)
+    if block_resids:
+        return new_tail, cur_all, resid, block_resid
     return new_tail, cur_all, resid
 
 
@@ -398,6 +548,16 @@ class RefineState(NamedTuple):
     history: jnp.ndarray       # residual history, f32 (max_iters,[ K])
     iters: jnp.ndarray         # refinements applied, int32 () or (K,)
     active: jnp.ndarray        # frozen-when-converged mask, bool () or (K,)
+    # --- residual-window carries (None unless the frontier policy needs
+    # block residuals — see repro.core.window; None is an empty pytree, so
+    # exact-policy loop carries stay byte-identical to the pre-window ones)
+    block_resid: Optional[jnp.ndarray] = None
+                               # per-block residual norms, f32 (B,[ K])
+    window_lo: Optional[jnp.ndarray] = None
+                               # window lower bound, int32 () or (K,)
+    lo_hist: Optional[jnp.ndarray] = None
+                               # window lower bound used by refinement p,
+                               # int32 (max_iters,[ K]), -1 beyond iters
 
 
 FineFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
@@ -414,7 +574,8 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
                  use_fused_update: Optional[bool] = None,
                  fixed_iters: bool = False, scan_unroll: bool = False,
                  constrain=None, carry_fine_results: bool = False,
-                 batched: bool = False, truncate: bool = False) -> RefineState:
+                 batched: bool = False, truncate: bool = False,
+                 window=None) -> RefineState:
     """The complete Parareal refinement loop (Alg 1 minus the fine solves).
 
     ``fine_fn(x_heads, p, y_prev) -> y`` computes the fine-solve results
@@ -451,7 +612,22 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
     branch is genuinely not executed), so ``iterations``/``delta_history``
     match the while_loop bit for bit.  Incompatible with ``constrain`` and
     ``carry_fine_results``.
+
+    ``window`` is the generalization: a
+    :class:`repro.core.window.FrontierPolicy` controlling the active
+    refinement window (``truncate`` is shorthand for ``ExactPrefix``; see
+    :func:`repro.core.window.resolve_policy`).  A residual-driven policy
+    (``ResidualWindow``) keeps the unrolled static suffix of the provable
+    frontier and *additionally* freezes blocks the policy advanced past,
+    by masking inside the sweep — the carried per-block residuals, window
+    bound and per-refinement window history live in the returned state's
+    ``block_resid`` / ``window_lo`` / ``lo_hist`` fields (None for
+    non-residual policies).
     """
+    from .window import resolve_policy
+    policy = resolve_policy(window, truncate)
+    truncate = policy.truncates
+    windowed = policy.needs_block_residuals
     if truncate and constrain is not None:
         raise ValueError("truncate is incompatible with a block-sharding "
                          "constraint (the GSPMD path keeps full-width "
@@ -482,8 +658,15 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
         hist0 = jnp.full((max_iters,), jnp.inf, jnp.float32)
         iters0 = jnp.int32(0)
         active0 = jnp.asarray(True)
+    if windowed:
+        kd = (x_init.shape[0],) if batched else ()
+        br0 = jnp.full((B,) + kd, jnp.inf, jnp.float32)
+        lo0 = jnp.zeros(kd, jnp.int32)
+        loh0 = jnp.full((max_iters,) + kd, -1, jnp.int32)
+    else:
+        br0 = lo0 = loh0 = None
     init = RefineState(jnp.int32(0), x_tail, x_tail, y_prev0,
-                       delta0, hist0, iters0, active0)
+                       delta0, hist0, iters0, active0, br0, lo0, loh0)
 
     def cond(c: RefineState):
         return jnp.logical_and(c.p < max_iters, jnp.any(c.active))
@@ -528,7 +711,57 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
         else:
             y_keep = c.y_prev
         return RefineState(c.p + 1, new_tail, cur_all, y_keep, delta, history,
-                           iters, active)
+                           iters, active, c.block_resid, c.window_lo,
+                           c.lo_hist)
+
+    def body_windowed(c: RefineState, f: int) -> RefineState:
+        """One refinement under a residual-driven window policy: the
+        compiled suffix is the static provable frontier ``f`` (same
+        shapes as the exact policy), and blocks ``[f, lo)`` the policy
+        advanced past are additionally frozen by masking inside the
+        sweep — the approximate part, bounded by the policy's
+        ``window_tol`` knob."""
+        lo_eff = jnp.maximum(c.window_lo, jnp.int32(f))
+        heads = jnp.concatenate([x_init[None], c.x_tail[:-1]], axis=0)
+        if f:
+            heads = heads[f:]
+        y = fine_fn(heads, c.p, c.y_prev)
+        new_tail, cur_all, resid, br_sfx = suffix_refinement(
+            G, y, x_init, c.x_tail, c.prev_coarse, starts, f,
+            use_fused=use_fused, norm=norm, batched=batched,
+            unroll=scan_unroll, window_lo=lo_eff)
+        if gate:
+            m = _batch_mask(c.active, new_tail)
+            new_tail = jnp.where(m, new_tail, c.x_tail)
+            cur_all = jnp.where(m, cur_all, c.prev_coarse)
+            delta = jnp.where(c.active, resid, c.delta)
+            history = c.history.at[c.p].set(
+                jnp.where(c.active, resid, c.history[c.p]))
+            iters = c.iters + c.active.astype(jnp.int32)
+        else:
+            delta = resid
+            history = c.history.at[c.p].set(resid)
+            iters = c.iters + 1
+        active = jnp.logical_and(c.active, still_refining(delta, tol))
+        # full-width per-block residuals: the statically-skipped prefix is
+        # bitwise frozen, i.e. residual 0
+        if f:
+            br = jnp.concatenate(
+                [jnp.zeros((f,) + br_sfx.shape[1:], br_sfx.dtype), br_sfx],
+                axis=0)
+        else:
+            br = br_sfx
+        new_lo = policy.advance(lo_eff, br, B)
+        if gate:
+            # converged samples' window state freezes with them
+            br = jnp.where(c.active[None], br, c.block_resid)
+            new_lo = jnp.where(c.active, new_lo, c.window_lo)
+            lo_hist = c.lo_hist.at[c.p].set(
+                jnp.where(c.active, lo_eff, c.lo_hist[c.p]))
+        else:
+            lo_hist = c.lo_hist.at[c.p].set(lo_eff)
+        return RefineState(c.p + 1, new_tail, cur_all, c.y_prev, delta,
+                           history, iters, active, br, new_lo, lo_hist)
 
     if truncate:
         # Unrolled: refinement p's suffix shape is static, so the fine
@@ -536,11 +769,13 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
         # cond's skipped branch is never executed, preserving the early
         # exit physically as well as in the reported iteration counts.
         state = init
+        loop_body = body_windowed if windowed else body
         for p in range(max_iters):
-            # the bitwise-frozen prefix lags exactness by one refinement
-            # (see prefix_frontier); the final block never retires
-            f = min(prefix_frontier(p), B - 1)
-            step = lambda c, _f=f: body(c, _f)
+            # the policy's static frontier (for ExactPrefix: the
+            # bitwise-frozen prefix, lagging exactness by one refinement —
+            # see prefix_frontier; the final block never retires)
+            f = policy.static_frontier(p, B)
+            step = lambda c, _f=f: loop_body(c, _f)
             if fixed_iters:
                 state = step(state)
             else:
@@ -556,14 +791,17 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
 
 def assemble_result(sample: jnp.ndarray, iterations: jnp.ndarray,
                     final_delta: jnp.ndarray, delta_history: jnp.ndarray,
-                    trajectory: Optional[jnp.ndarray] = None) -> SRDSResult:
+                    trajectory: Optional[jnp.ndarray] = None,
+                    window_history: Optional[jnp.ndarray] = None
+                    ) -> SRDSResult:
     """The one place an ``SRDSResult`` is put together from loop outputs."""
     return SRDSResult(sample=sample, iterations=iterations,
                       final_delta=final_delta, delta_history=delta_history,
-                      trajectory=trajectory)
+                      trajectory=trajectory, window_history=window_history)
 
 
 def result_from_state(state: RefineState,
                       trajectory: Optional[jnp.ndarray] = None) -> SRDSResult:
     return assemble_result(state.x_tail[-1], state.iters, state.delta,
-                           state.history, trajectory)
+                           state.history, trajectory,
+                           window_history=state.lo_hist)

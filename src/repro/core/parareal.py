@@ -12,9 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .engine import (SRDSConfig, SRDSResult, iteration_cost, predicted_evals,
-                     prefix_frontier, resolve_blocks, result_from_state,
-                     run_parareal, truncated_evals)
+from .engine import (SRDSConfig, SRDSResult, iteration_cost, resolve_blocks,
+                     result_from_state, run_parareal)
 from .schedules import DiffusionSchedule
 from .sequential import SampleStats
 from .solvers import ModelFn, SolverConfig, solve
@@ -39,6 +38,11 @@ def srds_sample(model_fn: ModelFn, sched: DiffusionSchedule, solver: SolverConfi
     by one refinement for bitwise stability (see
     :func:`repro.core.engine.prefix_frontier`) — bit-identical, strictly
     less work per iteration from the third refinement on.
+    ``cfg.window`` generalizes this to any
+    :class:`repro.core.window.FrontierPolicy`; with ``ResidualWindow`` the
+    result's ``window_history`` records the window lower bound each
+    refinement actually ran with (feed it to
+    :func:`repro.core.engine.windowed_evals` for the realized eval cost).
     """
     n = sched.num_steps
     B, S = resolve_blocks(n, cfg.num_blocks)
@@ -72,7 +76,8 @@ def srds_sample(model_fn: ModelFn, sched: DiffusionSchedule, solver: SolverConfi
                        scan_unroll=cfg.scan_unroll,
                        constrain=_cb if cfg.block_sharding is not None
                        else None,
-                       batched=cfg.per_sample, truncate=cfg.truncate)
+                       batched=cfg.per_sample, truncate=cfg.truncate,
+                       window=cfg.window)
 
     traj = None
     if return_trajectory:
@@ -88,21 +93,26 @@ def srds_stats(sched: DiffusionSchedule, solver: SolverConfig, cfg: SRDSConfig,
                  across blocks → S serial) + B coarse (sequential sweep)].
     Pipelined:   wavefront hides the sweep behind fine evals; one superstep
                  = one batched eval → eff ≈ B + k*(S+1)  (paper Table 3).
-    Truncated (``cfg.truncate``): refinement p fine-solves and sweeps only
-                 the suffix [prefix_frontier(p), B), so total evals follow
-                 :func:`repro.core.engine.truncated_evals` and the serial
+    Truncated (``cfg.truncate`` / a truncating ``cfg.window`` policy):
+                 refinement p fine-solves and sweeps only the window
+                 [policy.static_frontier(p), B), so total evals follow
+                 the policy's pricing (``predict_evals`` — the ExactPrefix
+                 schedule of :func:`repro.core.engine.truncated_evals`;
+                 residual-window runs may realize strictly less, see
+                 :func:`repro.core.engine.windowed_evals`) and the serial
                  sweep shortens with the frontier.
     """
+    from .window import resolve_policy
     B, S = resolve_blocks(sched.num_steps, cfg.num_blocks)
     e = solver.evals_per_step
     k = int(iterations)
     cost = iteration_cost(sched.num_steps, cfg.num_blocks, e)
-    total = truncated_evals(cost, k) if cfg.truncate \
-        else predicted_evals(cost, k)
+    pol = resolve_policy(cfg.window, cfg.truncate)
+    total = pol.predict_evals(cost, k)
     if pipelined:
         serial = e * (B + k * (S + 1))
-    elif cfg.truncate:
-        serial = e * (B + sum(S + B - min(prefix_frontier(p), B - 1)
+    elif pol.truncates:
+        serial = e * (B + sum(S + B - pol.static_frontier(p, B)
                               for p in range(k)))
     else:
         serial = e * (B + k * (S + B))

@@ -47,6 +47,7 @@ from .engine import (SRDSConfig, assemble_result, convergence_norm,
                      run_parareal)
 from .schedules import DiffusionSchedule
 from .solvers import ModelFn, SolverConfig, solve, solver_step
+from .window import ExactPrefix, resolve_policy
 
 
 # --------------------------------------------------------------------------
@@ -72,7 +73,8 @@ def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
     b_total, s_steps = resolve_blocks(n, cfg.num_blocks)
     if b_total % d != 0:
         raise ValueError(f"num_blocks={b_total} not divisible by axis size {d}")
-    if cfg.truncate and straggler_fn is not None:
+    if resolve_policy(cfg.window, cfg.truncate).truncates \
+            and straggler_fn is not None:
         raise ValueError("truncate is incompatible with straggler_fn (stale "
                          "fine results are indexed on the full block axis)")
     b_local = b_total // d
@@ -136,7 +138,8 @@ def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
                        fixed_iters=cfg.fixed_iters,
                        scan_unroll=cfg.scan_unroll,
                        carry_fine_results=straggler_fn is not None,
-                       batched=cfg.per_sample, truncate=cfg.truncate)
+                       batched=cfg.per_sample, truncate=cfg.truncate,
+                       window=cfg.window)
     return out.x_tail[-1], out.iters, out.delta, out.history
 
 
@@ -258,6 +261,13 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
     s_steps = n // d                       # fine steps per block
     evals_per_step = solver.evals_per_step
     max_iters = cfg.max_iters if cfg.max_iters is not None else d
+    # Frontier policy behind per-device retirement.  Retirement is exact
+    # and free on the wavefront (see the retire_at note below), so the
+    # default is ExactPrefix regardless of cfg.truncate; an explicit
+    # cfg.window (e.g. FixedBudget to disable retirement for analysis)
+    # overrides it.  ResidualWindow falls back to the provable rule here —
+    # per-block residuals live on no single device of the ring.
+    policy = cfg.window if cfg.window is not None else ExactPrefix()
     max_supersteps = max_iters * s_steps + d + 2
     right = [(i, (i + 1) % d) for i in range(d)]
     per = cfg.per_sample
@@ -315,9 +325,9 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
         # residuals feed delta/history, and with max_iters > d a retired
         # tail would report a pinned 0.0 in place of a computed residual
         # (identical by the fixed-point argument, but never synthesize a
-        # number that gates convergence)
-        retire_at = jnp.where(me == d - 1, max_iters,
-                              jnp.minimum(me + 1, max_iters))
+        # number that gates convergence) — the policy's retire_at encodes
+        # both the per-block rule and the tail exemption
+        retire_at = policy.retire_at(me, d, max_iters)
         retired = jnp.logical_and(active, completed >= retire_at)
         do_eval = jnp.logical_and(active, jnp.logical_not(retired))
 

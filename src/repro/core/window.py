@@ -1,0 +1,281 @@
+"""Frontier/window control for Parareal refinement — the ONE home of
+sliding-window policy.
+
+Before this module, three drivers each re-derived "which blocks does
+refinement ``p`` still have to compute": the engine's unrolled loop
+hard-coded :func:`repro.core.engine.prefix_frontier`, the wavefront
+pipeline hard-coded its per-device retirement rule, and the serving
+engine hard-coded the quantized group frontier.  Adding any new frontier
+rule meant touching all three, inconsistently.  Now every driver consumes
+a :class:`FrontierPolicy` and the rule lives here exactly once.
+
+A policy decides the *active refinement window* ``[lo, hi)`` over the
+``B`` parareal blocks: blocks below ``lo`` are frozen (their fine solves
+and corrector updates are skipped or masked to no-ops), blocks in the
+window refine normally.  ``hi`` is always ``B`` — the final block carries
+the convergence residual and never retires — so a policy is fully
+described by how ``lo`` advances.
+
+Three implementations ship:
+
+``ExactPrefix``
+    Today's provable rule, ``lo = prefix_frontier(p) = max(p - 1, 0)``:
+    the bitwise-frozen prefix of classical Parareal exactness, lagged one
+    refinement for bitwise stability (see
+    :func:`repro.core.engine.prefix_frontier`).  **Bit-exact**: results
+    are identical to the untruncated engine; this is the policy
+    ``SRDSConfig(truncate=True)`` resolves to.
+
+``ResidualWindow``
+    ParaDiGMS-style residual-driven window (Shih et al., "Parallel
+    Sampling of Diffusion Models"; Tang et al., "Accelerating Parallel
+    Sampling of Diffusion Models"): ``lo`` advances past every leading
+    block whose last per-block residual norm is ``<= window_tol``, not
+    just the provably-exact prefix.  **Approximate, opt-in**: frozen
+    blocks stop refining while still mathematically inexact, so the
+    sample can drift from the serial solution by an amount controlled by
+    the ``window_tol`` knob (measured per config in
+    ``benchmarks/table12_window.py``; the error is the accumulated
+    correction the frozen blocks would still have applied, empirically
+    the same order as ``window_tol`` for contractive denoisers).  The
+    window never retreats and is floored at the provable
+    ``ExactPrefix`` frontier, so ``window_tol = 0`` degrades gracefully
+    to (a masked equivalent of) the exact policy.
+
+``FixedBudget``
+    No truncation: every refinement computes all ``B`` blocks.  The
+    policy behind ``truncate=False`` engines and ``fixed_iters``
+    fixed-budget sampling, made explicit so cost models can price it
+    through the same seam.
+
+Driver notes
+------------
+
+* The **engine** (:func:`repro.core.engine.run_parareal`) unrolls the
+  refinement loop so each iteration's *compiled* suffix shape is the
+  static floor :meth:`FrontierPolicy.static_frontier`; a residual-driven
+  policy additionally freezes blocks ``[static, lo)`` *dynamically* with
+  masking (``lo`` rides the loop carry, advanced by
+  :meth:`FrontierPolicy.advance` from the per-block residuals the sweep
+  already produces).  In one compiled program the masked blocks still
+  occupy FLOPs — the accounting (and the host-stepped serving engine,
+  which physically skips them) realizes the savings.
+* The **wavefront** consults :meth:`FrontierPolicy.retire_at` for its
+  per-device retirement superstep.  Per-block residuals live only on the
+  tail device there, so ``ResidualWindow`` falls back to the provable
+  (exact) retirement rule on the wavefront — sound, just not approximate.
+* The **serving engine** is host-stepped, so the dynamic window is
+  physically real: each refinement's step program is compiled for the
+  quantized window floor and the per-block residual vector rides the
+  existing one-sync-per-refinement fetch.
+
+Cost-model note: :meth:`FrontierPolicy.predict_evals` prices an
+``iterations``-refinement run for admission control and billing
+estimates.  For ``ResidualWindow`` the realized window depends on data
+the predictor cannot see, so it charges the ``ExactPrefix`` schedule —
+an upper bound on the windowed cost (the window is always at least the
+provable prefix), i.e. admission under-truncates rather than
+over-promises.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FrontierPolicy", "ExactPrefix", "ResidualWindow", "FixedBudget",
+           "resolve_policy"]
+
+
+def _xp(a):
+    """numpy for host-side (serving-loop) arrays, jnp for traced ones, so
+    one ``advance`` implementation serves both drivers without dragging
+    host policy math onto the device."""
+    return jnp if isinstance(a, jax.Array) else np
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierPolicy:
+    """The window-control seam every SRDS driver consumes.
+
+    Subclasses override the three decision methods; the class-level flags
+    tell drivers what the policy needs and what it guarantees:
+
+    ``truncates``
+        whether refinements run on a shrinking window at all (drivers
+        pick the unrolled/static-suffix loop vs the plain while_loop).
+    ``exact``
+        whether results are guaranteed identical to the untruncated
+        engine (bit-identical for elementwise-deterministic models).
+    ``needs_block_residuals``
+        whether drivers must materialize per-block residual norms and
+        feed them to :meth:`advance` (costs one extra small reduction on
+        the non-fused path; free with the fused kernel's per-tile
+        partials).
+    """
+
+    name = "policy"
+    truncates = False
+    exact = True
+    needs_block_residuals = False
+
+    # ---------------------------------------------------------- decisions
+
+    def static_frontier(self, p: int, num_blocks: int) -> int:
+        """Compile-time floor of the window lower bound at refinement
+        ``p`` (0-indexed): the suffix ``[static_frontier(p), B)`` is the
+        largest block range refinement ``p`` can ever need, so unrolled /
+        per-frontier-compiled programs size their suffix with it.  Must
+        be sound for *any* data (a static frontier is never given the
+        residuals)."""
+        return 0
+
+    def advance(self, lo, block_resid, num_blocks: int):
+        """Next window lower bound, given the current ``lo`` and the
+        per-block residual norms of the refinement that just ran.
+
+        ``block_resid`` has a leading block axis ``(B, ...)`` — trailing
+        axes (e.g. a per-sample ``K``) are carried through, so ``lo`` may
+        be a scalar or a per-sample vector.  Works on host ``numpy``
+        arrays (the serving loop) and traced ``jnp`` values (the engine
+        carry) alike.  Must be monotone (``advance(lo, ..) >= lo``) and
+        capped at ``B - 1``: the final block carries the convergence
+        residual and never retires."""
+        return lo
+
+    def retire_at(self, block_idx, num_blocks: int, max_iters: int):
+        """Wavefront rule: the number of *completed refinements* after
+        which the device owning ``block_idx`` stops evaluating.  The tail
+        device never retires early (its residuals gate convergence).
+        ``block_idx`` may be a traced ``axis_index``."""
+        return max_iters
+
+    def predict_evals(self, cost, iterations):
+        """Per-lane model evals for an ``iterations``-refinement run
+        under this policy's *predicted* window schedule — the pricing
+        seam shared by billing, ``predict_completion`` and the CostAware
+        scheduler.  ``cost`` is a :class:`repro.core.engine.IterationCost`."""
+        from .engine import predicted_evals
+        return predicted_evals(cost, iterations)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactPrefix(FrontierPolicy):
+    """The provable bitwise-frozen prefix (PR 4's ``truncate=True``),
+    ``lo = max(p - 1, 0)``: bit-exact truncation, one block per
+    refinement, one refinement behind the exactness bound (see
+    :func:`repro.core.engine.prefix_frontier` for why the lag)."""
+
+    name = "exact_prefix"
+    truncates = True
+    exact = True
+    needs_block_residuals = False
+
+    def static_frontier(self, p: int, num_blocks: int) -> int:
+        from .engine import prefix_frontier
+        return min(prefix_frontier(p), num_blocks - 1)
+
+    def advance(self, lo, block_resid, num_blocks: int):
+        return lo                      # the static schedule is the window
+
+    def retire_at(self, block_idx, num_blocks: int, max_iters: int):
+        # Block i+1 is provably exact after i+1 refinements; on the
+        # wavefront both coarse terms of every update come from the same
+        # compiled call site, so the frontier needs NO one-refinement lag
+        # there (the engine-side lag exists only because init sweep and
+        # corrector sweep are two separately compiled scans).  The tail
+        # device keeps computing: its residuals feed delta/history.
+        return jnp.where(block_idx == num_blocks - 1, max_iters,
+                         jnp.minimum(block_idx + 1, max_iters))
+
+    def predict_evals(self, cost, iterations):
+        from .engine import truncated_evals
+        return truncated_evals(cost, iterations)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidualWindow(FrontierPolicy):
+    """Residual-driven sliding window (ParaDiGMS-style) — the opt-in
+    *approximate* mode: ``lo`` advances past every leading block whose
+    last residual norm (same ``norm`` as the convergence gate) is
+    ``<= window_tol``, freezing it even before exactness is provable.
+
+    ``window_tol`` is the error knob: frozen blocks stop applying
+    corrections, so the sample drifts from the serial solution by the
+    corrections foregone — empirically the same order as ``window_tol``
+    for contractive denoisers (``benchmarks/table12_window.py`` measures
+    the max trajectory error per config; pick ``window_tol`` at or below
+    the convergence ``tol`` to keep the drift inside the tolerance you
+    already accepted).  The window is floored at the provable
+    :class:`ExactPrefix` frontier and never retreats."""
+
+    window_tol: float = 1e-3
+
+    name = "residual_window"
+    truncates = True
+    exact = False
+    needs_block_residuals = True
+
+    def static_frontier(self, p: int, num_blocks: int) -> int:
+        # the provable prefix is free (bit-exact) truncation: compile the
+        # suffix against it and handle the residual-driven extra freezing
+        # dynamically via masking / the serve quantum
+        from .engine import prefix_frontier
+        return min(prefix_frontier(p), num_blocks - 1)
+
+    def advance(self, lo, block_resid, num_blocks: int):
+        """``lo + (length of the contiguous run of blocks at >= lo whose
+        residual passed window_tol)``, capped at ``B - 1``.  Blocks below
+        the current ``lo`` count as passed (the window never retreats);
+        the contiguity requirement is ParaDiGMS's: a still-moving block
+        keeps every later block's inputs moving, so freezing past it
+        would compound unchecked error."""
+        xp = _xp(block_resid)
+        b = num_blocks
+        idx = xp.arange(b).reshape((b,) + (1,) * (block_resid.ndim - 1))
+        under = xp.logical_or(idx < lo, block_resid <= self.window_tol)
+        run = xp.cumprod(under.astype(xp.int32), axis=0)
+        new_lo = xp.sum(run, axis=0, dtype=xp.int32)
+        return xp.minimum(new_lo, b - 1).astype(xp.int32)
+
+    def retire_at(self, block_idx, num_blocks: int, max_iters: int):
+        # per-block residuals live on no single wavefront device, so the
+        # approximate window is not available there: fall back to the
+        # provable (exact) retirement rule — sound, never worse than PR 4
+        return ExactPrefix().retire_at(block_idx, num_blocks, max_iters)
+
+    def predict_evals(self, cost, iterations):
+        # the realized window is data-dependent; charge the provable
+        # ExactPrefix schedule — an upper bound on the windowed cost
+        # (window >= provable prefix), so estimates never under-bill
+        from .engine import truncated_evals
+        return truncated_evals(cost, iterations)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedBudget(FrontierPolicy):
+    """No truncation: every refinement computes all ``B`` blocks (the
+    ``truncate=False`` / ``fixed_iters`` engines, and the pricing unit of
+    the pre-PR-4 flat cost model)."""
+
+    name = "fixed_budget"
+    truncates = False
+    exact = True
+    needs_block_residuals = False
+
+    def retire_at(self, block_idx, num_blocks: int, max_iters: int):
+        return max_iters               # no early retirement anywhere
+
+
+def resolve_policy(window, truncate: bool) -> FrontierPolicy:
+    """The one place the legacy ``truncate`` bool maps onto the policy
+    seam: an explicit ``window`` policy wins; otherwise ``truncate=True``
+    means :class:`ExactPrefix` and ``False`` means :class:`FixedBudget`."""
+    if window is not None:
+        if not isinstance(window, FrontierPolicy):
+            raise TypeError(f"window must be a FrontierPolicy, got "
+                            f"{type(window).__name__}")
+        return window
+    return ExactPrefix() if truncate else FixedBudget()

@@ -224,6 +224,7 @@ def _sample_tile_rows(rows: int, cap: int = TILE_ROWS) -> int:
 
 
 def parareal_update_residual(y, cur, prev, old, *, batched: bool = False,
+                             batch_dims: Optional[int] = None,
                              use_kernel: Optional[bool] = None):
     """Fused predictor-corrector update + convergence-residual partials.
 
@@ -231,15 +232,32 @@ def parareal_update_residual(y, cur, prev, old, *, batched: bool = False,
     the block's previous trajectory value, so the second output is exactly
     the raw L1 sum behind the engine's ``l1_mean`` convergence norm (the
     kernel's per-tile partials feed it directly; no second full-tensor
-    reduction).  With ``batched`` the leading axis of every operand is a
-    sample batch K and the residual is a per-sample ``(K,)`` f32 vector.
+    reduction).  ``batch_dims`` picks the residual's reduction shape — the
+    number of leading axes preserved: 0 -> scalar, 1 -> per-sample ``(K,)``
+    (legacy spelling ``batched=True``), 2 -> per-block per-sample
+    ``(B, K)``, the sliding-window frontier feed (each leading-axes slice
+    gets its own tile rows, so partials never straddle two slices).
     """
     if use_kernel is None:
         use_kernel = not FORCE_REF
     if not use_kernel:
         return ref.parareal_update_residual(y, cur, prev, old,
-                                            batched=batched)
-    if not batched:
+                                            batched=batched,
+                                            batch_dims=batch_dims)
+    nd = (1 if batched else 0) if batch_dims is None else int(batch_dims)
+    if not 0 <= nd < y.ndim + 1:
+        raise ValueError(f"batch_dims={nd} out of range for ndim={y.ndim}")
+    if nd >= 2:
+        # flatten the preserved leading axes into one pseudo-sample axis,
+        # run the per-sample path, and restore the leading shape on the
+        # partials — each (block, sample) slice keeps its own padded rows
+        lead = y.shape[:nd]
+        flat = lambda t: t.reshape((-1,) + t.shape[nd:])
+        out, resid = parareal_update_residual(
+            flat(y), flat(cur), flat(prev), flat(old), batch_dims=1,
+            use_kernel=True)
+        return out.reshape(y.shape), resid.reshape(lead)
+    if nd == 0:
         # pad rows to the tile size so the consumed partials never cover
         # an out-of-bounds block region on compiled backends (zero rows
         # contribute |0 + 0 - 0 - 0| = 0 to the L1 sums)

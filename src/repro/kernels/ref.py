@@ -175,18 +175,27 @@ def parareal_update(y: jnp.ndarray, cur: jnp.ndarray, prev: jnp.ndarray):
 
 def parareal_update_residual(y: jnp.ndarray, cur: jnp.ndarray,
                              prev: jnp.ndarray, old: jnp.ndarray, *,
-                             batched: bool = False):
+                             batched: bool = False,
+                             batch_dims: Optional[int] = None):
     """out = y + cur - prev;  resid = L1 sum |out - old| — the exact raw
     sum behind the engine's ``l1_mean`` convergence residual (``old`` is
     the block's previous trajectory value), accumulated in the same pass
     as the update so the convergence norm needs no second full-tensor
     reduction.  All accumulation in f32 (matching the kernel).
 
-    Returns ``(out, resid)`` with resid a scalar f32 sum, or a per-sample
-    ``(K,)`` f32 vector over the leading axis with ``batched``.
+    ``batch_dims`` is the number of leading axes the residual reduction
+    *preserves*: 0 -> scalar sum, 1 -> per-sample ``(K,)``, 2 -> per-block
+    per-sample ``(B, K)`` (the sliding-window frontier feed).  ``batched``
+    is the legacy spelling of ``batch_dims=1``.
+
+    Returns ``(out, resid)`` with resid an f32 array of shape
+    ``y.shape[:batch_dims]``.
     """
+    nd = (1 if batched else 0) if batch_dims is None else int(batch_dims)
+    if not 0 <= nd < y.ndim + 1:
+        raise ValueError(f"batch_dims={nd} out of range for ndim={y.ndim}")
     yf, cf, pf, of = (t.astype(jnp.float32) for t in (y, cur, prev, old))
     outf = yf + cf - pf
-    axes = tuple(range(1, y.ndim)) if batched else None
+    axes = tuple(range(nd, y.ndim)) if nd else None
     resid = jnp.sum(jnp.abs(outf - of), axis=axes)
     return (y + cur - prev), resid

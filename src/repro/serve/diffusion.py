@@ -25,15 +25,24 @@ with recycling it pays ``sum_k(iters_k)`` (plus a drain tail), which is
 where the "effective model evals per sample" win in
 ``benchmarks/table9_batched.py`` comes from.
 
-The refinement step is a **sliding-window hot loop**: each step program is
-compiled for the group's quantized minimum *frontier* (the provably
-bitwise-frozen block prefix — every lane's first ``prefix_frontier(j)``
-blocks are final after ``j`` refinements), statically skipping the frozen
-prefix's fine solves and corrector sweep; ``x_tail``/``prev_coarse`` are
-donated to XLA so trajectory-sized buffers are reused in place, and the
-host loop performs exactly ONE device sync per refinement (the batched
-``(K,)`` residual vector) plus one per completion (that lane's final
-state only — never the ``(B, K, *shape)`` trajectory).
+The refinement step is a **sliding-window hot loop** behind the
+:class:`repro.core.window.FrontierPolicy` seam: each step program is
+compiled for the group's quantized *frontier*, statically skipping the
+frozen block prefix's fine solves and corrector sweep.  With the default
+``ExactPrefix`` policy the frontier is the provably bitwise-frozen prefix
+(every lane's first ``prefix_frontier(j)`` blocks are final after ``j``
+refinements — bit-exact).  With the opt-in ``ResidualWindow`` policy the
+frontier additionally advances past blocks whose per-block residual
+passed ``window_tol`` (ParaDiGMS-style, *approximate* — the error knob
+and guarantees live in :mod:`repro.core.window`); the ``(num_blocks,)``
+per-block residual vector piggybacks on the existing per-refinement
+fetch, so the host loop still performs exactly ONE device sync per
+refinement (the batched ``(K,)`` residual — concatenated with the block
+residuals under ``ResidualWindow``) plus one per completion (that lane's
+final state only — never the ``(B, K, *shape)`` trajectory).  All device
+buffers — ``x_tail``/``prev_coarse`` in both the init-sweep and the step
+programs — are donated to XLA so trajectory-sized allocations are reused
+in place.
 
 Arrival-aware serving rides a deterministic **virtual clock**: every
 engine step advances ``clock`` by its *physical* model-eval cost times
@@ -58,7 +67,12 @@ What the engine does / does not guarantee:
   (roundoff-level: XLA picks gemm kernels by batch shape, and with
   ``truncate`` the group frontier sets the fine-solve width, so lane bits
   can depend on batch composition at roundoff scale — build with
-  ``truncate=False`` for width-independence at full cost);
+  ``truncate=False`` for width-independence at full cost).  Under the
+  opt-in ``ResidualWindow`` policy the guarantee weakens further: the
+  group window is shared, so batch-mates influence *which* blocks freeze
+  and results are approximate (bounded by ``window_tol``) and
+  composition-dependent — exactness-critical workloads keep the default
+  ``ExactPrefix``;
 * eval accounting is *effective* (per-active-slot): lockstep SPMD still
   computes masked lanes, so physical compute equals effective compute only
   while the queue keeps every slot busy — exactly the heavy-traffic regime
@@ -100,6 +114,7 @@ from repro.core.engine import (IterationCost, coarse_init_sweep,
                                truncated_evals)
 from repro.core.schedules import DiffusionSchedule, make_schedule
 from repro.core.solvers import ModelFn, SolverConfig, solve, solver_names
+from repro.core.window import FixedBudget, resolve_policy
 from repro.parallel.sharding import microbatch_spec
 
 __all__ = ["SampleRequest", "SampleResponse", "CompletionRecord",
@@ -217,13 +232,16 @@ def _solver_fp(solver: SolverConfig):
 
 
 class _Slot:
-    __slots__ = ("rid", "req", "iters", "history")
+    __slots__ = ("rid", "req", "iters", "history", "evals")
 
     def __init__(self, rid: int, req: SampleRequest):
         self.rid = rid
         self.req = req
         self.iters = 0
         self.history: List[float] = []
+        # realized per-lane eval charge (residual-window billing: the
+        # executed group-window schedule, accumulated step by step)
+        self.evals = 0
 
 
 class _MicroBatch:
@@ -248,6 +266,11 @@ class _MicroBatch:
         # the quantum bounds the cache at ~4 programs per group
         self.trunc_q = engine.truncate_quantum \
             if engine.truncate_quantum is not None else max(1, self.B // 4)
+        self.policy = engine.window
+        # residual-window group state: the dynamic window lower bound,
+        # advanced from the fetched per-block residuals; reset to 0 when a
+        # fresh lane is admitted (its blocks are all unconverged)
+        self.lo = 0
         K = engine.batch_size
         self.x_init = jnp.zeros((K,) + shape, engine.dtype)
         self.x_tail = jnp.zeros((self.B, K) + shape, engine.dtype)
@@ -276,6 +299,10 @@ class _MicroBatch:
                 self.slots[k] = _Slot(rid, req)
                 self.active[k] = True
                 self.newly.append(k)
+                # a fresh lane's blocks are all unconverged: the shared
+                # residual window must re-open (existing lanes' frozen
+                # blocks thaw — sound, they only refine further)
+                self.lo = 0
                 return k
         raise RuntimeError("admit() called with no free slot")
 
@@ -298,7 +325,7 @@ class _MicroBatch:
                     delta_history=np.asarray(s.history, np.float32),
                     # a lane evicted before its coarse init ran did no work
                     model_evals=0 if uninitialized
-                    else self._lane_evals(s.iters),
+                    else self._slot_evals(s),
                     status="preempted")
         raise KeyError(f"request {rid} is not running in this batch")
 
@@ -312,22 +339,54 @@ class _MicroBatch:
         return truncated_evals(self.cost, iters) if self.engine.truncate \
             else predicted_evals(self.cost, iters)
 
+    def _slot_evals(self, s: _Slot) -> int:
+        """A finished/preempted lane's eval charge.  Residual-window lanes
+        bill their *realized* accumulated window schedule (tracked in
+        ``_Slot.evals``); exact policies keep the per-lane ideal schedule
+        of ``_lane_evals``."""
+        if self.policy.needs_block_residuals:
+            return s.evals
+        return self._lane_evals(s.iters)
+
     def _refine_evals_at(self, frontier: int) -> int:
         return self.cost.refine_evals_at(frontier) if self.engine.truncate \
             else self.cost.refine_evals
 
-    def _frontier(self) -> int:
-        """Quantized group frontier: the min provably-frozen prefix over
-        active lanes (each lane's frontier is its own completed-refinement
-        count, lagged per ``prefix_frontier``), snapped *down* to the
-        truncation quantum so at most ~B/quantum step programs compile.
-        Snapping down is always sound — less truncation than provable."""
+    def _static_frontier(self) -> int:
+        """Un-quantized provable group frontier: the min bitwise-frozen
+        prefix over active lanes (each lane's frontier is its own
+        completed-refinement count, lagged per ``prefix_frontier``)."""
         fr = [prefix_frontier(s.iters) for k, s in enumerate(self.slots)
               if s is not None and self.active[k]]
-        if not fr:
-            return 0
-        minf = (min(fr) // self.trunc_q) * self.trunc_q
+        return min(fr) if fr else 0
+
+    def _frontier(self) -> int:
+        """Quantized group frontier, snapped *down* to the truncation
+        quantum so at most ~B/quantum step programs compile.  Snapping
+        down is always sound — less truncation than provable."""
+        minf = (self._static_frontier() // self.trunc_q) * self.trunc_q
         return min(minf, self.B - 1)
+
+    def _window_frontier(self) -> Tuple[int, int]:
+        """Residual-window frontiers: ``(lo, minf)`` where ``lo`` is the
+        effective window lower bound (the policy's dynamic bound, floored
+        at the provable group frontier and capped at B-1 — the final
+        block never retires) and ``minf`` is ``lo`` snapped down to the
+        quantum: the compiled suffix starts at ``minf``, blocks
+        ``[minf, lo)`` are frozen by masking inside the program."""
+        lo = min(max(self.lo, self._static_frontier()), self.B - 1)
+        minf = min((lo // self.trunc_q) * self.trunc_q, self.B - 1)
+        return lo, minf
+
+    def step_evals(self) -> int:
+        """Physical model evals of this batch's next refinement step at
+        its current frontier — the unit ``predict_completion`` charges a
+        waiting request per round-robin round of cross-group contention."""
+        if self.policy.needs_block_residuals:
+            _, minf = self._window_frontier()
+        else:
+            minf = self._frontier() if self.engine.truncate else 0
+        return self.engine.batch_size * self._refine_evals_at(minf)
 
     def step(self):
         """Init newly admitted lanes, run one lockstep refinement truncated
@@ -335,37 +394,65 @@ class _MicroBatch:
         ``(completions, effective_evals, physical_evals)`` where
         completions are ``(rid, req, response)``.
 
-        Host traffic: exactly ONE device->host sync (the batched ``(K,)``
-        residual vector) per refinement, plus one per completed request
-        (that lane's final state only).
+        Host traffic: exactly ONE device->host sync per refinement — the
+        batched ``(K,)`` residual vector, with the ``(B,)`` per-block
+        residual piggybacked onto the same fetch under a residual-window
+        policy — plus one per completed request (that lane's final state
+        only).
         """
         K = self.engine.batch_size
         eff = phys = 0
         if self.newly:
-            # coarse-init the fixed batch; write back only the new lanes
-            # (occupied lanes must keep their refined trajectories)
-            tail0 = self.init_fn(self.x_init)
-            m = jnp.zeros((K,), bool).at[jnp.asarray(self.newly)].set(True)
-            m = m.reshape((1, K) + (1,) * len(self.shape))
-            self.x_tail = jnp.where(m, tail0, self.x_tail)
-            self.prev_coarse = jnp.where(m, tail0, self.prev_coarse)
+            # coarse-init the fixed batch inside one donated program (the
+            # new-lane write-back included, so the trajectory-sized
+            # x_tail/prev_coarse buffers are reused in place off-CPU;
+            # occupied lanes keep their refined trajectories)
+            m = np.zeros((K,), bool)
+            m[self.newly] = True
+            self.x_tail, self.prev_coarse = self.init_fn(
+                self.x_init, self.x_tail, self.prev_coarse, jnp.asarray(m))
             eff += len(self.newly) * self.cost.init_evals
             phys += K * self.cost.init_evals
+            for k in self.newly:
+                self.slots[k].evals = self.cost.init_evals
             self.newly = []
 
-        minf = self._frontier() if self.engine.truncate else 0
         amask = jnp.asarray(self.active)
-        self.x_tail, self.prev_coarse, delta = self.step_for(minf)(
-            self.x_init, self.x_tail, self.prev_coarse, amask)
-        # effective = per-lane ideal (each lane truncated at its OWN
-        # frontier when the engine truncates); physical = what the lockstep
-        # program actually ran (K lanes truncated at the group frontier)
-        eff += sum(self._refine_evals_at(prefix_frontier(s.iters))
-                   for k, s in enumerate(self.slots)
-                   if s is not None and self.active[k])
-        phys += K * self._refine_evals_at(minf)
+        if self.policy.needs_block_residuals:
+            # residual-window step: the compiled suffix starts at the
+            # quantized window floor, blocks [minf, lo) freeze by masking,
+            # and the (B,) group block residual rides the one fetch
+            lo, minf = self._window_frontier()
+            self.x_tail, self.prev_coarse, fetch = \
+                self.step_for.windowed(minf)(
+                    self.x_init, self.x_tail, self.prev_coarse, amask,
+                    jnp.int32(lo))
+            fetched = _host_fetch(fetch)     # the one per-iteration sync
+            delta_np = fetched[:K]
+            block_np = fetched[K:]
+            # advance the shared window from the lane-max residuals
+            self.lo = int(self.policy.advance(lo, block_np, self.B))
+            # effective = the window schedule every active lane actually
+            # executed; physical = the compiled suffix width times K
+            per_lane = self.cost.refine_evals_window(lo)
+            for k, s in enumerate(self.slots):
+                if s is not None and self.active[k]:
+                    s.evals += per_lane
+                    eff += per_lane
+            phys += K * self.cost.refine_evals_window(minf)
+        else:
+            minf = self._frontier() if self.engine.truncate else 0
+            self.x_tail, self.prev_coarse, delta = self.step_for(minf)(
+                self.x_init, self.x_tail, self.prev_coarse, amask)
+            # effective = per-lane ideal (each lane truncated at its OWN
+            # frontier when the engine truncates); physical = what the
+            # lockstep program actually ran (K lanes at the group frontier)
+            eff += sum(self._refine_evals_at(prefix_frontier(s.iters))
+                       for k, s in enumerate(self.slots)
+                       if s is not None and self.active[k])
+            phys += K * self._refine_evals_at(minf)
+            delta_np = _host_fetch(delta)    # the one per-iteration sync
 
-        delta_np = _host_fetch(delta)        # the one per-iteration sync
         completed: List[Tuple[int, SampleRequest, SampleResponse]] = []
         for k in range(K):
             slot = self.slots[k]
@@ -384,7 +471,7 @@ class _MicroBatch:
                     iterations=slot.iters,
                     final_delta=slot.history[-1],
                     delta_history=np.asarray(slot.history, np.float32),
-                    model_evals=self._lane_evals(slot.iters))))
+                    model_evals=self._slot_evals(slot))))
                 self.slots[k] = None
                 self.active[k] = False
         return completed, eff, phys
@@ -422,7 +509,16 @@ class DiffusionSamplingEngine:
                     elementwise-deterministic denoisers (matmul denoisers:
                     roundoff-level, see the guarantee block above).  Forced
                     off when ``axis`` is set (the block-parallel fine-solve
-                    layout slices the full block dim).
+                    layout slices the full block dim).  Shorthand for
+                    ``window=ExactPrefix()``.
+      window:       explicit :class:`repro.core.window.FrontierPolicy`
+                    (overrides ``truncate``): ``ResidualWindow(window_tol)``
+                    opts into the approximate residual-driven group window
+                    — fewer evals at a ``window_tol``-bounded quality cost
+                    and a weakened per-request guarantee (see the module
+                    docstring).  Truncating policies degrade to
+                    ``FixedBudget`` when ``axis`` is set, like
+                    ``truncate``.
       truncate_quantum: frontier quantization step (None -> B//4): bounds
                     the per-group compiled-step-program cache at
                     ~B/quantum variants.
@@ -442,7 +538,8 @@ class DiffusionSamplingEngine:
                  allow_inexact: bool = False, sec_per_eval: float = 1e-6,
                  dtype=jnp.float32, truncate: bool = True,
                  truncate_quantum: Optional[int] = None,
-                 use_fused: Optional[bool] = None, ema_alpha: float = 0.3):
+                 use_fused: Optional[bool] = None, ema_alpha: float = 0.3,
+                 window=None):
         self.model_fn = model_fn
         self.sample_shape = tuple(sample_shape)
         self.solver = solver
@@ -458,9 +555,16 @@ class DiffusionSamplingEngine:
         self.allow_inexact = allow_inexact
         self.sec_per_eval = sec_per_eval
         self.dtype = dtype
-        # block-parallel fine solves slice the full (B, K, ...) head stack
-        # per device; suffix truncation would unbalance the shards
-        self.truncate = truncate and axis is None
+        # Frontier policy seam (repro.core.window): an explicit window
+        # policy wins, else `truncate` maps to ExactPrefix/FixedBudget.
+        # Block-parallel fine solves slice the full (B, K, ...) head stack
+        # per device, so truncating policies degrade to FixedBudget there
+        # (suffix truncation would unbalance the shards).
+        pol = resolve_policy(window, truncate)
+        if axis is not None and pol.truncates:
+            pol = FixedBudget()
+        self.window = pol
+        self.truncate = pol.truncates
         self.truncate_quantum = truncate_quantum
         self.use_fused = resolve_fused(use_fused)
         # buffer donation lets XLA reuse the trajectory-sized x_tail /
@@ -717,26 +821,33 @@ class DiffusionSamplingEngine:
     def predict_completion(self, req: SampleRequest,
                            now: Optional[float] = None) -> float:
         """Cost-model completion estimate (virtual seconds) if ``req`` were
-        admitted now: the engine's own truncated per-iteration eval
-        accounting (:func:`repro.core.engine.truncated_evals` — the same
-        frontier schedule the step programs execute) times the physical
-        K-lane width, for :meth:`predict_iterations` refinements.
-        Optimistic on every axis it controls: the batch is assumed to step
-        back-to-back (no cross-group contention), the frontier to advance
-        every refinement, and the iteration estimate is the smallest
-        available one — so rejection sheds only requests hopeless even
-        under this best case.  (The iteration estimate itself is still an
-        estimate: a pathologically easy request in a hard tier can beat
-        it, so 'never over-rejects' holds relative to the estimate, not as
-        an absolute.)"""
+        admitted now: the frontier policy's own per-iteration eval pricing
+        (:meth:`repro.core.window.FrontierPolicy.predict_evals` — for the
+        default ``ExactPrefix``, the exact frontier schedule the step
+        programs execute) times the physical K-lane width, for
+        :meth:`predict_iterations` refinements — **plus cross-group device
+        contention**: busy micro-batches step round-robin on the one
+        device, so every *other currently-busy* group charges one step at
+        its current frontier cost per refinement round this request needs.
+        Within those terms the estimate stays optimistic — the frontier is
+        assumed to advance every refinement, contending groups are priced
+        at today's (only-shrinking) step cost and assumed not to grow, and
+        the iteration estimate is the smallest available one — so
+        rejection sheds requests hopeless under the *currently visible*
+        load.  (Both the iteration estimate and the contention snapshot
+        are estimates: a contending group can drain early, so 'never
+        over-rejects' holds relative to them, not as an absolute.)"""
         now = self.clock if now is None else now
         n, _, _, solver = self._resolve(req)
         cost = iteration_cost(n, self.num_blocks, solver.evals_per_step)
         iters = self.predict_iterations(req)
-        per_lane = truncated_evals(cost, iters) if self.truncate \
-            else predicted_evals(cost, iters)
-        evals = self.batch_size * per_lane
-        return now + evals * self.sec_per_eval
+        evals = self.batch_size * self.window.predict_evals(cost, iters)
+        key = self.compat_key(req)
+        rounds = int(math.ceil(iters))
+        contention = rounds * sum(
+            b.step_evals() for bkey, b in self._batches.items()
+            if bkey != key and b.busy())
+        return now + (evals + contention) * self.sec_per_eval
 
     def _finalize(self, rid: int, req: SampleRequest,
                   resp: SampleResponse) -> SampleResponse:
@@ -791,12 +902,20 @@ class DiffusionSamplingEngine:
 
         fine = self._make_fine(F, starts, B)
 
-        @jax.jit
-        def init_fn(x_init):
-            # coarse initialization sweep for the whole slot batch
-            return coarse_init_sweep(G, x_init, starts)
+        def init_body(x_init, x_tail, prev_coarse, new_mask):
+            # coarse initialization sweep for the whole slot batch, with
+            # the new-lane write-back fused in so x_tail/prev_coarse are
+            # donated (occupied lanes keep their refined trajectories —
+            # the old value flows through the jnp.where)
+            tail0 = coarse_init_sweep(G, x_init, starts)
+            m = new_mask.reshape((1,) + new_mask.shape + (1,) * len(shape))
+            return (jnp.where(m, tail0, x_tail),
+                    jnp.where(m, tail0, prev_coarse))
+
+        init_fn = jax.jit(init_body, donate_argnums=self._donate)
 
         step_cache: Dict[int, Callable] = {}
+        step_win_cache: Dict[int, Callable] = {}
 
         def make_step(minf: int):
             def step_fn(x_init, x_tail, prev_coarse, active):
@@ -821,12 +940,53 @@ class DiffusionSamplingEngine:
 
             return jax.jit(step_fn, donate_argnums=self._donate)
 
+        def make_step_windowed(minf: int):
+            def step_fn(x_init, x_tail, prev_coarse, active, lo):
+                """One residual-window refinement over all K slots: the
+                compiled suffix is [minf, B), blocks [minf, lo) freeze by
+                masking inside the engine's shared
+                :func:`suffix_refinement`, and the (B,) lane-max per-block
+                residual piggybacks on the (K,) residual so the host still
+                syncs exactly once."""
+                heads = jnp.concatenate([x_init[None], x_tail[:-1]], axis=0)
+                if minf:
+                    heads = heads[minf:]
+                y = fine(heads)
+                new_tail, cur_all, delta, br = suffix_refinement(
+                    G, y, x_init, x_tail, prev_coarse, starts, minf,
+                    use_fused=use_fused, norm=norm, batched=True,
+                    window_lo=lo)
+                m = active.reshape((1,) + active.shape
+                                   + (1,) * (x_tail.ndim - 2))
+                new_tail = jnp.where(m, new_tail, x_tail)
+                cur_all = jnp.where(m, cur_all, prev_coarse)
+                # inactive lanes' pre-mask residual entries are discarded
+                delta = jnp.where(active, delta, jnp.inf)
+                # group per-block residual: max over active lanes — the
+                # shared window only advances past blocks EVERY active
+                # lane passed (inactive lanes don't refine, so they never
+                # hold the window back)
+                br_g = jnp.max(jnp.where(active[None, :], br, 0.0), axis=1)
+                if minf:
+                    br_g = jnp.concatenate(
+                        [jnp.zeros((minf,), br_g.dtype), br_g])
+                return new_tail, cur_all, jnp.concatenate([delta, br_g])
+
+            return jax.jit(step_fn, donate_argnums=self._donate)
+
         def step_for(minf: int) -> Callable:
             if minf not in step_cache:
                 step_cache[minf] = make_step(minf)
             return step_cache[minf]
 
+        def step_windowed(minf: int) -> Callable:
+            if minf not in step_win_cache:
+                step_win_cache[minf] = make_step_windowed(minf)
+            return step_win_cache[minf]
+
         step_for.cache = step_cache     # introspectable: compiled variants
+        step_for.windowed = step_windowed
+        step_windowed.cache = step_win_cache
 
         self._programs[key] = (init_fn, step_for, B, S)
         return self._programs[key]

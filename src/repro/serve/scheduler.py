@@ -34,15 +34,21 @@ Guarantees / non-guarantees (mirroring the serving layer's):
   bit-deterministic across runs (trace generators use seeded
   ``numpy.random.Generator`` streams; the event loop has no ties broken by
   id/hash order);
-* the cost model is *optimistic* (assumes the request's micro-batch steps
-  back-to-back with no cross-group contention, charges the truncated
-  per-refinement cost, and takes the most optimistic of the engine's
-  learned per-tier :class:`~repro.serve.diffusion.IterationEMA` estimate
-  and the caller's ``iters_hint``): CostAware rejection sheds only
-  requests that would miss their SLO even under this best case.  It does
-  NOT guarantee admitted requests meet their deadlines, and
-  "never over-rejects" is relative to the iteration estimate — an
-  unusually easy request in a hard tier can still beat it.
+* the cost model now sees *cross-group device contention*: busy
+  micro-batches step round-robin on the one device, so
+  ``predict_completion`` charges every other currently-busy group one
+  step at its current frontier cost per refinement round the request
+  needs.  Within those terms it stays *optimistic* (the frontier is
+  assumed to advance every refinement, contending groups are priced at
+  today's only-shrinking step cost and assumed not to grow, and the
+  iteration estimate is the most optimistic of the engine's learned
+  per-tier :class:`~repro.serve.diffusion.IterationEMA` estimate and the
+  caller's ``iters_hint``): CostAware rejection sheds requests that
+  would miss their SLO under the currently visible load.  It does NOT
+  guarantee admitted requests meet their deadlines, and "never
+  over-rejects" is relative to the estimates — an unusually easy request
+  in a hard tier can beat the iteration estimate, and a contending group
+  can drain earlier than charged.
 
 Adding a policy: subclass :class:`Policy` and implement ``select(now,
 queue, engine)`` returning the index of the queue entry to admit next

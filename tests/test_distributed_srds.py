@@ -470,3 +470,49 @@ print("DATA AXIS OK")
     r = run_subprocess(code, devices=8)
     assert r.returncode == 0 and "DATA AXIS OK" in r.stdout, \
         f"stdout={r.stdout}\nstderr={r.stderr}"
+
+
+def test_sharded_window_policies():
+    """The FrontierPolicy seam on the sharded driver: window=ExactPrefix()
+    is the same compiled program as truncate=True (bitwise — the
+    documented ulp caveat is vs the UNtruncated engine, not between these
+    two), and the residual window stays serial-close at its tol."""
+    _run(r"""
+import numpy as np
+from repro.core import ExactPrefix, ResidualWindow
+scale = jnp.linspace(0.5, 1.5, 6)
+emodel = lambda x, t: jnp.tanh(x * scale) * (0.5 + 0.001 * t)
+eref = sample_sequential(emodel, sched, solver, x0)
+cfg_t = SRDSConfig(tol=1e-4, num_blocks=8, truncate=True)
+cfg_w = SRDSConfig(tol=1e-4, num_blocks=8, window=ExactPrefix())
+rt = make_sharded_sampler(mesh, "time", emodel, sched, solver, cfg_t)(x0)
+rw = make_sharded_sampler(mesh, "time", emodel, sched, solver, cfg_w)(x0)
+assert int(rt.iterations) == int(rw.iterations)
+assert bool(jnp.all(rt.sample == rw.sample))
+assert np.array_equal(np.asarray(rt.delta_history),
+                      np.asarray(rw.delta_history))
+cfg_r = SRDSConfig(tol=1e-4, num_blocks=8, window=ResidualWindow(1e-3))
+rr = make_sharded_sampler(mesh, "time", emodel, sched, solver, cfg_r)(x0)
+assert float(jnp.max(jnp.abs(rr.sample - eref))) < 5e-2
+""")
+
+
+def test_wavefront_retirement_consults_policy():
+    """Per-device retirement now rides FrontierPolicy.retire_at: the
+    default (ExactPrefix rule) skips retired devices' evals; an explicit
+    FixedBudget window disables retirement — same results, strictly more
+    physical evals."""
+    _run(r"""
+from repro.core import FixedBudget
+samp = make_pipelined_sampler(mesh, "time", model_fn, sched, solver,
+                              SRDSConfig(tol=0.0))
+samp_nb = make_pipelined_sampler(mesh, "time", model_fn, sched, solver,
+                                 SRDSConfig(tol=0.0, window=FixedBudget()))
+res, steps, evals = samp(x0)
+res2, steps2, evals2 = samp_nb(x0)
+assert float(jnp.max(jnp.abs(res.sample - res2.sample))) < 1e-12
+assert int(res.iterations) == int(res2.iterations)
+assert int(steps) == int(steps2)
+# retirement is the only difference: disabling it must cost strictly more
+assert int(evals2) > int(evals), (int(evals2), int(evals))
+""")

@@ -54,6 +54,51 @@ def test_parareal_update_residual_parity(shape, dtype):
                                rtol=3e-2 if dtype == "bfloat16" else 1e-4)
 
 
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("shape", [(3, 2, 7), (2, 3, 128), (4, 2, 33, 5),
+                                   (2, 2, 129), (5, 4)])
+def test_parareal_update_residual_per_block(shape, dtype):
+    """The sliding-window frontier feed: ``batch_dims=2`` preserves the
+    leading (block, sample) axes, emitting per-block per-sample L1
+    partials — kernel vs oracle across dtypes and padding shapes (each
+    (B, K) slice gets its own padded rows, so tiles never straddle)."""
+    dt = jnp.dtype(dtype)
+    y, c, p, o = (jax.random.normal(k, shape, dt) for k in KEYS)
+    out_k, r_k = ops.parareal_update_residual(y, c, p, o, batch_dims=2,
+                                              use_kernel=True)
+    out_r, r_r = ref.parareal_update_residual(y, c, p, o, batch_dims=2)
+    assert out_k.shape == shape and out_k.dtype == dt
+    assert r_k.shape == r_r.shape == shape[:2]
+    tol = 2e-2 if dtype == "bfloat16" else 1e-6
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(r_k, np.float32),
+                               np.asarray(r_r, np.float32),
+                               rtol=3e-2 if dtype == "bfloat16" else 1e-4)
+
+
+def test_parareal_update_residual_batch_dims_contract():
+    """batch_dims generalizes the legacy ``batched`` flag (0 == default,
+    1 == batched=True) and rejects out-of-range reductions."""
+    y, c, p, o = (jax.random.normal(k, (3, 5)) for k in KEYS)
+    for use_kernel in (True, False):
+        _, r0 = ops.parareal_update_residual(y, c, p, o, batch_dims=0,
+                                             use_kernel=use_kernel)
+        _, r0d = ops.parareal_update_residual(y, c, p, o,
+                                              use_kernel=use_kernel)
+        _, r1 = ops.parareal_update_residual(y, c, p, o, batch_dims=1,
+                                             use_kernel=use_kernel)
+        _, r1b = ops.parareal_update_residual(y, c, p, o, batched=True,
+                                              use_kernel=use_kernel)
+        assert r0.shape == r0d.shape == ()
+        assert r1.shape == r1b.shape == (3,)
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r1b))
+        with pytest.raises(ValueError, match="batch_dims"):
+            ops.parareal_update_residual(y, c, p, o, batch_dims=5,
+                                         use_kernel=use_kernel)
+
+
 @pytest.mark.parametrize("shape", [(3, 7), (2, 128), (4, 33, 5), (2, 129),
                                    (5, 1000)])
 def test_parareal_update_residual_batched(shape):

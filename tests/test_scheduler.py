@@ -165,6 +165,38 @@ def test_cost_model_matches_engine_accounting():
     assert st_t.total_evals == truncated_evals(cost, 3)
 
 
+def test_predict_completion_accounts_cross_group_contention():
+    """Busy micro-batches step round-robin on the one device, so a
+    request's completion estimate charges every OTHER busy group one step
+    at its current frontier cost per refinement round — an idle engine
+    and same-group requests see no contention term."""
+    model = _elementwise_model()
+    eng = _engine(model)
+    req36 = SampleRequest(seed=5, tol=1e-3, num_steps=36, iters_hint=3)
+    cost36 = iteration_cost(36, None, 1)
+    own36 = eng.batch_size * truncated_evals(cost36, 3)
+    # idle engine: the pre-contention arithmetic, unchanged
+    assert eng.predict_completion(req36) == \
+        eng.clock + own36 * eng.sec_per_eval
+    # occupy the 64-grid group -> its per-step cost contends
+    rid, req = eng.submit(SampleRequest(seed=0, tol=1e-6)), None
+    [(rid, req)] = eng.pull_queue()
+    eng.admit(rid, req)
+    cost64 = iteration_cost(64, None, 1)
+    step64 = eng.batch_size * cost64.refine_evals_at(0)  # group frontier 0
+    assert eng.predict_completion(req36) == \
+        eng.clock + (own36 + 3 * step64) * eng.sec_per_eval
+    # a SAME-group request is co-batched, not contended against
+    req64 = SampleRequest(seed=9, tol=1e-3, iters_hint=3)
+    own64 = eng.batch_size * truncated_evals(cost64, 3)
+    assert eng.predict_completion(req64) == \
+        eng.clock + own64 * eng.sec_per_eval
+    eng.drain()
+    # drained: the contention term disappears again
+    assert eng.predict_completion(req36) == \
+        eng.clock + own36 * eng.sec_per_eval
+
+
 def test_online_iters_predictor_learns_from_completions():
     """The EMA predictor replaces iters_hint once the tier has completions:
     predictions converge toward observed iteration counts, reset with

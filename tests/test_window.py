@@ -1,0 +1,402 @@
+"""FrontierPolicy window state machine: the policy seam must reproduce
+PR 4 truncation bit-identically under ExactPrefix, realize the documented
+approximate-mode contract under ResidualWindow (fewer evals, window_tol-
+bounded drift, monotone window), and keep the serve hot loop's one-sync
+contract with the per-block residual piggybacked on the existing fetch.
+
+Bitwise tests use an elementwise denoiser (the repo's standard trick: lane
+math is then identical across fine-solve batch widths, so any mismatch is
+a real frontier bug, not an XLA gemm-kernel shape effect)."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ExactPrefix, FixedBudget, FrontierPolicy,
+                        ResidualWindow, SolverConfig, SRDSConfig,
+                        iteration_cost, make_schedule, predicted_evals,
+                        resolve_policy, sample_sequential, srds_sample,
+                        truncated_evals, windowed_evals)
+from repro.core.engine import blockwise_norm, prefix_frontier
+from repro.serve.diffusion import DiffusionSamplingEngine, SampleRequest
+import repro.serve.diffusion as serve_diffusion
+from conftest import to_f64
+
+TOLS = [1e-2, 1e-4, 1e-6, 1e-3, 1e-5]
+
+
+def _elementwise_model(dim=8):
+    scale = jnp.linspace(0.5, 1.5, dim)
+
+    def model_fn(x, t):
+        return jnp.tanh(x * scale) * (0.5 + 0.001 * t)
+
+    return model_fn
+
+
+def _x0(batch=3, dim=8):
+    return jax.random.normal(jax.random.PRNGKey(1), (batch, dim),
+                             dtype=jnp.float64)
+
+
+# --------------------------------------------------------------------------
+# policy unit semantics
+# --------------------------------------------------------------------------
+
+def test_resolve_policy_mapping():
+    """The legacy truncate bool maps onto the seam in exactly one place;
+    non-policies are rejected loudly."""
+    assert isinstance(resolve_policy(None, True), ExactPrefix)
+    assert isinstance(resolve_policy(None, False), FixedBudget)
+    rw = ResidualWindow(1e-2)
+    assert resolve_policy(rw, False) is rw
+    assert resolve_policy(rw, True) is rw      # explicit policy wins
+    with pytest.raises(TypeError, match="FrontierPolicy"):
+        resolve_policy("exact", False)
+    # the flags drivers dispatch on
+    assert ExactPrefix().truncates and ExactPrefix().exact
+    assert not ExactPrefix().needs_block_residuals
+    assert rw.truncates and not rw.exact and rw.needs_block_residuals
+    assert not FixedBudget().truncates and FixedBudget().exact
+
+
+def test_static_frontier_schedules():
+    """ExactPrefix's static frontier is the PR 4 prefix_frontier schedule
+    (capped at B-1: the final block never retires); ResidualWindow shares
+    it as its compile-time floor; FixedBudget never truncates."""
+    B = 6
+    exact = [ExactPrefix().static_frontier(p, B) for p in range(9)]
+    assert exact == [min(prefix_frontier(p), B - 1) for p in range(9)]
+    assert exact[:4] == [0, 0, 1, 2] and exact[-1] == B - 1
+    assert [ResidualWindow(1e-3).static_frontier(p, B) for p in range(9)] \
+        == exact
+    assert all(FixedBudget().static_frontier(p, B) == 0 for p in range(9))
+
+
+@pytest.mark.parametrize("xp", ["numpy", "jax"])
+def test_residual_window_advance_contiguous_run(xp):
+    """advance() slides past the longest contiguous under-tolerance run
+    starting at lo — never past a still-moving block, never backward,
+    never onto the final block — on host numpy (the serving loop) and
+    traced jnp (the engine carry) alike."""
+    conv = np if xp == "numpy" else jnp
+    pol = ResidualWindow(window_tol=1e-3)
+    r = conv.asarray([1e-5, 1e-4, 5e-1, 1e-6, 1e-6, 1e-6], np.float32)
+    # blocks 0-1 pass, block 2 blocks the run despite 3-5 passing
+    assert int(pol.advance(0, r, 6)) == 2
+    # blocks below lo count as passed even if their entry is stale-large
+    assert int(pol.advance(3, r, 6)) == 5          # capped at B-1
+    assert int(pol.advance(2, r, 6)) == 2          # stuck on block 2
+    # monotone: never retreats even when everything is over tolerance
+    hot = conv.ones((6,), np.float32)
+    assert int(pol.advance(4, hot, 6)) == 4
+    # all-pass jumps to the cap, not past it
+    cold = conv.zeros((6,), np.float32)
+    assert int(pol.advance(0, cold, 6)) == 5
+
+
+def test_residual_window_advance_per_sample():
+    """A trailing sample axis rides through advance(): each sample's
+    window advances on its own residual column."""
+    pol = ResidualWindow(window_tol=1e-3)
+    r = np.asarray([[1e-5, 1e-1], [1e-5, 1e-5], [1e-1, 1e-5]], np.float32)
+    lo = pol.advance(np.zeros((2,), np.int32), r, 3)
+    assert lo.shape == (2,)
+    assert list(lo) == [2, 0]
+    # and respects per-sample starting bounds
+    lo2 = pol.advance(np.asarray([0, 1], np.int32), r, 3)
+    assert list(lo2) == [2, 2]
+
+
+def test_fixed_budget_never_retires():
+    pol = FixedBudget()
+    assert int(pol.retire_at(2, 8, 5)) == 5
+    assert int(pol.retire_at(7, 8, 5)) == 5
+    r = np.ones((4,), np.float32)
+    assert int(pol.advance(0, r, 4)) == 0
+    cost = iteration_cost(100, None, 1)
+    assert pol.predict_evals(cost, 4) == predicted_evals(cost, 4)
+
+
+def test_exact_prefix_retire_at_matches_wavefront_rule():
+    """The wavefront's per-device retirement rule, now policy-owned: block
+    i retires after min(i+1, max_iters) refinements, the tail never early."""
+    pol = ExactPrefix()
+    d, max_iters = 8, 5
+    got = [int(pol.retire_at(i, d, max_iters)) for i in range(d)]
+    assert got == [1, 2, 3, 4, 5, 5, 5, max_iters]
+    assert int(ResidualWindow(1e-3).retire_at(3, d, max_iters)) == got[3]
+
+
+# --------------------------------------------------------------------------
+# windowed accounting
+# --------------------------------------------------------------------------
+
+def test_refine_evals_window_and_windowed_evals():
+    """(lo, hi) window costs generalize the suffix frontier costs, and
+    windowed_evals prices a realized lo-schedule (skipping -1 fill)."""
+    cost = iteration_cost(100, None, 1)          # B=10, S=10
+    assert cost.refine_evals_window(0) == cost.refine_evals == 110
+    assert cost.refine_evals_window(3) == cost.refine_evals_at(3) == 7 * 11
+    assert cost.refine_evals_window(0, 4) == 4 * 11
+    assert cost.refine_evals_window(2, 6) == 4 * 11
+    # the final in-window block never retires: floors at one live block
+    assert cost.refine_evals_window(99) == 11
+    assert cost.refine_evals_window(6, 6) == 11
+    ws = windowed_evals(cost, [0, 0, 3, 7, -1, -1])
+    assert ws == cost.init_evals + 110 + 110 + 7 * 11 + 3 * 11
+    # a per-sample (max_iters, K) history prices each sample's own column
+    hist2 = np.asarray([[0, 0], [0, 3], [3, -1], [-1, -1]])
+    per = windowed_evals(cost, hist2)
+    assert per.shape == (2,)
+    assert list(per) == [windowed_evals(cost, hist2[:, 0]),
+                         windowed_evals(cost, hist2[:, 1])]
+    # a window at least as advanced as the prefix schedule costs no more
+    assert windowed_evals(cost, [prefix_frontier(p) for p in range(5)]) \
+        == truncated_evals(cost, 5)
+    ahead = [max(prefix_frontier(p), min(2 * p, 9)) for p in range(5)]
+    assert windowed_evals(cost, ahead) < truncated_evals(cost, 5)
+
+
+def test_blockwise_norm_matches_per_block_reduction():
+    d = jax.random.normal(jax.random.PRNGKey(0), (4, 3, 5))
+    for kind in ("l1_mean", "l2_mean", "linf"):
+        bn = blockwise_norm(d, kind, batched=True)
+        assert bn.shape == (4, 3)
+        from repro.core.engine import convergence_norm
+        np.testing.assert_allclose(
+            np.asarray(bn[2]), np.asarray(convergence_norm(d[2], kind,
+                                                           batched=True)),
+            rtol=1e-6)
+    with pytest.raises(ValueError, match="unknown norm"):
+        blockwise_norm(d, "l7")
+
+
+# --------------------------------------------------------------------------
+# engine: ExactPrefix == PR 4 truncation, ResidualWindow contract
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("per_sample", [False, True])
+def test_exact_prefix_policy_bit_identical_to_truncate(per_sample):
+    """The acceptance bar: window=ExactPrefix() reproduces the PR 4
+    truncate=True engine bit for bit (sample, iterations, delta_history),
+    joint and per-sample gated."""
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    if per_sample:
+        x = _x0(len(TOLS)) * jnp.linspace(0.3, 2.5, len(TOLS))[:, None]
+        tol = jnp.asarray(TOLS, jnp.float32)
+    else:
+        x, tol = _x0(), None
+    a = srds_sample(model, sched, SolverConfig("ddim"), x,
+                    SRDSConfig(tol=1e-4, per_sample=per_sample,
+                               truncate=True), tol=tol)
+    b = srds_sample(model, sched, SolverConfig("ddim"), x,
+                    SRDSConfig(tol=1e-4, per_sample=per_sample,
+                               window=ExactPrefix()), tol=tol)
+    assert bool(jnp.all(a.sample == b.sample))
+    np.testing.assert_array_equal(np.asarray(a.iterations),
+                                  np.asarray(b.iterations))
+    np.testing.assert_array_equal(np.asarray(a.delta_history),
+                                  np.asarray(b.delta_history))
+    # exact policies carry no window history
+    assert a.window_history is None and b.window_history is None
+
+
+def test_residual_window_fewer_evals_bounded_error():
+    """The approximate-mode contract on one run: the realized window
+    schedule (window_history) prices strictly below the ExactPrefix
+    schedule, the window is monotone and floored at the provable prefix,
+    and the sample drifts from the serial solve by O(window_tol) only."""
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    wt = 1e-3
+    cfg = SRDSConfig(tol=1e-5, window=ResidualWindow(wt))
+    res = srds_sample(model, sched, SolverConfig("ddim"), _x0(), cfg)
+    k = int(res.iterations)
+    hist = np.asarray(res.window_history)
+    assert hist.shape == (8,)                      # (max_iters,) = (B,)
+    los = hist[:k]
+    assert np.all(los >= 0) and np.all(hist[k:] == -1)
+    assert np.all(np.diff(los) >= 0)               # monotone
+    for p, lo in enumerate(los):                   # floored at the prefix
+        assert lo >= min(prefix_frontier(p), 7)
+    assert np.any(los > [prefix_frontier(p) for p in range(k)]), \
+        "window never advanced past the provable prefix"
+    cost = iteration_cost(64, None, 1)
+    assert windowed_evals(cost, hist) < truncated_evals(cost, k)
+    ref = sample_sequential(model, sched, SolverConfig("ddim"), _x0())
+    exact = srds_sample(model, sched, SolverConfig("ddim"), _x0(),
+                        SRDSConfig(tol=1e-5, truncate=True))
+    err_w = float(jnp.max(jnp.abs(res.sample - ref)))
+    err_e = float(jnp.max(jnp.abs(exact.sample - ref)))
+    assert err_w <= 20.0 * wt + 10.0 * err_e
+
+
+def test_residual_window_zero_tol_degenerates_to_exact():
+    """window_tol=0 freezes nothing beyond the provable prefix: results
+    equal the ExactPrefix engine bit for bit, with the history pinned to
+    the prefix schedule."""
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    a = srds_sample(model, sched, SolverConfig("ddim"), _x0(),
+                    SRDSConfig(tol=1e-4, truncate=True))
+    z = srds_sample(model, sched, SolverConfig("ddim"), _x0(),
+                    SRDSConfig(tol=1e-4, window=ResidualWindow(0.0)))
+    assert bool(jnp.all(a.sample == z.sample))
+    assert int(a.iterations) == int(z.iterations)
+    np.testing.assert_array_equal(np.asarray(a.delta_history),
+                                  np.asarray(z.delta_history))
+    k = int(z.iterations)
+    np.testing.assert_array_equal(
+        np.asarray(z.window_history)[:k],
+        [min(prefix_frontier(p), 7) for p in range(k)])
+
+
+def test_residual_window_per_sample_independent_windows():
+    """Per-sample gating composes with the residual window: each sample
+    carries its own window column, frozen samples' windows freeze with
+    them, and every sample still converges to its own tolerance."""
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    X = _x0(len(TOLS)) * jnp.linspace(0.3, 2.5, len(TOLS))[:, None]
+    tols = jnp.asarray(TOLS, jnp.float32)
+    res = srds_sample(model, sched, SolverConfig("ddim"), X,
+                      SRDSConfig(per_sample=True,
+                                 window=ResidualWindow(1e-3)), tol=tols)
+    iters = np.asarray(res.iterations)
+    hist = np.asarray(res.window_history)          # (max_iters, K)
+    assert hist.shape == (8, len(TOLS))
+    assert len(set(iters.tolist())) > 1            # genuinely mixed
+    for s in range(len(TOLS)):
+        k = int(iters[s])
+        assert np.all(hist[:k, s] >= 0)
+        assert np.all(hist[k:, s] == -1)           # frozen past convergence
+        assert np.all(np.diff(hist[:k, s]) >= 0)
+        assert float(res.final_delta[s]) < TOLS[s]
+    # windows of different samples actually diverge at some refinement
+    live = hist[:int(iters.max())]
+    assert any(len(set(row[row >= 0].tolist())) > 1 for row in live)
+
+
+def test_residual_window_rejects_incompatible_modes():
+    """A truncating window policy inherits truncation's incompatibilities
+    (GSPMD constraint, straggler reuse)."""
+    from repro.core.engine import run_parareal
+    fine = lambda h, p, y: h
+    G = lambda x, i0: x
+    starts = jnp.arange(4, dtype=jnp.int32)
+    x0 = jnp.ones((2,))
+    with pytest.raises(ValueError, match="block-sharding"):
+        run_parareal(G, fine, x0, starts, tol=0.0, max_iters=2,
+                     constrain=lambda t: t, window=ResidualWindow(1e-3))
+    with pytest.raises(ValueError, match="carry_fine_results"):
+        run_parareal(G, fine, x0, starts, tol=0.0, max_iters=2,
+                     carry_fine_results=True, window=ResidualWindow(1e-3))
+
+
+# --------------------------------------------------------------------------
+# the serving engine behind the same seam
+# --------------------------------------------------------------------------
+
+class _FetchCounter:
+    def __init__(self, real):
+        self.real = real
+        self.shapes = []
+
+    def __call__(self, x):
+        out = self.real(x)
+        self.shapes.append(out.shape)
+        return out
+
+
+def _engine(model, **kw):
+    kw.setdefault("batch_size", 3)
+    return DiffusionSamplingEngine(model, (8,), SolverConfig("ddim"),
+                                   num_steps=64, dtype=jnp.float64, **kw)
+
+
+def test_serve_residual_window_one_sync_with_piggyback(monkeypatch):
+    """The windowed hot loop still syncs exactly once per refinement — the
+    (K,) lane residual and the (B,) per-block residual ride ONE
+    concatenated (K+B,) fetch — plus one lane-only fetch per completion."""
+    model = _elementwise_model()
+    counter = _FetchCounter(serve_diffusion._host_fetch)
+    monkeypatch.setattr(serve_diffusion, "_host_fetch", counter)
+    eng = _engine(model, window=ResidualWindow(1e-3))
+    rids = [eng.submit(SampleRequest(seed=i, tol=TOLS[i % len(TOLS)]))
+            for i in range(5)]
+    queue = eng.pull_queue()
+    done = {}
+    while eng.busy() or queue:
+        while queue and eng.free_slots(queue[0][1]) > 0:
+            rid, req = queue.pop(0)
+            eng.admit(rid, req)
+        before = len(counter.shapes)
+        completions = eng.step_once()
+        done.update(dict(completions))
+        fetched = counter.shapes[before:]
+        assert len(fetched) == 1 + len(completions), fetched
+        assert fetched[0] == (eng.batch_size + 8,)   # (K + B,) piggyback
+        for shp in fetched[1:]:
+            assert shp == (8,), shp                  # one lane's sample
+    assert set(done) == set(rids)
+
+
+def test_serve_residual_window_close_to_exact_and_billed_by_window():
+    """Windowed serving: every response stays within the window_tol drift
+    bound of the exact engine's, bills its realized accumulated window
+    schedule, and the engine runs no more physical evals than ExactPrefix."""
+    model = _elementwise_model()
+    reqs = [SampleRequest(seed=i, tol=TOLS[i % len(TOLS)]) for i in range(6)]
+
+    def run(**kw):
+        eng = _engine(model, truncate_quantum=1, **kw)
+        rids = [eng.submit(r) for r in reqs]
+        out = eng.drain()
+        return [out[r] for r in rids], eng.stats()
+
+    exact, st_e = run()
+    win, st_w = run(window=ResidualWindow(1e-3))
+    cost = iteration_cost(64, None, 1)
+    for a, b in zip(exact, win):
+        assert np.max(np.abs(a.sample - b.sample)) < 5e-2
+        # billed evals = init + the realized per-step window charges,
+        # which never exceed the flat rate and never undercut the floor
+        assert cost.init_evals < b.model_evals \
+            <= predicted_evals(cost, b.iterations)
+    assert st_w["physical_evals"] <= st_e["physical_evals"]
+    assert st_w["effective_evals"] == sum(r.model_evals for r in win)
+
+
+def test_serve_windowed_quantum_bounds_program_cache():
+    """Windowed step programs compile per quantized frontier too: the
+    cache stays bounded by ~B/quantum variants."""
+    model = _elementwise_model()
+    eng = _engine(model, truncate_quantum=4, window=ResidualWindow(1e-3))
+    for i in range(4):
+        eng.submit(SampleRequest(seed=i, tol=TOLS[i % len(TOLS)]))
+    eng.drain()
+    (_, step_for, B, _) = eng._programs[next(iter(eng._programs))]
+    assert B == 8
+    assert set(step_for.windowed.cache) <= {0, 4}
+    assert not step_for.cache          # the exact-path cache stayed cold
+
+
+def test_serve_window_policy_resolution():
+    """Engine policy resolution mirrors the core seam: default truncate ->
+    ExactPrefix, truncate=False -> FixedBudget, block axis forces
+    truncating policies off."""
+    model = _elementwise_model()
+    assert isinstance(_engine(model).window, ExactPrefix)
+    assert isinstance(_engine(model, truncate=False).window, FixedBudget)
+    rw = ResidualWindow(1e-3)
+    assert _engine(model, window=rw).window is rw
+    eng = DiffusionSamplingEngine(model, (8,), SolverConfig("ddim"),
+                                  num_steps=64, batch_size=2,
+                                  dtype=jnp.float64, mesh=object(),
+                                  axis="time", window=rw)
+    assert isinstance(eng.window, FixedBudget) and not eng.truncate
