@@ -1,42 +1,41 @@
 #!/usr/bin/env bash
 # Tier-1 verify — the one command CI and humans both run (see ROADMAP.md).
-# Usage: scripts/check.sh [--fast] [extra pytest args]
-#   --fast: skip tests marked slow/distributed (the CI matrix legs run this;
-#           a separate full leg runs everything).
+# Usage: scripts/check.sh [--fast] [--lint-only] [extra pytest args]
+#   --fast:      skip tests marked slow/distributed (the CI matrix legs run
+#                this; a separate full leg runs everything).
+#   --lint-only: run only the reprolint static-analysis gate, no pytest
+#                (the dependency-free CI lint leg runs this).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 FAST=0
+LINT_ONLY=0
 ARGS=()
 for a in "$@"; do
   case "$a" in
     --fast) FAST=1 ;;
+    --lint-only) LINT_ONLY=1 ;;
     *) ARGS+=("$a") ;;
   esac
 done
 
-# Compat-policy lint (ROADMAP "Runtime-compat policy"): APIs that drifted
-# across the JAX 0.4 -> 0.5 boundary may only be touched through
-# repro.compat — direct call sites anywhere else fail the build.  This
-# includes jax.tree_map / jax.tree_util.tree_map (jax.tree_map was removed
-# in 0.5; compat.tree is the blessed spelling).
-if violations=$(grep -rnE 'jax\.shard_map\(|jax\.experimental\.shard_map|jax\.make_mesh\(|jax\.tree_util\.tree_map\(|jax\.tree_map\(' \
-      --include='*.py' src tests benchmarks examples \
-      | grep -v '^src/repro/compat\.py:'); then
-  echo "compat-policy lint FAILED: drifted JAX APIs called outside repro.compat" >&2
-  echo "${violations}" >&2
-  echo "Use repro.compat.shard_map / make_mesh / tree instead (ROADMAP.md)." >&2
+# Static-analysis gate: reprolint (python -m repro.analysis) enforces the
+# standing policies as AST rules RL001-RL007 — compat drift, engine-seam
+# ownership, host-sync discipline, donation safety, fused-path gating,
+# test-tier markers, tracked artifacts.  It replaced the old grep lints
+# (which missed aliased imports like `from jax import tree_map`).  A
+# missing or crashing linter is a loud failure, never a silent pass:
+# the module is stdlib-only, so it must import even without JAX.
+if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+     python -m repro.analysis src tests benchmarks examples scripts; then
+  echo "reprolint FAILED (or could not run) — see findings above." >&2
+  echo "Run 'python -m repro.analysis --list-rules' for the rule table;" >&2
+  echo "suppress a deliberate exception with '# reprolint: disable=CODE'." >&2
   exit 1
 fi
 
-# Artifact lint (the PR 1 -> 2 regression class): build caches (incl.
-# pytest's .pytest_cache droppings) and dry-run experiment outputs must
-# never be tracked.
-if tracked=$(git ls-files | grep -E '(^|/)__pycache__(/|$)|(^|/)\.pytest_cache(/|$)|\.pyc$|^experiments/dryrun'); then
-  echo "artifact lint FAILED: build/experiment artifacts are tracked in git" >&2
-  echo "${tracked}" >&2
-  echo "git rm --cached them and keep .gitignore covering the pattern." >&2
-  exit 1
+if [[ "${LINT_ONLY}" == "1" ]]; then
+  exit 0
 fi
 
 if [[ "${FAST}" == "1" ]]; then

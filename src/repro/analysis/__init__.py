@@ -1,0 +1,34 @@
+"""``repro.analysis`` — reprolint, the SRDS stack's AST invariant checker.
+
+An import-graph-aware static analysis pass enforcing the repo's standing
+policies (ROADMAP.md) as per-finding rule codes RL001-RL007, replacing the
+grep pipelines that used to live in ``scripts/check.sh``:
+
+==========  ======================  =============================================
+code        rule                    policy
+==========  ======================  =============================================
+RL001       compat-drift            drifted JAX APIs only via ``repro.compat``
+RL002       engine-seam-ownership   Parareal math only in ``repro.core.engine``;
+                                    frontier control only in ``repro.core.window``
+RL003       host-sync-discipline    no implicit device->host syncs in ``@hot_loop``
+RL004       donation-after-use      donated buffers are dead after the call
+RL005       fused-path-gating       Pallas dispatch via ``fused_default()``
+RL006       test-tier-markers       subprocess/multi-device tests marked slow/distributed
+RL007       tracked-artifacts       no build caches / dryrun outputs in git
+==========  ======================  =============================================
+
+Run ``python -m repro.analysis [paths...]`` (text or ``--format=json``);
+suppress a finding inline with ``# reprolint: disable=RL001`` (same line or
+a standalone comment directly above), or file-wide with
+``# reprolint: disable-file=RL001``.
+
+The package is deliberately **stdlib-only** — it imports neither JAX nor
+numpy — so the lint gate runs as a dependency-free CI leg and on any
+developer box, installed environment or not.
+"""
+from repro.analysis.core import (DEFAULT_PATHS, Finding, LintReport,
+                                 lint_paths, rule_table)
+from repro.analysis.markers import hot_loop
+
+__all__ = ["Finding", "LintReport", "lint_paths", "rule_table", "hot_loop",
+           "DEFAULT_PATHS"]

@@ -1,0 +1,24 @@
+"""Source-level markers consumed by reprolint (zero runtime behavior).
+
+This module must stay dependency-free (no JAX, no numpy): it is imported
+by hot serving code *and* by the linter's fixture corpus on machines where
+only the stdlib exists.
+"""
+from __future__ import annotations
+
+__all__ = ["hot_loop"]
+
+
+def hot_loop(fn):
+    """Mark ``fn`` as a device hot loop for static analysis.
+
+    A no-op at runtime.  reprolint's RL003 (host-sync discipline) flags
+    implicit device->host transfers — ``float()``/``int()``/``bool()``/
+    ``.item()``/``np.asarray()``/``jax.device_get`` on device values —
+    inside decorated functions, protecting contracts like the serving
+    engine's one-sync-per-refinement invariant statically instead of only
+    by call-count tests.  Host fetches must go through a ``*host_fetch``
+    seam (see :func:`repro.serve.diffusion._host_fetch`).
+    """
+    fn.__reprolint_hot_loop__ = True
+    return fn

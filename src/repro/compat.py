@@ -203,5 +203,20 @@ class _TreeShim:
         fn = getattr(mod, "leaves", None) or mod.tree_leaves
         return fn(tree_, *args, **kwargs)
 
+    @staticmethod
+    def structure(tree_, *args, **kwargs):
+        mod = _tree_module()
+        fn = getattr(mod, "structure", None) or mod.tree_structure
+        return fn(tree_, *args, **kwargs)
+
+    @staticmethod
+    def map_with_path(f, tree_, *rest, **kwargs):
+        # jax.tree.map_with_path only landed in 0.5.x; the tree_util
+        # spelling exists across the whole supported range
+        mod = _tree_module()
+        fn = getattr(mod, "map_with_path", None) \
+            or jax.tree_util.tree_map_with_path
+        return fn(f, tree_, *rest, **kwargs)
+
 
 tree = _TreeShim()

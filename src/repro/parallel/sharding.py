@@ -142,7 +142,7 @@ def param_shardings(cfg: ArchConfig, mesh, params, parallel: ParallelCtx, *,
                 fixed.append(ax if dim % max(sz, 1) == 0 else None)
         return _ns(mesh, P(*fixed))
 
-    return jax.tree_util.tree_map_with_path(rule, params)
+    return compat.tree.map_with_path(rule, params)
 
 
 def opt_state_shardings(cfg, mesh, opt_state, parallel):
@@ -215,4 +215,4 @@ def cache_shardings(cfg: ArchConfig, mesh, cache, parallel: ParallelCtx, *,
             return _ns(mesh, P(None, None))
         return _ns(mesh, P(*([None] * leaf.ndim)))
 
-    return jax.tree_util.tree_map_with_path(rule, cache)
+    return compat.tree.map_with_path(rule, cache)

@@ -107,6 +107,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.analysis.markers import hot_loop
 from repro.core.engine import (IterationCost, coarse_init_sweep,
                                iteration_cost, predicted_evals,
                                prefix_frontier, resolve_blocks,
@@ -388,6 +389,7 @@ class _MicroBatch:
             minf = self._frontier() if self.engine.truncate else 0
         return self.engine.batch_size * self._refine_evals_at(minf)
 
+    @hot_loop
     def step(self):
         """Init newly admitted lanes, run one lockstep refinement truncated
         to the group frontier, finalize converged slots.  Returns
@@ -765,6 +767,7 @@ class DiffusionSamplingEngine:
     def busy(self) -> bool:
         return any(b.busy() for b in self._batches.values())
 
+    @hot_loop
     def step_once(self) -> List[Tuple[int, SampleResponse]]:
         """One lockstep refinement on the next busy micro-batch
         (round-robin), advancing the virtual clock by the step's physical

@@ -4,12 +4,21 @@ import os
 import subprocess
 import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
+# tests/test_reprolint.py (and the CI lint leg) must collect and run on a
+# box with no JAX at all — the heavy imports are optional at conftest level
+# and every JAX-dependent test module fails loudly on its own import.
+try:
+    import jax
+    import jax.numpy as jnp
+except ImportError:      # pragma: no cover - exercised on the lint-only leg
+    jax = jnp = None
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the linter's seeded-violation corpus is data, not tests
+collect_ignore = ["lint_fixtures"]
 
 
 def pytest_configure(config):
@@ -36,6 +45,8 @@ def run_subprocess(code: str, devices: int = 8, timeout: int = 900, env_extra=No
 @pytest.fixture(scope="session")
 def toy_model():
     """A smooth nonlinear eps-predictor for solver/SRDS math tests (f32)."""
+    if jax is None:
+        pytest.skip("jax not installed")
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (8, 8)) * 0.3
 

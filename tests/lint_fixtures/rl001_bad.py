@@ -1,0 +1,27 @@
+"""Seeded RL001 violations — including the aliased-import class the old
+``check.sh`` grep could not see (`from jax import tree_map`, module aliases,
+and `tree_map_with_path` which the ``tree_map(`` pattern never matched)."""
+import jax
+import jax.tree_util as tu
+from jax import tree_map
+from jax.experimental import shard_map as sm
+
+
+def bare_alias(tree):
+    return tree_map(lambda x: x + 1, tree)
+
+
+def grep_invisible(tree):
+    return tu.tree_map_with_path(lambda p, x: x, tree)
+
+
+def mesh():
+    return jax.make_mesh((1,), ("dp",))
+
+
+def flops(compiled):
+    return compiled.cost_analysis()
+
+
+def shard(fn, mesh_):
+    return sm.shard_map(fn, mesh=mesh_)

@@ -1,0 +1,22 @@
+"""Mirror of rl001_bad with every drifted API routed through repro.compat."""
+from repro import compat
+
+
+def bare_alias(tree):
+    return compat.tree.map(lambda x: x + 1, tree)
+
+
+def grep_invisible(tree):
+    return compat.tree.map_with_path(lambda p, x: x, tree)
+
+
+def mesh():
+    return compat.make_mesh((1,), ("dp",))
+
+
+def flops(compiled):
+    return compat.cost_analysis(compiled)
+
+
+def shard(fn, mesh_):
+    return compat.shard_map(fn, mesh=mesh_)

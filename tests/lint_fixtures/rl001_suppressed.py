@@ -1,0 +1,11 @@
+"""A deliberate drifted call, recorded (not hidden) via inline suppression."""
+import jax
+
+
+def mesh_trailer():
+    return jax.make_mesh((1,), ("dp",))  # reprolint: disable=RL001
+
+
+def mesh_standalone():
+    # reprolint: disable=RL001
+    return jax.make_mesh((1,), ("dp",))

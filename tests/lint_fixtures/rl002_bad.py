@@ -1,0 +1,6 @@
+"""Seeded RL002 violations: the Parareal seam re-derived outside its owner."""
+from repro.core.engine import _residual_scratch
+
+
+def parareal_update(y, g_cur, g_prev):
+    return y + g_cur - g_prev

@@ -1,0 +1,11 @@
+"""Consuming the public engine/window seam is always fine."""
+from repro.core.engine import parareal_update, resolve_fused
+from repro.core.window import resolve_policy
+
+
+def refined(y, g_cur, g_prev):
+    return parareal_update(y, g_cur, g_prev)
+
+
+def policy(spec):
+    return resolve_policy(spec), resolve_fused(None)

@@ -1,0 +1,16 @@
+"""Seeded RL003 violations: implicit device->host syncs in a @hot_loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.markers import hot_loop
+
+
+@hot_loop
+def step(state):
+    resid = jnp.abs(state).max()
+    if float(resid) < 1e-3:
+        return state
+    gathered = jax.device_get(state)
+    hist = np.asarray(resid)
+    return resid.item(), gathered, hist

@@ -1,0 +1,19 @@
+"""The blessed hot-loop shape: ONE host fetch through the seam, all later
+host-side math on the fetched value."""
+import jax.numpy as jnp
+
+from repro.analysis.markers import hot_loop
+
+
+def _host_fetch(x):
+    raise NotImplementedError
+
+
+@hot_loop
+def step(state):
+    resid = jnp.abs(state).max()
+    resid_np = _host_fetch(resid)
+    if float(resid_np) < 1e-3:
+        return None
+    budget = int(len(str(resid_np)))
+    return state, budget

@@ -1,0 +1,20 @@
+"""Seeded RL004 violations: donated buffers read after the donating call."""
+import functools
+
+import jax
+
+
+def jit_value_form(y, g):
+    step = jax.jit(lambda a, b: a + b, donate_argnums=(0,))
+    out = step(y, g)
+    return out + y
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def fused_step(carry, buf):
+    return carry + buf
+
+
+def decorator_form(carry, buf):
+    new = fused_step(carry, buf)
+    return new, buf.sum()

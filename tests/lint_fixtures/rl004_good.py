@@ -1,0 +1,15 @@
+"""The safe donation idiom: rebind the result over the donated name."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def fused_step(carry, g):
+    return carry + g
+
+
+def loop(carry, g):
+    for _ in range(3):
+        carry = fused_step(carry, g)
+    return carry

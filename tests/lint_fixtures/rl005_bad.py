@@ -1,0 +1,10 @@
+"""Seeded RL005 violations: ad-hoc backend probes gating the fused path."""
+import jax
+
+
+def use_fused():
+    return jax.default_backend() == "tpu"
+
+
+def use_fused_platform(dev):
+    return dev.platform in ("tpu",)

@@ -1,0 +1,11 @@
+"""Dispatch policy lives in one place: ops.fused_default / resolve_fused."""
+from repro.core.engine import resolve_fused
+from repro.kernels import ops
+
+
+def use_fused():
+    return ops.fused_default()
+
+
+def maybe(flag):
+    return resolve_fused(flag)

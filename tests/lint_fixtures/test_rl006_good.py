@@ -1,0 +1,21 @@
+"""Tier-marked twins, plus the monkeypatched-fake-mesh exemption."""
+import subprocess
+
+import pytest
+
+from repro import compat
+
+
+@pytest.mark.slow
+def test_spawns_child():
+    subprocess.run(["python", "-c", "pass"], check=True)
+
+
+@pytest.mark.distributed
+def test_builds_mesh():
+    compat.make_mesh((2, 2), ("dp", "mp"))
+
+
+def test_fake_mesh(monkeypatch):
+    monkeypatch.setattr(compat, "_raw_make_mesh", lambda *a, **k: {})
+    compat.make_mesh((2, 2), ("dp", "mp"))

@@ -175,4 +175,11 @@ def test_tree_shim_roundtrip():
     t2 = compat.tree.unflatten(tdef, leaves)
     doubled = compat.tree.map(lambda x: x * 2, t)
     assert float(doubled["a"][0]) == 2.0
-    assert jax.tree_util.tree_structure(t2) == jax.tree_util.tree_structure(t)
+    assert compat.tree.structure(t2) == compat.tree.structure(t)
+
+
+def test_tree_shim_map_with_path():
+    t = {"a": jnp.ones((2,)), "b": jnp.zeros(())}
+    keyed = compat.tree.map_with_path(
+        lambda path, x: float(x.sum()) + len(path), t)
+    assert keyed == {"a": 3.0, "b": 1.0}

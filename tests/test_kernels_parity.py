@@ -162,6 +162,8 @@ def test_fused_default_resolution():
     """fused_default is on only where compiled kernels exist (TPU) and
     never under FORCE_REF; the tri-state resolver honors explicit bools."""
     from repro.core.engine import resolve_fused
+    # this test *is* the resolver's oracle, so the raw backend probe is
+    # intentional here  # reprolint: disable=RL005
     on_tpu = jax.default_backend() == "tpu"
     assert ops.fused_default() == on_tpu
     assert resolve_fused(None) == on_tpu

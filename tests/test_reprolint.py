@@ -1,0 +1,299 @@
+"""reprolint's own tests: fixture corpus, suppressions, CLI, meta-gate.
+
+This module must collect and pass on a box with NO JAX installed
+(``pytest tests/test_reprolint.py``): the linter is stdlib-only by
+contract, and the CI lint leg runs it without installing anything.
+"""
+import ast
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (DEFAULT_PATHS, Finding, LintReport, hot_loop,
+                            lint_paths, rule_table)
+from repro.analysis.cli import main as cli_main
+from repro.analysis.core import Suppressions, collect_aliases, qualname
+from repro.analysis.rules import artifact_violations
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+FIXTURES = os.path.join(HERE, "lint_fixtures")
+
+
+def lint_fixture(name):
+    report = lint_paths([os.path.join(FIXTURES, name)], root=REPO)
+    assert not report.errors, report.errors
+    return report
+
+
+def codes_and_lines(report):
+    return sorted((f.code, f.line) for f in report.findings)
+
+
+# ---------------------------------------------------------------- RL001
+
+def test_rl001_fires_on_aliased_imports_the_grep_missed():
+    report = lint_fixture("rl001_bad.py")
+    assert {f.code for f in report.findings} == {"RL001"}
+    lines = {f.line for f in report.findings}
+    # import bindings: `from jax import tree_map`, shard_map alias
+    assert {6, 7} <= lines
+    # bare aliased call + tu.tree_map_with_path (grep-invisible) +
+    # jax.make_mesh + .cost_analysis() + sm.shard_map
+    assert {11, 15, 19, 23, 27} <= lines
+    for f in report.findings:
+        assert f.path == "tests/lint_fixtures/rl001_bad.py"
+        assert f.rule == "compat-drift"
+
+
+def test_rl001_clean_on_compat_routed_twin():
+    report = lint_fixture("rl001_good.py")
+    assert report.findings == []
+
+
+def test_rl001_suppressions_are_recorded_not_discarded():
+    report = lint_fixture("rl001_suppressed.py")
+    assert report.findings == []
+    assert codes_and_lines(
+        LintReport(report.suppressed, [], 1, [])) == [("RL001", 6),
+                                                      ("RL001", 11)]
+
+
+# ---------------------------------------------------------------- RL002
+
+def test_rl002_fires_on_seam_rederivation():
+    report = lint_fixture("rl002_bad.py")
+    assert codes_and_lines(report) == [
+        ("RL002", 2),   # private helper imported across the seam
+        ("RL002", 5),   # def parareal_update outside the engine
+        ("RL002", 6),   # y + g_cur - g_prev by expression shape
+    ]
+
+
+def test_rl002_clean_on_public_seam_consumers():
+    assert lint_fixture("rl002_good.py").findings == []
+
+
+# ---------------------------------------------------------------- RL003
+
+def test_rl003_fires_on_implicit_syncs_in_hot_loop():
+    report = lint_fixture("rl003_bad.py")
+    assert codes_and_lines(report) == [
+        ("RL003", 12),  # float(device)
+        ("RL003", 14),  # jax.device_get
+        ("RL003", 15),  # np.asarray(device)
+        ("RL003", 16),  # .item()
+    ]
+
+
+def test_rl003_clean_when_fetch_goes_through_the_seam():
+    assert lint_fixture("rl003_good.py").findings == []
+
+
+# ---------------------------------------------------------------- RL004
+
+def test_rl004_fires_on_both_donation_forms():
+    report = lint_fixture("rl004_bad.py")
+    assert codes_and_lines(report) == [
+        ("RL004", 10),  # jit-value form: `out + y` after step(y, g)
+        ("RL004", 20),  # decorator form: `buf.sum()` after fused_step
+    ]
+
+
+def test_rl004_clean_on_rebind_idiom():
+    assert lint_fixture("rl004_good.py").findings == []
+
+
+# ---------------------------------------------------------------- RL005
+
+def test_rl005_fires_on_adhoc_backend_probes():
+    report = lint_fixture("rl005_bad.py")
+    assert codes_and_lines(report) == [("RL005", 6), ("RL005", 10)]
+
+
+def test_rl005_clean_on_fused_default():
+    assert lint_fixture("rl005_good.py").findings == []
+
+
+# ---------------------------------------------------------------- RL006
+
+def test_rl006_fires_on_unmarked_heavy_tests():
+    report = lint_fixture("test_rl006_bad.py")
+    assert codes_and_lines(report) == [("RL006", 7), ("RL006", 11)]
+
+
+def test_rl006_clean_on_marked_twins_and_fake_mesh():
+    assert lint_fixture("test_rl006_good.py").findings == []
+
+
+# ---------------------------------------------------------------- RL007
+
+def test_rl007_pure_pattern_core():
+    tracked = [
+        "src/repro/compat.py",
+        "src/repro/__pycache__/compat.cpython-311.pyc",
+        "stale.pyc",
+        ".pytest_cache/v/cache/lastfailed",
+        "experiments/dryrun/run0.json",
+        "experiments/real/keep.json",
+        "docs/pycache_notes.md",
+    ]
+    assert artifact_violations(tracked) == [
+        "src/repro/__pycache__/compat.cpython-311.pyc",
+        "stale.pyc",
+        ".pytest_cache/v/cache/lastfailed",
+        "experiments/dryrun/run0.json",
+    ]
+
+
+# reprolint: disable=RL006
+def test_rl007_fires_on_a_real_git_checkout(tmp_path):
+    subprocess.run(["git", "init", "-q", str(tmp_path)], check=True)
+    (tmp_path / "mod.pyc").write_bytes(b"\x00")
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    subprocess.run(["git", "-C", str(tmp_path), "add", "-f", "."], check=True)
+    report = lint_paths([], root=str(tmp_path))
+    assert [(f.code, f.path) for f in report.findings] == [("RL007",
+                                                            "mod.pyc")]
+    assert "artifact lint FAILED" in report.findings[0].message
+
+
+# ------------------------------------------------------- framework pieces
+
+def test_suppression_directive_parsing():
+    src = ("x = 1  # reprolint: disable=RL001\n"
+           "# reprolint: disable=rl002, RL003\n"
+           "y = 2\n"
+           "# reprolint: disable-file=RL005\n")
+    s = Suppressions(src)
+    assert s.covers("RL001", 1)
+    assert s.covers("RL002", 3) and s.covers("RL003", 3)   # next-line scope
+    assert s.covers("RL005", 999)                          # file-level
+    assert not s.covers("RL004", 1)
+
+
+def test_alias_resolution_sees_through_imports():
+    tree = ast.parse("from jax.experimental import shard_map as sm\n"
+                     "import jax.tree_util as tu\n"
+                     "from jax import tree_map\n")
+    aliases = collect_aliases(tree)
+    assert aliases["sm"] == "jax.experimental.shard_map"
+    assert aliases["tu"] == "jax.tree_util"
+    assert aliases["tree_map"] == "jax.tree_map"
+    expr = ast.parse("sm.shard_map").body[0].value
+    assert qualname(expr, aliases) == "jax.experimental.shard_map.shard_map"
+
+
+def test_relative_imports_anchor_at_the_containing_package():
+    tree = ast.parse("from .engine import parareal_update\n"
+                     "from ..compat import tree\n")
+    aliases = collect_aliases(tree, package="repro.core")
+    assert aliases["parareal_update"] == "repro.core.engine.parareal_update"
+    assert aliases["tree"] == "repro.compat.tree"
+
+
+def test_hot_loop_marker_is_a_noop():
+    def f():
+        return 7
+    g = hot_loop(f)
+    assert g is f and f.__reprolint_hot_loop__ is True and f() == 7
+
+
+def test_rule_registry_is_complete_and_ordered():
+    codes = [c for c, _, _ in rule_table()]
+    assert codes == [f"RL00{i}" for i in range(1, 8)]
+
+
+def test_analysis_package_is_stdlib_only():
+    """The whole point of the jax-free CI leg: no heavy import may creep in."""
+    pkg = os.path.join(REPO, "src", "repro", "analysis")
+    heavy = {"jax", "jaxlib", "numpy", "np", "scipy", "torch"}
+    for fn in sorted(os.listdir(pkg)):
+        if not fn.endswith(".py"):
+            continue
+        with open(os.path.join(pkg, fn), encoding="utf-8") as fh:
+            tree = ast.parse(fh.read(), filename=fn)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                roots = [a.name.split(".")[0] for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                roots = [node.module.split(".")[0]]
+            else:
+                continue
+            assert not (set(roots) & heavy), \
+                f"{fn} imports a heavy dependency: {roots}"
+
+
+# ------------------------------------------------------------------ CLI
+
+def test_cli_json_output_exit_code_and_artifact(tmp_path, capsys):
+    bad = os.path.join(FIXTURES, "rl001_bad.py")
+    out_file = tmp_path / "reprolint.json"
+    rc = cli_main([bad, "--root", REPO, "--format", "json",
+                   "--output", str(out_file)])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["version"] == 1
+    assert payload["files_scanned"] == 1
+    assert {f["code"] for f in payload["findings"]} == {"RL001"}
+    assert {r["code"] for r in payload["rules"]} == \
+        {f"RL00{i}" for i in range(1, 8)}
+    assert json.loads(out_file.read_text())["findings"] == payload["findings"]
+
+
+def test_cli_clean_fixture_exits_zero(capsys):
+    rc = cli_main([os.path.join(FIXTURES, "rl001_good.py"), "--root", REPO])
+    assert rc == 0
+    assert "reprolint: clean" in capsys.readouterr().out
+
+
+def test_cli_select_restricts_rules(capsys):
+    bad = os.path.join(FIXTURES, "rl002_bad.py")
+    rc = cli_main([bad, "--root", REPO, "--select", "RL005",
+                   "--format", "json"])
+    assert rc == 0
+    assert json.loads(capsys.readouterr().out)["findings"] == []
+
+
+def test_cli_unparseable_input_is_exit_2_not_a_pass(tmp_path, capsys):
+    f = tmp_path / "broken.py"
+    f.write_text("def (:\n")
+    rc = cli_main([str(f), "--root", str(tmp_path)])
+    capsys.readouterr()
+    assert rc == 2
+
+
+# reprolint: disable=RL006
+def test_missing_linter_module_fails_loudly(tmp_path):
+    """check.sh pipes any nonzero exit into a hard failure; a box where
+    repro.analysis cannot import must not silently pass the gate."""
+    env = dict(os.environ, PYTHONPATH=str(tmp_path))
+    proc = subprocess.run([sys.executable, "-m", "repro.analysis"],
+                          capture_output=True, text=True, env=env,
+                          cwd=str(tmp_path))
+    assert proc.returncode != 0
+
+
+def test_check_sh_wired_to_reprolint_not_grep():
+    with open(os.path.join(REPO, "scripts", "check.sh"),
+              encoding="utf-8") as fh:
+        text = fh.read()
+    assert "python -m repro.analysis" in text
+    assert "--lint-only" in text
+    assert "grep -rnE" not in text            # old compat-policy grep gone
+    assert "git ls-files | grep" not in text  # old artifact grep gone
+
+
+# ------------------------------------------------------------- meta-gate
+
+def test_live_tree_is_finding_free_modulo_recorded_suppressions():
+    report = lint_paths(list(DEFAULT_PATHS), root=REPO)
+    assert report.errors == []
+    assert report.findings == [], "\n".join(
+        f"{f.location()}: {f.code} {f.message}" for f in report.findings)
+    # the suppressions that do exist are deliberate and stay visible
+    for f in report.suppressed:
+        assert isinstance(f, Finding)
