@@ -9,14 +9,17 @@ truncation saving — never wall-clock, which is runner noise.  A baseline
 row that disappears is a failure too (silently dropping a measured config
 is how regressions hide), as is an ``ExactPrefix`` run that lost
 bit-identity with the untruncated engine (``bit_identical`` /
-``bit_identical_exact``) on a matching environment, or a table12 row
+``bit_identical_exact``) on a matching environment, a table12 row
 whose residual window stopped doing strictly fewer evals than the exact
-prefix.
+prefix, or any row carrying a ``within_tol`` accuracy verdict that is
+false (the table6 mesh row's single-device-parity contract — checked on
+the current run alone, so it gates on every environment).
 
 Usage (what .github/workflows/ci.yml runs):
 
     PYTHONPATH=src python -m benchmarks.table11_truncation --out BENCH_core.json
     PYTHONPATH=src python -m benchmarks.table12_window --out BENCH_core.json
+    PYTHONPATH=src python -m benchmarks.table6_devices --out BENCH_core.json
     PYTHONPATH=src python -m benchmarks.check_bench_core \
         --current BENCH_core.json \
         --baseline benchmarks/baselines/BENCH_core_baseline.json
@@ -98,6 +101,17 @@ def check(current: dict, baseline: dict, tolerance: float = TOLERANCE):
             failures.append(
                 f"{name}: truncation saving fell below 25% "
                 f"({cur['evals_saving_pct']:.1f}%)")
+    # accuracy contract (table6 mesh row): any current row that measures
+    # a within-tolerance verdict must hold it — checked on the current
+    # run alone (even rows not yet in the baseline), since parity with
+    # the single-device engine is an invariant of the code, not of the
+    # environment
+    for name, cur in sorted(cur_rows.items()):
+        if "within_tol" in cur and not cur["within_tol"]:
+            failures.append(
+                f"{name}: within_tol is false "
+                f"(max_abs_diff={cur.get('max_abs_diff')} > "
+                f"tol={cur.get('tol')})")
     return failures
 
 

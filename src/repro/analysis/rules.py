@@ -1,4 +1,4 @@
-"""reprolint rules RL001-RL007: the repo's standing policies, mechanically.
+"""reprolint rules RL001-RL008: the repo's standing policies, mechanically.
 
 Each rule enforces one policy from ROADMAP.md "Standing policies" (the rule
 code is cross-referenced there and in README "Static analysis"):
@@ -20,6 +20,10 @@ code is cross-referenced there and in README "Static analysis"):
                                 carry ``slow``/``distributed`` markers
 * RL007 tracked-artifacts     — build caches and dry-run outputs are never
                                 tracked in git
+* RL008 model-eval-seam       — drivers and the serving engine evaluate the
+                                backbone only through the
+                                ``repro.core.denoiser.Denoiser`` seam, never
+                                by calling a bare ``model_fn(x, t)``
 
 All rules are pure-AST (no JAX import anywhere in this package): they see
 through import aliases via :func:`repro.analysis.core.qualname`, which is
@@ -811,3 +815,48 @@ def rl007_artifacts(root: str, modules) -> Iterable[Finding]:
             message="artifact lint FAILED: build/experiment artifacts are "
                     "tracked in git — git rm --cached it and keep "
                     ".gitignore covering the pattern")
+
+
+# ==========================================================================
+# RL008 — model-eval seam (drivers/serve call the Denoiser, not model_fn)
+# ==========================================================================
+
+# Only drivers and the serving engine are in scope — models may of course
+# call their own forward, and tests/benchmarks call whatever they probe.
+# Fixture files keep the rule's natural scope by name (the RL006 precedent:
+# naming places a fixture inside the scope the rule derives structurally).
+_RL008_SCOPES = ("src/repro/core/", "src/repro/serve/")
+# solvers.py is the seam's one consumer (it receives the eval callable the
+# driver composed); denoiser.py is the seam itself.
+_RL008_ALLOWED = ("src/repro/core/solvers.py", "src/repro/core/denoiser.py")
+
+
+def _rl008_in_scope(path: str) -> bool:
+    p = path.replace(os.sep, "/")
+    if any(s in p for s in _RL008_SCOPES):
+        return True
+    return os.path.basename(p).startswith("rl008")
+
+
+@module_rule("RL008", "model-eval-seam",
+             "direct model_fn(x, t)-shaped call in a driver or the serving "
+             "engine instead of the repro.core.denoiser.Denoiser seam")
+def rl008_model_eval_seam(mod: ModuleInfo) -> Iterable[Finding]:
+    if not _rl008_in_scope(mod.path) or _in(mod.path, *_RL008_ALLOWED):
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        leaf = _leaf_name(node.func)
+        if leaf is None or "model_fn" not in leaf:
+            continue
+        if len(node.args) != 2 or any(
+                isinstance(a, ast.Starred) for a in node.args):
+            continue
+        yield _find(
+            mod, node, "RL008", "model-eval-seam",
+            f"direct model eval `{leaf}(x, t)` outside the Denoiser seam — "
+            f"adapt via repro.core.denoiser.as_denoiser and evaluate "
+            f"through the Denoiser (standalone call, .inner_eval() inside "
+            f"a driver shard_map, or .shard_eval() under denoiser_spec) so "
+            f"time/data/model parallelism compose driver-free")

@@ -28,6 +28,7 @@ __all__ = [
     "axis_type_auto",
     "default_axis_types",
     "axis_size",
+    "tpu_compiler_params",
     "cost_analysis",
     "tree",
 ]
@@ -144,6 +145,25 @@ def axis_size(axis_name: str) -> int:
     if impl is not None:
         return impl(axis_name)
     return jax.lax.psum(1, axis_name)
+
+
+# --------------------------------------------------------------------------
+# Pallas TPU compiler params: TPUCompilerParams (0.4.x) -> CompilerParams
+# --------------------------------------------------------------------------
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams(**kwargs)`` across the rename.
+
+    New JAX calls the dataclass ``CompilerParams``; 0.4.x spells it
+    ``TPUCompilerParams`` (same fields).  Kernels must build it through
+    here — the interpret-mode path still constructs the object at trace
+    time, so the wrong name breaks CPU test runs, not just TPU.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
 
 
 # --------------------------------------------------------------------------

@@ -1,6 +1,11 @@
 """The paper's own denoiser configs: DiT backbones at the paper's benchmark
-scales (CIFAR 32x32, LSUN 128x128 pixel; SD-v2-like 64x64x4 latent)."""
-from .base import ArchConfig, register_arch
+scales (CIFAR 32x32, LSUN 128x128 pixel; SD-v2-like 64x64x4 latent).
+
+:func:`dit_denoiser` is the one-stop constructor wiring these configs into
+the sharding-aware :class:`repro.core.denoiser.Denoiser` seam — the same
+object drives ``srds_sample``, the sharded/pipelined drivers and the
+serving engine, model-parallel or not."""
+from .base import ArchConfig, get_arch, register_arch
 
 # ~100M DiT for the end-to-end training example (CIFAR-scale)
 SRDS_DIT_S = register_arch(ArchConfig(
@@ -28,3 +33,23 @@ SRDS_DIT_SD = register_arch(ArchConfig(
     patch_size=2, in_channels=4,
     source="paper benchmark: SD-v2 latent diffusion (64x64x4 latents)",
 ))
+
+
+def dit_denoiser(arch, params, *, use_kernel=None, shard_axis=None,
+                 mesh=None):
+    """DiT denoiser for a paper config, through the seam.
+
+    ``arch`` is a registered config name (``srds-dit-cifar`` /
+    ``srds-dit-lsun`` / ``srds-dit-sd2``) or an :class:`ArchConfig`.
+    Without ``shard_axis`` this is the plain ``model_fn(x, t)`` every
+    sampler already consumes (adapted on entry via
+    :func:`repro.core.denoiser.as_denoiser`); with it, the returned
+    :class:`repro.core.denoiser.Denoiser` patch-shards the backbone over
+    that mesh axis — typically ``"model"`` on the (time, data, model) mesh
+    from :func:`repro.launch.mesh.make_srds_mesh` — and every driver runs
+    a genuinely model-parallel fine solve with no driver-side changes.
+    """
+    from repro.models.dit import make_denoiser
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    return make_denoiser(cfg, params, use_kernel=use_kernel,
+                         shard_axis=shard_axis, mesh=mesh)

@@ -6,6 +6,7 @@ gating, result assembly) lives in :mod:`repro.core.engine`; the samplers in
 """
 from .schedules import DiffusionSchedule, make_schedule
 from .solvers import SolverConfig, solve, solver_step, solver_names
+from .denoiser import Denoiser, as_denoiser
 from .sequential import SampleStats, sample_sequential, sequential_stats
 from .engine import (IterationCost, SRDSConfig, SRDSResult, iteration_cost,
                      predicted_evals, resolve_blocks, truncated_evals,
@@ -18,6 +19,7 @@ from .paradigms import ParaDiGMSConfig, ParaDiGMSResult, paradigms_sample, parad
 __all__ = [
     "DiffusionSchedule", "make_schedule",
     "SolverConfig", "solve", "solver_step", "solver_names",
+    "Denoiser", "as_denoiser",
     "SampleStats", "sample_sequential", "sequential_stats",
     "SRDSConfig", "SRDSResult", "resolve_blocks", "srds_sample", "srds_stats",
     "IterationCost", "iteration_cost", "predicted_evals", "truncated_evals",

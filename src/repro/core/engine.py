@@ -563,6 +563,28 @@ class RefineState(NamedTuple):
 FineFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
 
+def vmap_fine_fn(F, starts: jnp.ndarray, constrain=None) -> FineFn:
+    """The single-program :data:`FineFn`: fine solves batched over the
+    block dim with ``vmap``, suffix-aware under truncation.
+
+    ``F(x, i0)`` is one block's fine solve (typically ``solve(...)`` over a
+    :class:`repro.core.denoiser.Denoiser`); ``starts`` the ``(B,)`` block
+    start indices.  Under truncation the heads are the active suffix — the
+    static offset is recovered from the stack length.  ``constrain``
+    (optional) re-applies a block-dim sharding constraint around the vmap.
+    Shared by ``srds_sample`` and the serve engine's meshless fine path.
+    """
+    B = starts.shape[0]
+    cb = constrain if constrain is not None else (lambda t: t)
+
+    def fine_fn(x_heads, p, y_prev):
+        f = B - x_heads.shape[0]
+        st = starts[f:] if f else starts
+        return cb(jax.vmap(lambda xi, i0: F(xi, i0))(cb(x_heads), st))
+
+    return fine_fn
+
+
 def _batch_mask(mask: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
     """Broadcast a (K,) sample mask against a (B, K, ...) trajectory tensor."""
     return mask.reshape((1,) + mask.shape + (1,) * (t.ndim - 2))

@@ -12,8 +12,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .denoiser import as_denoiser
 from .engine import (SRDSConfig, SRDSResult, iteration_cost, resolve_blocks,
-                     result_from_state, run_parareal)
+                     result_from_state, run_parareal, vmap_fine_fn)
 from .schedules import DiffusionSchedule
 from .sequential import SampleStats
 from .solvers import ModelFn, SolverConfig, solve
@@ -48,25 +49,25 @@ def srds_sample(model_fn: ModelFn, sched: DiffusionSchedule, solver: SolverConfi
     B, S = resolve_blocks(n, cfg.num_blocks)
     max_iters = cfg.max_iters if cfg.max_iters is not None else B
     starts = jnp.arange(B, dtype=jnp.int32) * S
+    # every model eval goes through the sharding-aware seam: a
+    # model-parallel Denoiser self-wraps its shard_fn over its bound mesh
+    # (composing with the vmapped block dim), a plain fn adapts for free
+    den = as_denoiser(model_fn)
 
     def G(x, i0):  # coarse: one solver step across a whole block
-        return solve(model_fn, sched, solver, x, i0, 1, S)
+        return solve(den, sched, solver, x, i0, 1, S)
 
     def F(x, i0):  # fine: S solver steps of stride 1
-        return solve(model_fn, sched, solver, x, i0, S, 1)
+        return solve(den, sched, solver, x, i0, S, 1)
 
     def _cb(t):
         if cfg.block_sharding is not None:
             return jax.lax.with_sharding_constraint(t, cfg.block_sharding)
         return t
 
-    def fine_fn(x_heads, p, y_prev):
-        # parallel fine solves, batched over the block dim; under
-        # truncation the heads are the active suffix — recover the static
-        # offset from the stack length
-        f = B - x_heads.shape[0]
-        st = starts[f:] if f else starts
-        return _cb(jax.vmap(lambda xi, i0: F(xi, i0))(_cb(x_heads), st))
+    fine_fn = vmap_fine_fn(F, starts,
+                           constrain=_cb if cfg.block_sharding is not None
+                           else None)
 
     out = run_parareal(G, fine_fn, x_init, starts,
                        tol=cfg.tol if tol is None else tol,

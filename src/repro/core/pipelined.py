@@ -42,6 +42,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 
+from .denoiser import as_denoiser
 from .engine import (SRDSConfig, assemble_result, convergence_norm,
                      has_converged, parareal_update, resolve_blocks,
                      run_parareal)
@@ -66,10 +67,18 @@ def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
     ``tol`` overrides ``cfg.tol`` and may be a traced scalar or — with
     ``cfg.per_sample`` — a per-sample ``(K,)`` vector over the leading batch
     axis of ``x_init`` (mixed-tolerance micro-batches).
+
+    ``model_fn`` may be a :class:`repro.core.denoiser.Denoiser`: the specs
+    of the enclosing shard_map replicate over the denoiser's mesh axes, so
+    its ``inner_eval`` glue (slice per ``in_spec`` -> shard body ->
+    all_gather per ``out_spec``) runs the backbone model-parallel on the
+    same mesh — the block ``axis`` and the model axes compose without any
+    driver-specific code.
     """
     n = sched.num_steps
     d = compat.axis_size(axis)
     me = jax.lax.axis_index(axis)
+    eval_fn = as_denoiser(model_fn).inner_eval()
     b_total, s_steps = resolve_blocks(n, cfg.num_blocks)
     if b_total % d != 0:
         raise ValueError(f"num_blocks={b_total} not divisible by axis size {d}")
@@ -84,10 +93,10 @@ def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
     all_starts = jnp.arange(b_total, dtype=jnp.int32) * s_steps
 
     def G(x, i0):
-        return solve(model_fn, sched, solver, x, i0, 1, s_steps)
+        return solve(eval_fn, sched, solver, x, i0, 1, s_steps)
 
     def F(x, i0):
-        return solve(model_fn, sched, solver, x, i0, s_steps, 1)
+        return solve(eval_fn, sched, solver, x, i0, s_steps, 1)
 
     def fine_fn(x_heads, p, y_prev):
         live = x_heads.shape[0]
@@ -161,7 +170,15 @@ def make_sharded_sampler(mesh, axis: str, model_fn: ModelFn,
     ``cfg.per_sample`` (joint-norm gating couples lanes: each data shard
     would gate on its local residual and iteration counts would diverge)
     and a ``K`` divisible by the axis size.
+
+    ``model_fn`` may be a sharding-aware
+    :class:`repro.core.denoiser.Denoiser` whose ``mesh_axes`` name further
+    axes of the same ``mesh`` (e.g. ``model``) — a (time, data, model)
+    mesh then runs time-, data- and model-parallel fine solves through the
+    one seam.  The mesh is validated against the denoiser's requirement
+    up front (clear ``ValueError`` instead of XLA's unbound-axis error).
     """
+    as_denoiser(model_fn).check_mesh(mesh)
     if data_axis is not None and not cfg.per_sample:
         raise ValueError("data_axis shards the sample batch, which is only "
                          "exact under per-sample gating — set "
@@ -256,6 +273,9 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
     n = sched.num_steps
     d = compat.axis_size(axis)
     me = jax.lax.axis_index(axis)
+    # model evals go through the sharding-aware seam: a model-parallel
+    # Denoiser's inner_eval composes its mesh axes with the ring axis
+    eval_fn = as_denoiser(model_fn).inner_eval()
     if n % d != 0:
         raise ValueError(f"N={n} must be divisible by device count {d}")
     s_steps = n // d                       # fine steps per block
@@ -289,7 +309,7 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
         i1 = jnp.stack([fine_i0 + 1, block_i0 + s_steps])
 
         def one(slot, a, b):
-            return solver_step(model_fn, sched, solver, slot, a, b)
+            return solver_step(eval_fn, sched, solver, slot, a, b)
 
         out = jax.vmap(one)(stacked, i0, i1)
         return out[0], out[1]              # fine-advanced z, coarse result
@@ -447,6 +467,8 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
 def make_pipelined_sampler(mesh, axis: str, model_fn: ModelFn,
                            sched: DiffusionSchedule, solver: SolverConfig,
                            cfg: SRDSConfig):
+    as_denoiser(model_fn).check_mesh(mesh)
+
     def local(x_init):
         return srds_pipelined_local(model_fn, sched, solver, x_init, axis, cfg)
 

@@ -28,6 +28,18 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     return compat.make_mesh(shape, axes)
 
 
+def make_srds_mesh(time: int, data: int = 1, model: int = 1, *,
+                   devices=None):
+    """The SRDS (time, data, model) mesh: parareal blocks over ``time``,
+    independent sample lanes over ``data``, and the denoiser's own
+    parallelism (:class:`repro.core.denoiser.Denoiser.mesh_axes`) over
+    ``model``.  Axes of size 1 are kept — specs naming them are no-ops, so
+    one program covers every composition; requires time*data*model devices.
+    """
+    return compat.make_mesh((time, data, model), ("time", "data", "model"),
+                            devices=devices)
+
+
 # TPU v5e hardware constants for the roofline analysis (per chip)
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

@@ -59,15 +59,34 @@ def _modulate(x, shift, scale):
 
 
 def dit_forward(cfg: ArchConfig, params, x_img, t, *, use_kernel=None,
-                unroll: bool = False):
-    """x_img: (B, H, W, C); t: (B,) conditioning times. Returns eps (B,H,W,C)."""
+                unroll: bool = False, shard_axis: Optional[str] = None):
+    """x_img: (B, H, W, C); t: (B,) conditioning times. Returns eps (B,H,W,C).
+
+    With ``shard_axis`` this is the *per-shard* body of a patch-sharded
+    forward inside a ``shard_map``: ``x_img`` is the local row-shard
+    (``H_total / axis_size`` rows), positions are offset by ``axis_index``
+    (row-major patch order makes row-shards contiguous position ranges),
+    and attention all-gathers the projected K/V over the axis so every
+    local query row attends to the full sequence.  Everything else —
+    patch embed, adaLN modulation, MLP, unpatchify — is per-position and
+    needs no communication.
+    """
     b, h, w, c = x_img.shape
     p = cfg.patch_size
     gh, gw = h // p, w // p
     dtype = params["patch_in"].dtype
     patches = x_img.reshape(b, gh, p, gw, p, c).transpose(0, 1, 3, 2, 4, 5)
     patches = patches.reshape(b, gh * gw, p * p * c).astype(dtype)
-    x = patches @ params["patch_in"] + params["pos"][None, :gh * gw]
+    if shard_axis is None:
+        pos = params["pos"][:gh * gw]
+        kv_gather = None
+    else:
+        off = jax.lax.axis_index(shard_axis) * (gh * gw)
+        pos = jax.lax.dynamic_slice_in_dim(params["pos"], off, gh * gw, 0)
+
+        def kv_gather(a):   # (B, S_local, Hkv, D) -> (B, S_total, Hkv, D)
+            return jax.lax.all_gather(a, shard_axis, axis=1, tiled=True)
+    x = patches @ params["patch_in"] + pos[None]
 
     temb = sinusoidal_time_embed(t, 256).astype(dtype)
     temb = jax.nn.silu((temb @ params["t_mlp1"]).astype(jnp.float32)).astype(dtype)
@@ -83,7 +102,8 @@ def dit_forward(cfg: ArchConfig, params, x_img, t, *, use_kernel=None,
         h_in = _modulate(apply_norm({"scale": jnp.ones((cfg.d_model,))}, x), sa, ga)
         attn, _ = attention_full(pb["attn"], h_in, num_heads=hq,
                                  num_kv_heads=hkv, head_dim=hd, causal=False,
-                                 theta=None, use_kernel=use_kernel)
+                                 theta=None, use_kernel=use_kernel,
+                                 kv_gather=kv_gather)
         x = x + gm[:, None] * attn
         h2 = _modulate(apply_norm({"scale": jnp.ones((cfg.d_model,))}, x), sm_, s2)
         x = x + g2[:, None] * apply_mlp(pb["mlp"], h2, "gelu")
@@ -98,14 +118,46 @@ def dit_forward(cfg: ArchConfig, params, x_img, t, *, use_kernel=None,
     return out.reshape(b, h, w, c).astype(x_img.dtype)
 
 
-def make_denoiser(cfg: ArchConfig, params, *, use_kernel=None):
-    """Returns model_fn(x, t) with scalar-or-batched t (samplers pass scalar)."""
+def make_denoiser(cfg: ArchConfig, params, *, use_kernel=None,
+                  shard_axis: Optional[str] = None, mesh=None):
+    """Returns model_fn(x, t) with scalar-or-batched t (samplers pass scalar).
+
+    With ``shard_axis`` it instead returns a sharding-aware
+    :class:`repro.core.denoiser.Denoiser`: sample rows (the H dim of
+    ``(K, H, W, C)``) patch-shard over that mesh axis
+    (``in_spec = out_spec = P(None, shard_axis)``), the per-shard body is
+    :func:`dit_forward` with its K/V all-gather, and ``fn`` stays the
+    single-device global forward (the bit-exactness reference).  Every
+    driver — ``srds_sample``, the sharded/pipelined samplers, the serving
+    engine — consumes it through the seam with zero DiT-specific code.
+    ``mesh`` (optional) pre-binds the denoiser for standalone calls.
+    """
 
     def model_fn(x, t):
         tb = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (x.shape[0],))
         return dit_forward(cfg, params, x, tb, use_kernel=use_kernel)
 
-    return model_fn
+    if shard_axis is None:
+        return model_fn
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.denoiser import Denoiser
+
+    def shard_fn(x, t):
+        if x.shape[1] % cfg.patch_size:
+            raise ValueError(
+                f"local row-shard of {x.shape[1]} rows is not divisible by "
+                f"patch_size={cfg.patch_size}; pick a {shard_axis!r} axis "
+                "size with (H / axis_size) % patch_size == 0")
+        tb = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (x.shape[0],))
+        return dit_forward(cfg, params, x, tb, use_kernel=use_kernel,
+                           shard_axis=shard_axis)
+
+    den = Denoiser(fn=model_fn, shard_fn=shard_fn,
+                   in_spec=P(None, shard_axis), out_spec=P(None, shard_axis),
+                   mesh_axes={shard_axis: 1})
+    return den.bind(mesh) if mesh is not None else den
 
 
 # --------------------------------------------------------------------------

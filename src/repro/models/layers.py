@@ -118,16 +118,25 @@ def project_qkv(p, x, num_heads, num_kv_heads, head_dim, positions, theta,
 def attention_full(p, x, *, num_heads, num_kv_heads, head_dim, causal=True,
                    window=None, theta=10_000.0, qk_norm=False,
                    positions=None, use_kernel=None, chunk_kv=None,
-                   unroll=False):
+                   unroll=False, kv_gather=None):
     """Full-sequence attention (training / prefill). x: (B, S, d).
 
     ``chunk_kv``: pure-JAX flash (online softmax over KV tiles) — the
-    memory-faithful stand-in for the Pallas kernel on non-TPU backends."""
+    memory-faithful stand-in for the Pallas kernel on non-TPU backends.
+    ``kv_gather``: sequence-parallel hook — inside a shard_map body where
+    ``x`` is the local sequence shard, it gathers the projected K/V along
+    the sequence axis (``(B, S_local, Hkv, D) -> (B, S_total, Hkv, D)``) so
+    every local query attends to the full sequence (the DiT patch-sharding
+    layout).  Callers own positional correctness: with a gather, rope
+    positions must be the *global* ones or ``theta=None`` (DiT)."""
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.arange(s, dtype=jnp.int32)
     q, k, v = project_qkv(p, x, num_heads, num_kv_heads, head_dim, positions,
                           theta, qk_norm)
+    if kv_gather is not None:
+        k = kv_gather(k)
+        v = kv_gather(v)
     qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
     if chunk_kv is not None and not use_kernel:
         o = kref.attention_chunked(qt, kt, vt, causal=causal, window=window,

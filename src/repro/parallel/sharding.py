@@ -174,7 +174,21 @@ def batch_shardings(mesh, batch, batch_axes):
     return compat.tree.map(rule, batch)
 
 
-def microbatch_spec(data_axis: str) -> P:
+def _check_axes_bound(mesh, spec_axes) -> None:
+    """Clear ``ValueError`` for axis names a mesh does not bind — XLA's own
+    unbound-axis failure surfaces deep inside shard_map tracing and names
+    neither the axis nor the call site."""
+    if mesh is None:
+        return
+    known = set(mesh.axis_names)
+    for ax in spec_axes:
+        if ax is not None and ax not in known:
+            raise ValueError(
+                f"axis {ax!r} is not bound by the mesh (axes: "
+                f"{tuple(mesh.axis_names)})")
+
+
+def microbatch_spec(data_axis: str, *, mesh=None) -> P:
     """PartitionSpec for a serving micro-batch sharded over ``data_axis``.
 
     The diffusion sampling service's slot batch stacks K independent samples
@@ -186,8 +200,56 @@ def microbatch_spec(data_axis: str) -> P:
     dims implicitly replicated (PartitionSpec pads with None).  Callers must
     check ``K % axis_size == 0``; uneven slot batches are a config error,
     not something to pad silently.
+
+    Pass ``mesh`` to validate that ``data_axis`` is actually bound —
+    raising a clear ``ValueError`` instead of XLA's opaque unbound-axis
+    failure at trace time.
     """
+    _check_axes_bound(mesh, (data_axis,))
     return P(None, data_axis)
+
+
+def denoiser_spec(data_axis: Optional[str], denoiser=None, *, mesh=None) -> P:
+    """Block-heads spec composing the data axis with a denoiser's model axes.
+
+    The serving engine's fine program maps a ``(B, K, *sample)`` heads
+    tensor; :func:`microbatch_spec` shards K over ``data_axis``.  A
+    sharding-aware :class:`repro.core.denoiser.Denoiser` additionally
+    shards *sample* dims over its own mesh axes (``in_spec``, e.g. DiT
+    patch rows over ``model``), so the composed spec is::
+
+        P(None, data_axis, *in_spec[1:])
+          ^B    ^K          ^sample dims, shifted past the K dim
+
+    (the denoiser's ``in_spec`` is over the sample layout
+    ``(K, *sample_shape)``; its leading K entry — replicated by
+    convention — is dropped and the remaining entries shift right by one
+    to land on the heads tensor's sample dims).  Inside the shard_map
+    body the denoiser evaluates via ``shard_eval()`` — its per-shard
+    ``shard_fn`` directly, no per-eval slice/gather glue — which is how
+    the block ``time`` axis, the ``data`` axis and the ``model`` axis
+    compose into one (time, data, model) mesh
+    (:func:`repro.launch.mesh.make_srds_mesh` builds it).
+
+    With ``denoiser=None`` (or a plain adapted fn) this degrades to
+    :func:`microbatch_spec`.  Pass ``mesh`` to validate every named axis
+    is bound (clear ``ValueError`` instead of XLA's unbound-axis error).
+    """
+    from repro.core.denoiser import as_denoiser
+    den = as_denoiser(denoiser) if denoiser is not None else None
+    sample_axes = ()
+    if den is not None and den.is_model_parallel:
+        in_spec = tuple(den.in_spec)
+        if in_spec and in_spec[0] is not None:
+            raise ValueError(
+                "denoiser in_spec shards the sample-batch dim "
+                f"({in_spec[0]!r}); the serving engine owns that dim via "
+                "data_axis")
+        if mesh is not None:
+            den.check_mesh(mesh)
+        sample_axes = in_spec[1:]
+    _check_axes_bound(mesh, (data_axis,) + tuple(sample_axes))
+    return P(None, data_axis, *sample_axes)
 
 
 def cache_shardings(cfg: ArchConfig, mesh, cache, parallel: ParallelCtx, *,

@@ -94,6 +94,14 @@ Parallelism hooks (both ride :mod:`repro.compat` wrappers):
   are independent, so the fine solves split with no collectives at all
   (specs from :func:`repro.parallel.sharding.microbatch_spec`).  Both
   axes compose on a 2D mesh.
+
+Model evals go through the :class:`repro.core.denoiser.Denoiser` seam: a
+model-parallel denoiser (e.g. the patch-sharded DiT from
+:func:`repro.models.dit.make_denoiser`) contributes its own ``in_spec``
+sample axes to the fine program's specs via
+:func:`repro.parallel.sharding.denoiser_spec`, so time x data x model all
+compose on one 3D mesh (:func:`repro.launch.mesh.make_srds_mesh`) with
+zero engine-specific model code.
 """
 from __future__ import annotations
 
@@ -104,7 +112,6 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.analysis.markers import hot_loop
@@ -113,10 +120,11 @@ from repro.core.engine import (IterationCost, coarse_init_sweep,
                                prefix_frontier, resolve_blocks,
                                resolve_fused, suffix_refinement,
                                truncated_evals)
+from repro.core.denoiser import as_denoiser
 from repro.core.schedules import DiffusionSchedule, make_schedule
 from repro.core.solvers import ModelFn, SolverConfig, solve, solver_names
 from repro.core.window import FixedBudget, resolve_policy
-from repro.parallel.sharding import microbatch_spec
+from repro.parallel.sharding import denoiser_spec, microbatch_spec
 
 __all__ = ["SampleRequest", "SampleResponse", "CompletionRecord",
            "DiffusionSamplingEngine", "IterationEMA"]
@@ -543,6 +551,21 @@ class DiffusionSamplingEngine:
                  use_fused: Optional[bool] = None, ema_alpha: float = 0.3,
                  window=None):
         self.model_fn = model_fn
+        # every model eval goes through the sharding-aware Denoiser seam;
+        # plain callables adapt for free (replicated specs).  A
+        # model-parallel denoiser is bound to the engine mesh so the coarse
+        # sweep / corrector (outside any shard_map) self-wrap its shard_fn.
+        den = as_denoiser(model_fn)
+        if den.is_model_parallel:
+            if mesh is not None:
+                den.check_mesh(mesh)
+                if den.mesh is None:
+                    den = den.bind(mesh)
+            elif den.mesh is None:
+                raise ValueError(
+                    "model-parallel denoiser needs a mesh: pass mesh= to "
+                    "the engine or bind one with Denoiser.bind(mesh)")
+        self.denoiser = den
         self.sample_shape = tuple(sample_shape)
         self.solver = solver
         self.schedule = schedule
@@ -577,6 +600,7 @@ class DiffusionSamplingEngine:
         if data_axis is not None:
             if mesh is None:
                 raise ValueError("data_axis requires a mesh")
+            microbatch_spec(data_axis, mesh=mesh)   # clear unbound-axis error
             d = mesh.shape[data_axis]
             if batch_size % d != 0:
                 raise ValueError(
@@ -894,16 +918,24 @@ class DiffusionSamplingEngine:
                                   t_model=sched.t_model.astype(self.dtype),
                                   kind=sched.kind)
         starts = jnp.arange(B, dtype=jnp.int32) * S
-        model_fn, norm = self.model_fn, self.norm
+        den, norm = self.denoiser, self.norm
         use_fused = self.use_fused
 
         def G(x, i0):
-            return solve(model_fn, sched, solver, x, i0, 1, S)
+            # coarse sweep + corrector run outside any shard_map: the
+            # seam's standalone call (a model-parallel denoiser self-wraps
+            # its shard_fn over the bound mesh; a plain one is just fn)
+            return solve(den, sched, solver, x, i0, 1, S)
 
-        def F(x, i0):
-            return solve(model_fn, sched, solver, x, i0, S, 1)
+        def fine_F(eval_fn):
+            # fine-solve factory: _make_fine picks the seam composition
+            # (standalone den for the vmap path, den.shard_eval() inside
+            # the shard_map whose specs come from denoiser_spec)
+            def F(x, i0):
+                return solve(eval_fn, sched, solver, x, i0, S, 1)
+            return F
 
-        fine = self._make_fine(F, starts, B)
+        fine = self._make_fine(fine_F, starts, B)
 
         def init_body(x_init, x_tail, prev_coarse, new_mask):
             # coarse initialization sweep for the whole slot batch, with
@@ -994,18 +1026,28 @@ class DiffusionSamplingEngine:
         self._programs[key] = (init_fn, step_for, B, S)
         return self._programs[key]
 
-    def _make_fine(self, F, starts, B: int):
+    def _make_fine(self, fine_F, starts, B: int):
         """The fine-solve hook: vmapped in one program, or shard_mapped over
-        the block axis (``axis``), the slot batch (``data_axis``), or both.
+        the block axis (``axis``), the slot batch (``data_axis``), the
+        denoiser's own model axes, or any combination.
 
         Block parallelism slices the local blocks by ``axis_index`` and
         re-joins them with one tiled ``all_gather`` per iteration (the
         :func:`repro.core.pipelined.srds_sharded_local` layout); slot-batch
         parallelism needs no collectives at all — lanes are independent, so
-        ``shard_map`` just splits the K axis with
-        :func:`repro.parallel.sharding.microbatch_spec`.
+        ``shard_map`` just splits the K axis.  A model-parallel
+        :class:`~repro.core.denoiser.Denoiser` contributes its ``in_spec``
+        sample axes to the same specs via
+        :func:`repro.parallel.sharding.denoiser_spec`, and the body
+        evaluates its ``shard_eval()`` directly — no per-eval collectives
+        beyond the backbone's own.  That is the (time, data, model)
+        composition: one shard_map, zero driver-specific model code.
         """
-        if self.mesh is None or (self.axis is None and self.data_axis is None):
+        den = self.denoiser
+        if self.mesh is None or (self.axis is None and self.data_axis is None
+                                 and not den.is_model_parallel):
+            F = fine_F(den)   # standalone seam: self-wraps if model-parallel
+
             def fine(x_heads):
                 # truncated step programs pass the active suffix; recover
                 # the static offset from the stack length
@@ -1013,8 +1055,8 @@ class DiffusionSamplingEngine:
                 return jax.vmap(F)(x_heads, starts[f:] if f else starts)
             return fine
 
-        heads_spec = microbatch_spec(self.data_axis) \
-            if self.data_axis is not None else P()
+        heads_spec = denoiser_spec(self.data_axis, den, mesh=self.mesh)
+        F = fine_F(den.shard_eval())   # specs already shard per in_spec
 
         if self.axis is not None:
             axis = self.axis

@@ -1,0 +1,15 @@
+"""Seeded RL008 violations: bare model evals in driver-shaped code."""
+import jax
+
+
+def driver_step(model_fn, x, t):
+    eps = model_fn(x, t)                      # line 6: direct eval
+    return x - eps
+
+
+class Engine:
+    def __init__(self, model_fn):
+        self.model_fn = model_fn
+
+    def refine(self, x, t):
+        return jax.vmap(lambda xi: self.model_fn(xi, t))(x)   # line 15

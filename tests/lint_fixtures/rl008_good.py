@@ -1,0 +1,18 @@
+"""RL008-clean driver code: every eval goes through the Denoiser seam."""
+from repro.core.denoiser import as_denoiser
+
+
+def driver_step(model_fn, x, t):
+    den = as_denoiser(model_fn)
+    eps = den(x, t)                        # standalone seam call
+    return x - eps
+
+
+def sharded_body(model_fn, x, t):
+    eval_fn = as_denoiser(model_fn).inner_eval()
+    return eval_fn(x, t)                   # seam glue inside a shard_map
+
+
+def non_eval_shapes(model_fn, x, t, extra):
+    model_fn(x, t, extra)                  # 3 args: not an (x, t) eval
+    return as_denoiser(model_fn)

@@ -1,0 +1,5 @@
+"""A deliberate bare eval, recorded (not hidden) via inline suppression."""
+
+
+def debug_probe(model_fn, x, t):
+    return model_fn(x, t)  # reprolint: disable=RL008

@@ -1,0 +1,124 @@
+"""Denoiser seam unit tests: adapter semantics, mesh-requirement errors,
+and the spec composition in parallel.sharding (single-device — the
+multi-device numerics live in test_distributed_srds.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import make_mesh
+from repro.core.denoiser import Denoiser, as_denoiser
+from repro.parallel.sharding import denoiser_spec, microbatch_spec
+
+
+def _fn(x, t):
+    return x * t
+
+
+def _shard_fn(x, t):
+    return x * t
+
+
+MESH3 = lambda: make_mesh((1, 1, 1), ("time", "data", "model"))
+
+
+# ------------------------------------------------------------ adapter
+
+def test_as_denoiser_adapts_plain_fn_and_is_identity_on_denoisers():
+    den = as_denoiser(_fn)
+    assert isinstance(den, Denoiser)
+    assert not den.is_model_parallel
+    assert as_denoiser(den) is den
+    x = jnp.arange(4.0)
+    assert jnp.array_equal(den(x, 2.0), _fn(x, 2.0))
+    # plain denoisers short-circuit every composition mode to fn itself
+    assert den.inner_eval() is _fn
+    assert den.shard_eval() is _fn
+
+
+def test_denoiser_with_mesh_axes_requires_shard_fn():
+    with pytest.raises(ValueError, match="needs a shard_fn"):
+        Denoiser(fn=_fn, mesh_axes={"model": 2})
+
+
+def test_standalone_model_parallel_call_requires_bound_mesh():
+    den = Denoiser(fn=_fn, shard_fn=_shard_fn, in_spec=P(None, "model"),
+                   out_spec=P(None, "model"), mesh_axes={"model": 1})
+    with pytest.raises(ValueError, match="bound"):
+        den(jnp.ones((2, 2)), 0.5)
+
+
+# ------------------------------------------------------- mesh validation
+
+def test_check_mesh_names_the_missing_axis():
+    den = Denoiser(fn=_fn, shard_fn=_shard_fn, in_spec=P(None, "model"),
+                   out_spec=P(None, "model"), mesh_axes={"model": 1})
+    mesh = make_mesh((1,), ("time",))
+    with pytest.raises(ValueError, match=r"mesh axis 'model'.*\('time',\)"):
+        den.check_mesh(mesh)
+
+
+def test_check_mesh_enforces_min_size():
+    den = Denoiser(fn=_fn, shard_fn=_shard_fn, in_spec=P(None, "model"),
+                   out_spec=P(None, "model"), mesh_axes={"model": 2})
+    with pytest.raises(ValueError, match="size >= 2"):
+        den.check_mesh(MESH3())
+    with pytest.raises(ValueError, match="size >= 2"):
+        den.bind(MESH3())       # binding validates too
+
+
+# ------------------------------------------- spec composition + validation
+
+def test_microbatch_spec_validates_axis_is_bound():
+    assert microbatch_spec("data", mesh=MESH3()) == P(None, "data")
+    with pytest.raises(ValueError, match=r"'dp' is not bound.*'time', "
+                                         r"'data', 'model'"):
+        microbatch_spec("dp", mesh=MESH3())
+
+
+def test_denoiser_spec_composes_data_and_model_axes():
+    den = Denoiser(fn=_fn, shard_fn=_shard_fn, in_spec=P(None, "model"),
+                   out_spec=P(None, "model"), mesh_axes={"model": 1})
+    # sample layout (K, H, W, C): in_spec's K entry drops, H shifts onto
+    # the heads tensor's dim 2 -> (B, K, H, ...) = (None, data, model)
+    assert denoiser_spec("data", den, mesh=MESH3()) == P(None, "data",
+                                                         "model")
+    # degraded forms: plain fn / no denoiser == microbatch_spec
+    assert denoiser_spec("data", _fn) == P(None, "data")
+    assert denoiser_spec("data") == P(None, "data")
+    assert denoiser_spec(None, den) == P(None, None, "model")
+
+
+def test_denoiser_spec_rejects_sample_batch_sharding_and_unbound_axes():
+    den_bad = Denoiser(fn=_fn, shard_fn=_shard_fn, in_spec=P("model",),
+                       out_spec=P("model",), mesh_axes={"model": 1})
+    with pytest.raises(ValueError, match="owns that dim via data_axis"):
+        denoiser_spec("data", den_bad)
+    den = Denoiser(fn=_fn, shard_fn=_shard_fn, in_spec=P(None, "mp"),
+                   out_spec=P(None, "mp"), mesh_axes={"mp": 1})
+    with pytest.raises(ValueError, match="mesh axis 'mp'"):
+        denoiser_spec("data", den, mesh=MESH3())
+
+
+# -------------------------------------------------- engine entry validation
+
+def test_serving_engine_rejects_unbound_data_axis_and_meshless_mp():
+    from repro.serve.diffusion import DiffusionSamplingEngine
+    with pytest.raises(ValueError, match="'dp' is not bound"):
+        DiffusionSamplingEngine(_fn, (4,), num_steps=8, batch_size=1,
+                                mesh=MESH3(), data_axis="dp")
+    den = Denoiser(fn=_fn, shard_fn=_shard_fn, in_spec=P(None, "model"),
+                   out_spec=P(None, "model"), mesh_axes={"model": 1})
+    with pytest.raises(ValueError, match="needs a mesh"):
+        DiffusionSamplingEngine(den, (2, 2), num_steps=8, batch_size=1)
+
+
+def test_sharded_driver_rejects_mesh_missing_model_axis():
+    from repro.core import SRDSConfig, SolverConfig, make_schedule
+    from repro.core.pipelined import make_sharded_sampler
+    den = Denoiser(fn=_fn, shard_fn=_shard_fn, in_spec=P(None, "model"),
+                   out_spec=P(None, "model"), mesh_axes={"model": 1})
+    sched = make_schedule("ddpm_linear", 8)
+    with pytest.raises(ValueError, match="mesh axis 'model'"):
+        make_sharded_sampler(make_mesh((1,), ("time",)), "time", den, sched,
+                             SolverConfig("ddim"), SRDSConfig(num_blocks=4))

@@ -158,6 +158,43 @@ def test_parareal_residual_kernel_interpret_entry_point():
         float(jnp.sum(jnp.abs((y + c - p) - o))), rtol=1e-5)
 
 
+# B, Hq, Hkv, Sq, Sk, D, causal — the DiT patch-sharding shapes: small
+# bidirectional sequences (encoder-style), GQA, local-query-vs-full-KV
+# (Sq < Sk, what the model-parallel K/V all-gather produces), and
+# non-multiple-of-128 tiles
+FLASH_CASES = [
+    (2, 2, 2, 16, 16, 16, False),     # DiT-sized bidirectional block
+    (1, 4, 2, 8, 32, 16, False),      # patch-sharded: local q, gathered kv
+    (2, 4, 4, 64, 64, 32, True),      # causal, tile-exact
+    (1, 8, 2, 48, 48, 24, True),      # GQA 4x + ragged tiles
+    (1, 2, 2, 40, 104, 32, True),     # Sq < Sk, right-aligned causal mask
+]
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize(
+    "case", FLASH_CASES,
+    ids=lambda c: f"B{c[0]}H{c[1]}-{c[2]}S{c[3]}x{c[4]}D{c[5]}c{int(c[6])}")
+def test_flash_attention_interpret_parity(case, dtype):
+    """Flash kernel (interpret mode on CPU) vs the jnp oracle — the parity
+    matrix behind the sharded DiT denoiser's attention path, which feeds
+    local queries and all-gathered K/V through ``ops.attention`` with
+    ``use_kernel=True``.  Runs everywhere (no hypothesis dependency)."""
+    b, hq, hkv, sq, sk, d, causal = case
+    dt = jnp.dtype(dtype)
+    q = jax.random.normal(KEYS[0], (b, hq, sq, d), dt)
+    k = jax.random.normal(KEYS[1], (b, hkv, sk, d), dt)
+    v = jax.random.normal(KEYS[2], (b, hkv, sk, d), dt)
+    out = ops.attention(q, k, v, causal=causal, block_q=32, block_k=32,
+                        use_kernel=True)
+    exp = ref.attention(q, k, v, causal=causal)
+    assert out.shape == exp.shape and out.dtype == dt
+    tol = 2e-2 if dtype == "bfloat16" else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
 def test_fused_default_resolution():
     """fused_default is on only where compiled kernels exist (TPU) and
     never under FORCE_REF; the tri-state resolver honors explicit bools."""

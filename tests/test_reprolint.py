@@ -129,6 +129,38 @@ def test_rl006_clean_on_marked_twins_and_fake_mesh():
     assert lint_fixture("test_rl006_good.py").findings == []
 
 
+# ---------------------------------------------------------------- RL008
+
+def test_rl008_fires_on_bare_model_evals_in_driver_shaped_code():
+    report = lint_fixture("rl008_bad.py")
+    assert codes_and_lines(report) == [("RL008", 6), ("RL008", 15)]
+    for f in report.findings:
+        assert f.rule == "model-eval-seam"
+        assert "denoiser" in f.message
+
+
+def test_rl008_clean_on_seam_consumers_and_non_eval_shapes():
+    assert lint_fixture("rl008_good.py").findings == []
+
+
+def test_rl008_suppressions_are_recorded_not_discarded():
+    report = lint_fixture("rl008_suppressed.py")
+    assert report.findings == []
+    assert codes_and_lines(
+        LintReport(report.suppressed, [], 1, [])) == [("RL008", 5)]
+
+
+def test_rl008_scope_covers_drivers_and_serve_only():
+    # models own their forward; tests/benchmarks probe whatever they like —
+    # only drivers and the serving engine must go through the seam
+    from repro.analysis.rules import _rl008_in_scope
+    assert _rl008_in_scope("src/repro/core/parareal.py")
+    assert _rl008_in_scope("src/repro/serve/diffusion.py")
+    assert _rl008_in_scope("tests/lint_fixtures/rl008_bad.py")
+    assert not _rl008_in_scope("src/repro/models/dit.py")
+    assert not _rl008_in_scope("benchmarks/common.py")
+
+
 # ---------------------------------------------------------------- RL007
 
 def test_rl007_pure_pattern_core():
@@ -204,7 +236,7 @@ def test_hot_loop_marker_is_a_noop():
 
 def test_rule_registry_is_complete_and_ordered():
     codes = [c for c, _, _ in rule_table()]
-    assert codes == [f"RL00{i}" for i in range(1, 8)]
+    assert codes == [f"RL00{i}" for i in range(1, 9)]
 
 
 def test_analysis_package_is_stdlib_only():
@@ -240,7 +272,7 @@ def test_cli_json_output_exit_code_and_artifact(tmp_path, capsys):
     assert payload["files_scanned"] == 1
     assert {f["code"] for f in payload["findings"]} == {"RL001"}
     assert {r["code"] for r in payload["rules"]} == \
-        {f"RL00{i}" for i in range(1, 8)}
+        {f"RL00{i}" for i in range(1, 9)}
     assert json.loads(out_file.read_text())["findings"] == payload["findings"]
 
 
