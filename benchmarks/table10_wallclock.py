@@ -1,0 +1,217 @@
+"""Table 10w: wall-clock SLO scheduling — the real-time twin of
+``table10_slo.py``, replayed through :class:`repro.serve.AsyncServeLoop`
+on a :class:`~repro.serve.clock.MonotonicClock` engine.
+
+Same question (does deadline-aware admission beat FIFO's head-of-line
+blocking on tail latency?), different ruler: here every latency is real
+seconds on a single node, with the pipelined dispatch/resolve loop
+overlapping the host-side residual fetch with the next refinement's
+device compute.  The shape is a single-node latency sweep:
+
+* a **calibration** pass replays the pinned herd once under FIFO to
+  compile every step program the measured runs will hit and to measure
+  ``sec_per_eval`` (wall seconds per physical model eval) — the cost
+  model CostAware prices admission with must speak wall time;
+* a **pinned herd** (every request at t=0, two tight-tolerance heavies
+  submitted ahead of the loose-tolerance majority) — the structural
+  head-of-line worst case.  FIFO buries the herd behind the heavies;
+  EDF/CostAware serve the tight-SLO majority first.  This is where the
+  ordering invariant is gated;
+* a **Poisson load sweep** at fractions of the calibrated service
+  capacity — the latency-vs-load curve a single-node deployment would
+  publish.
+
+Wall-clock numbers are noisy where virtual ones were bit-exact, so the
+gate is deliberately shaped like the virtual leg's but tolerant: it
+asserts *ordering* invariants (EDF and CostAware p95 below FIFO p95 on
+the pinned herd, SLO attainment no worse) — never absolute seconds.
+
+Usage (what the CI wall-clock bench leg runs):
+
+    PYTHONPATH=src python -m benchmarks.table10_wallclock --out BENCH_serve.json
+
+The artifact carries a ``table10_wallclock`` key next to the virtual
+tables' keys; ``docs/benchmarks.md`` documents the row schema.
+"""
+import argparse
+import json
+import math
+import os
+import platform
+
+import jax
+import numpy as np
+
+from repro.core import SolverConfig
+from repro.serve import (EDF, FIFO, AsyncServeLoop, CostAware,
+                         DiffusionSamplingEngine, MonotonicClock, SampleRequest,
+                         Tier, poisson_trace)
+
+from .common import emit, toy_denoiser
+
+N = 64                    # grid -> B=8 blocks of S=8 fine steps
+BATCH = 2
+# Heavy enough on heavies that FIFO's head-of-line blocking is a
+# structural multiple of the light drain time (~24 heavy refinement waves
+# before the first light vs ~18 light waves total), not a wall-noise-sized
+# perturbation; the gated percentile is computed over the *light tier*
+# (see below) so the mix ratio never moves the percentile onto a heavy.
+N_HEAVY = 6
+N_LIGHT = 18
+LIGHT = dict(tol=1e-2, iters_hint=2)
+HEAVY = dict(tol=1e-6, iters_hint=8)
+
+
+def herd_trace(light_slo_ms=None, heavy_slo_ms=None):
+    """The pinned herd: everyone arrives at t=0, heavies submitted first
+    (deterministic seeds), so FIFO's admission order is the head-of-line
+    worst case while EDF's deadline order is shortest-job-first."""
+    reqs = [SampleRequest(seed=1000 + i, arrival_time=0.0,
+                          slo_ms=heavy_slo_ms, **HEAVY)
+            for i in range(N_HEAVY)]
+    reqs += [SampleRequest(seed=i, arrival_time=0.0,
+                           slo_ms=light_slo_ms, **LIGHT)
+             for i in range(N_LIGHT)]
+    return reqs
+
+
+def main(loads=(0.6, 1.5, 3.0), sweep_requests=36):
+    model_fn = toy_denoiser(dim=16)
+    eng = DiffusionSamplingEngine(model_fn, (16,), SolverConfig("ddim"),
+                                  num_steps=N, batch_size=BATCH,
+                                  clock=MonotonicClock())
+    rows = []
+
+    # ---- calibration: a cold pass compiles everything the measured runs
+    # will execute (same seeds/tols -> same step programs), then a second,
+    # warm pass measures wall-clock eval throughput without the one-time
+    # compile cost polluting it; SLO values play no role under FIFO so
+    # placeholders are fine here
+    cold = AsyncServeLoop(eng, FIFO()).run(herd_trace())
+    assert len(cold.responses) == N_HEAVY + N_LIGHT
+    warm = AsyncServeLoop(eng, FIFO()).run(herd_trace())
+    assert len(warm.responses) == N_HEAVY + N_LIGHT
+    sec_per_eval = warm.makespan / max(warm.physical_evals, 1)
+    eng.sec_per_eval = sec_per_eval          # wall-calibrated cost model
+    per_req_s = warm.makespan / len(warm.responses)
+    capacity_rps = 1.0 / per_req_s
+    rows.append(dict(trace="calibration", policy="fifo",
+                     sec_per_eval=sec_per_eval,
+                     capacity_rps=capacity_rps,
+                     makespan_s=warm.makespan,
+                     physical_evals=warm.physical_evals))
+    emit("table10w/calibration", sec_per_eval * 1e6,
+         f"capacity={capacity_rps:.0f}rps;makespan={warm.makespan:.3f}s;"
+         f"phys_evals={warm.physical_evals}")
+
+    # SLOs scaled off the calibrated warm herd drain time: the light SLO
+    # sits inside the herd's makespan (so admission order decides who
+    # makes it), the heavy SLO comfortably outside it
+    light_slo_ms = 0.7 * warm.makespan * 1e3
+    heavy_slo_ms = 3.0 * warm.makespan * 1e3
+
+    def measure(tname, trace, policy):
+        rep = AsyncServeLoop(eng, policy).run(trace)
+        row = dict(trace=tname, policy=policy.name,
+                   completed=len(rep.responses),
+                   rejected=len(rep.rejected),
+                   preempted=len(rep.preempted),
+                   latency_p50_ms=rep.latency_p50 * 1e3,
+                   latency_p95_ms=rep.latency_p95 * 1e3,
+                   latency_p99_ms=rep.latency_p99 * 1e3,
+                   slo_attainment=rep.slo_attainment,
+                   goodput_rps=rep.goodput_rps,
+                   makespan_s=rep.makespan,
+                   wall_clock=True)
+        rows.append(row)
+        emit(f"table10w/{tname}/{policy.name}", rep.latency_p95 * 1e3,
+             f"p50={row['latency_p50_ms']:.1f}ms;"
+             f"p95={row['latency_p95_ms']:.1f}ms;"
+             f"slo_att={rep.slo_attainment:.2f};"
+             f"goodput={rep.goodput_rps:.1f}rps;"
+             f"rejected={len(rep.rejected)}")
+        return rep
+
+    # ---- the pinned herd: the gated leg ----
+    # The gated percentile is the *light tier's* p95 — the tail of the
+    # latency-sensitive majority, which is exactly what head-of-line
+    # blocking punishes.  rids are assigned in submission order and the
+    # heavies are submitted first, so the N_HEAVY smallest rids of a herd
+    # run are the heavy requests.
+    herd = herd_trace(light_slo_ms, heavy_slo_ms)
+    p95, att, gput = {}, {}, {}
+    for policy in (FIFO(), EDF(), CostAware(slack=1.0)):
+        rep = measure("herd", herd, policy)
+        all_rids = sorted(set(rep.responses) | set(rep.rejected)
+                          | set(rep.preempted))
+        heavy_rids = set(all_rids[:N_HEAVY])
+        lights = [r.latency for rid, r in rep.responses.items()
+                  if rid not in heavy_rids]
+        light_p95 = float(np.percentile(lights, 95)) if lights else math.inf
+        rows[-1]["light_p95_ms"] = light_p95 * 1e3
+        p95[policy.name] = light_p95
+        att[policy.name] = rep.slo_attainment
+        gput[policy.name] = rep.goodput_rps
+
+    # ---- overlap A/B: the same herd with the pipeline disabled
+    # (max_inflight=1 == the synchronous stepping discipline); reported,
+    # not gated — wall noise on a shared CI core can swamp the overlap win
+    sync_rep = AsyncServeLoop(eng, FIFO(), max_inflight=1).run(herd)
+    rows.append(dict(trace="herd_overlap_ab", policy="fifo",
+                     makespan_async_s=rows[1]["makespan_s"],
+                     makespan_sync_s=sync_rep.makespan,
+                     overlap_speedup=sync_rep.makespan
+                     / max(rows[1]["makespan_s"], 1e-12)))
+    emit("table10w/herd_overlap_ab", sync_rep.makespan * 1e6,
+         f"sync={sync_rep.makespan:.3f}s;async={rows[1]['makespan_s']:.3f}s;"
+         f"ratio={rows[-1]['overlap_speedup']:.2f}x")
+
+    # ---- Poisson latency-vs-load sweep ----
+    tiers = [Tier(slo_ms=light_slo_ms, weight=0.96, **LIGHT),
+             Tier(slo_ms=heavy_slo_ms, weight=0.04, **HEAVY)]
+    for load in loads:
+        trace = poisson_trace(sweep_requests, load * capacity_rps, tiers,
+                              seed=0)
+        for policy in (FIFO(), EDF(), CostAware(slack=1.0)):
+            measure(f"poisson_load{load:g}", trace, policy)
+
+    # the wall-clock gate: ordering/attainment invariants on the pinned
+    # herd, where head-of-line blocking is structural — no absolute
+    # seconds anywhere
+    assert p95["edf"] < p95["fifo"], \
+        f"EDF light-tier p95 ({p95['edf']:.3f}s) must beat FIFO" \
+        f" ({p95['fifo']:.3f}s) on the pinned wall-clock herd"
+    assert p95["cost"] < p95["fifo"], \
+        f"CostAware light-tier p95 ({p95['cost']:.3f}s) must beat FIFO" \
+        f" ({p95['fifo']:.3f}s) on the pinned wall-clock herd"
+    band = 0.05               # generous: wall attainment jitters per-run
+    assert att["edf"] >= att["fifo"] - band, \
+        f"EDF attainment {att['edf']:.2f} fell below FIFO {att['fifo']:.2f}"
+    # CostAware trades attainment-over-submitted for goodput: it sheds
+    # predicted-hopeless requests, so its invariant is SLO-met throughput
+    assert gput["cost"] >= 0.9 * gput["fifo"], \
+        f"CostAware goodput {gput['cost']:.1f}rps fell >10% below FIFO" \
+        f" {gput['fifo']:.1f}rps"
+    return rows
+
+
+def write_artifact(rows, out):
+    """Append the wallclock table to ``out`` (merging with an existing
+    BENCH_serve.json from the virtual legs if one is present)."""
+    payload = {"meta": {"jax_version": jax.__version__,
+                        "backend": jax.default_backend(),
+                        "python": platform.python_version()}}
+    if os.path.exists(out):
+        with open(out) as f:
+            payload.update(json.load(f))
+    payload["table10_wallclock"] = rows
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    write_artifact(main(), args.out)

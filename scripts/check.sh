@@ -20,17 +20,27 @@ for a in "$@"; do
 done
 
 # Static-analysis gate: reprolint (python -m repro.analysis) enforces the
-# standing policies as AST rules RL001-RL007 — compat drift, engine-seam
+# standing policies as AST rules RL001-RL008 — compat drift, engine-seam
 # ownership, host-sync discipline, donation safety, fused-path gating,
-# test-tier markers, tracked artifacts.  It replaced the old grep lints
-# (which missed aliased imports like `from jax import tree_map`).  A
-# missing or crashing linter is a loud failure, never a silent pass:
-# the module is stdlib-only, so it must import even without JAX.
+# test-tier markers, tracked artifacts, model-eval seam.  It replaced the
+# old grep lints (which missed aliased imports like `from jax import
+# tree_map`).  A missing or crashing linter is a loud failure, never a
+# silent pass: the module is stdlib-only, so it must import even without
+# JAX.
 if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
      python -m repro.analysis src tests benchmarks examples scripts; then
   echo "reprolint FAILED (or could not run) — see findings above." >&2
   echo "Run 'python -m repro.analysis --list-rules' for the rule table;" >&2
   echo "suppress a deliberate exception with '# reprolint: disable=CODE'." >&2
+  exit 1
+fi
+
+# Docs-vs-code drift gate: the README/docs rule table must match the
+# linter's own registry, quoted commands/modules must exist, and doc
+# pointers must resolve.  Stdlib-only too, so the dependency-free CI
+# lint leg can run it.
+if ! python scripts/check_docs.py; then
+  echo "check_docs FAILED — docs drifted from the code; see above." >&2
   exit 1
 fi
 

@@ -1,0 +1,177 @@
+#!/usr/bin/env python
+"""Docs-vs-code drift gate (stdlib-only, like reprolint — the CI lint
+leg runs it with no JAX installed).
+
+Documentation rots in ways tests never notice: a rule table that stopped
+matching the linter's registry, a "rules RL001-RL007" range written when
+RL007 was the last rule, a quoted command whose module was renamed, a
+pointer to a file that moved.  This gate re-derives each of those claims
+from the code and fails loudly on drift:
+
+1. **Rule table**: the ``| RLxxx | `name` | ...`` table in README.md
+   must carry exactly ``repro.analysis``'s registered rules — same
+   codes, same names (the same data ``python -m repro.analysis
+   --list-rules`` prints).
+2. **Rule references**: every ``RLxxx`` code mentioned anywhere in the
+   checked docs must exist in the registry, and every ``RL001-RLxxx``
+   range must end at the registry's last rule (stale ranges are how
+   "RL001-RL007" survives the introduction of RL008).
+3. **Quoted commands**: every ``python -m <module>`` in the docs must
+   resolve to a real module file (under ``src/`` or the repo root).
+4. **Quoted paths**: every backticked repo path and relative markdown
+   link must exist.
+
+Checked docs: README.md, ROADMAP.md, docs/*.md.
+
+Usage:
+    python scripts/check_docs.py [--root REPO_ROOT]
+
+Exit 0 clean, 1 drift found, 2 could not run.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+_RULE_ROW = re.compile(r"^\|\s*(RL\d{3})\s*\|\s*`([^`]+)`\s*\|")
+_RULE_REF = re.compile(r"\bRL\d{3}\b")
+_RULE_RANGE = re.compile(r"\b(RL\d{3})\s*[-–]\s*(RL\d{3})\b")
+_PY_DASH_M = re.compile(r"python(?:3)?\s+-m\s+([A-Za-z0-9_.]+)")
+_BACKTICK = re.compile(r"`([^`\n]+)`")
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# backticked tokens that look like repo paths: contain a slash, no
+# placeholders/globs, end in a source-ish extension or a trailing slash
+_PATHLIKE = re.compile(r"^[A-Za-z0-9_.][A-Za-z0-9_./-]*"
+                       r"(?:\.(?:py|sh|md|json|yml|yaml|toml|txt)|/)$")
+
+
+def doc_files(root: Path):
+    docs = [root / "README.md", root / "ROADMAP.md"]
+    docs += sorted((root / "docs").glob("*.md"))
+    return [d for d in docs if d.exists()]
+
+
+def module_exists(root: Path, module: str) -> bool:
+    rel = Path(*module.split("."))
+    for base in (root / "src", root):
+        if (base / rel).with_suffix(".py").exists() \
+                or (base / rel / "__init__.py").exists():
+            return True
+    return False
+
+
+def check_rule_table(root: Path, registry: dict) -> list:
+    """README's rule table == the registry (codes and names)."""
+    failures = []
+    readme = root / "README.md"
+    table = {}
+    for line in readme.read_text(encoding="utf-8").splitlines():
+        m = _RULE_ROW.match(line)
+        if m:
+            table[m.group(1)] = m.group(2)
+    if not table:
+        return [f"{readme.name}: rule table (| RLxxx | `name` | ...) "
+                f"not found — the registry has {len(registry)} rules to "
+                f"document"]
+    for code, name in sorted(registry.items()):
+        if code not in table:
+            failures.append(f"{readme.name}: rule table is missing {code} "
+                            f"(`{name}`) — run `python -m repro.analysis "
+                            f"--list-rules` and update it")
+        elif table[code] != name:
+            failures.append(f"{readme.name}: rule table names {code} "
+                            f"`{table[code]}` but the registry says "
+                            f"`{name}`")
+    for code in sorted(set(table) - set(registry)):
+        failures.append(f"{readme.name}: rule table documents {code}, "
+                        f"which is not in the registry")
+    return failures
+
+
+def check_rule_refs(doc: Path, text: str, registry: dict) -> list:
+    failures = []
+    last = max(registry) if registry else None
+    for code in sorted(set(_RULE_REF.findall(text))):
+        if code not in registry:
+            failures.append(f"{doc.name}: references {code}, which is not "
+                            f"a registered reprolint rule")
+    for lo, hi in set(_RULE_RANGE.findall(text)):
+        if hi in registry and hi != last:
+            failures.append(f"{doc.name}: stale rule range {lo}-{hi} — the "
+                            f"registry now ends at {last}")
+    return failures
+
+
+def check_commands(root: Path, doc: Path, text: str) -> list:
+    failures = []
+    for module in sorted(set(_PY_DASH_M.findall(text))):
+        top = module.split(".")[0]
+        if not ((root / "src" / top).is_dir() or (root / top).is_dir()):
+            continue          # third-party module (python -m pytest, ...)
+        if not module_exists(root, module):
+            failures.append(f"{doc.name}: quotes `python -m {module}` but "
+                            f"no such module exists under src/ or the "
+                            f"repo root")
+    return failures
+
+
+def check_paths(root: Path, doc: Path, text: str) -> list:
+    failures = []
+    candidates = set()
+    for tok in _BACKTICK.findall(text):
+        tok = tok.strip().split()[0] if tok.strip() else ""
+        if "/" in tok and ".." not in tok and _PATHLIKE.match(tok):
+            candidates.add(tok)
+    for target in _MD_LINK.findall(text):
+        if target.startswith(("http://", "https://", "#", "mailto:")) \
+                or ".." in target:
+            continue
+        candidates.add(target.split("#")[0])
+    for rel in sorted(c for c in candidates if c):
+        # resolve relative to the doc, the repo root, and the package
+        # root (docs shorthand like `serve/diffusion.py`)
+        if not any(base / rel for base in
+                   (doc.parent, root, root / "src" / "repro")
+                   if (base / rel).exists()):
+            failures.append(f"{doc.name}: points at `{rel}`, which does "
+                            f"not exist")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: this script's parent's parent)")
+    args = ap.parse_args(argv)
+    root = Path(args.root) if args.root else Path(__file__).resolve().parents[1]
+
+    sys.path.insert(0, str(root / "src"))
+    try:
+        from repro.analysis.core import rule_table
+    except Exception as exc:     # pragma: no cover - broken tree
+        print(f"check_docs: cannot import repro.analysis ({exc})",
+              file=sys.stderr)
+        return 2
+    registry = {code: name for code, name, _ in rule_table()}
+
+    failures = check_rule_table(root, registry)
+    for doc in doc_files(root):
+        text = doc.read_text(encoding="utf-8")
+        failures += check_rule_refs(doc, text, registry)
+        failures += check_commands(root, doc, text)
+        failures += check_paths(root, doc, text)
+
+    if failures:
+        print("docs-vs-code drift gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    ndocs = len(doc_files(root))
+    print(f"check_docs OK ({ndocs} docs against {len(registry)} rules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

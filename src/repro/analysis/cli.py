@@ -17,10 +17,11 @@ from repro.analysis.core import DEFAULT_PATHS, lint_paths, rule_table
 
 
 def _build_parser() -> argparse.ArgumentParser:
+    last = rule_table()[-1][0]
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="reprolint: AST invariant checker for the SRDS stack "
-                    "(rules RL001-RL007; see README 'Static analysis').")
+        description=f"reprolint: AST invariant checker for the SRDS stack "
+                    f"(rules RL001-{last}; see README 'Static analysis').")
     p.add_argument("paths", nargs="*", default=None,
                    help=f"files/directories to lint "
                         f"(default: {' '.join(DEFAULT_PATHS)})")

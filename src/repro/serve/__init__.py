@@ -1,3 +1,5 @@
+from .async_loop import AsyncServeLoop
+from .clock import Clock, MonotonicClock, VirtualClock
 from .diffusion import (CompletionRecord, DiffusionSamplingEngine,
                         IterationEMA, SampleRequest, SampleResponse)
 from .engine import Request, ServingEngine, make_decode_fn, make_prefill_fn

@@ -44,17 +44,27 @@ buffers — ``x_tail``/``prev_coarse`` in both the init-sweep and the step
 programs — are donated to XLA so trajectory-sized allocations are reused
 in place.
 
-Arrival-aware serving rides a deterministic **virtual clock**: every
-engine step advances ``clock`` by its *physical* model-eval cost times
-``sec_per_eval`` (the deployment's calibrated per-eval wall time), so
-latency, SLO-attainment and goodput numbers are bit-reproducible
-discrete-event quantities, not wall-clock noise.  The admission *policy*
-(who gets a freed slot, who is rejected or preempted) lives in
+Arrival-aware serving rides a pluggable **clock**
+(:mod:`repro.serve.clock`).  The default :class:`~repro.serve.clock.
+VirtualClock` is the deterministic discrete-event clock the engine has
+always had: every engine step advances it by its *physical* model-eval
+cost times ``sec_per_eval`` (the deployment's calibrated per-eval wall
+time), so latency, SLO-attainment and goodput numbers are
+bit-reproducible discrete-event quantities, not wall-clock noise.  A
+:class:`~repro.serve.clock.MonotonicClock` engine instead stamps those
+same fields from real time — the regime of the asynchronous serving
+loop (:class:`repro.serve.async_loop.AsyncServeLoop`), which overlaps
+host scheduling with device compute by dispatching the next
+refinement's step program (:meth:`DiffusionSamplingEngine.
+step_dispatch`) before blocking on the previous refinement's residual
+fetch (:meth:`DiffusionSamplingEngine.step_resolve`).  The admission
+*policy* (who gets a freed slot, who is rejected or preempted) lives in
 :mod:`repro.serve.scheduler`; this module only exposes the mechanism:
-``admit`` / ``step_once`` / ``evict`` / ``free_slots``.  Completion-time
-prediction feeds on :class:`IterationEMA`, an online per-tier iterations
-estimate learned from the engine's own completions (falling back to the
-caller's ``iters_hint``, then worst-case ``max_iters``).
+``admit`` / ``step_once`` (= dispatch + resolve, fused) / ``evict`` /
+``free_slots``.  Completion-time prediction feeds on
+:class:`IterationEMA`, an online per-tier iterations estimate learned
+from the engine's own completions (falling back to the caller's
+``iters_hint``, then worst-case ``max_iters``).
 
 What the engine does / does not guarantee:
 
@@ -115,6 +125,7 @@ import numpy as np
 
 from repro import compat
 from repro.analysis.markers import hot_loop
+from repro.serve.clock import Clock, VirtualClock
 from repro.core.engine import (IterationCost, coarse_init_sweep,
                                iteration_cost, predicted_evals,
                                prefix_frontier, resolve_blocks,
@@ -177,10 +188,15 @@ class SampleRequest:
     """One sampling job: draw x_init ~ N(0, I) from ``seed`` and run SRDS
     to the requester's tolerance on a ``num_steps`` grid.
 
-    ``arrival_time`` (virtual seconds) and ``deadline``/``slo_ms`` make the
-    request schedulable: ``deadline`` is absolute on the engine clock,
-    ``slo_ms`` is relative to arrival (``deadline`` wins when both are
-    set); neither set means "best effort" (infinite deadline).
+    ``arrival_time`` (seconds on the engine's clock — virtual by default,
+    real under a :class:`~repro.serve.clock.MonotonicClock`) and
+    ``deadline``/``deadline_wall``/``slo_ms`` make the request
+    schedulable: ``deadline`` is absolute on the *virtual* clock,
+    ``deadline_wall`` is absolute on a *wall* (monotonic) clock, and
+    ``slo_ms`` is relative to arrival so it is meaningful on either.  An
+    engine resolves whichever absolute deadline matches its own clock
+    (:meth:`DiffusionSamplingEngine.request_deadline`) and falls back to
+    ``slo_ms``; nothing set means "best effort" (infinite deadline).
     ``solver``/``schedule``/``shape`` override the engine defaults and
     become part of the compatibility key.  ``iters_hint`` is the caller's
     expected refinement count for cost-model admission (policies fall back
@@ -189,17 +205,25 @@ class SampleRequest:
     seed: int
     tol: float = 1e-3
     num_steps: Optional[int] = None      # None -> engine default grid
-    arrival_time: float = 0.0            # virtual seconds
+    arrival_time: float = 0.0            # seconds on the engine clock
     slo_ms: Optional[float] = None       # relative deadline (ms past arrival)
     deadline: Optional[float] = None     # absolute virtual-clock deadline
+    deadline_wall: Optional[float] = None  # absolute wall-clock deadline
     solver: Optional[SolverConfig] = None   # None -> engine default
     schedule: Optional[str] = None       # None -> engine default
     shape: Optional[Tuple[int, ...]] = None  # None -> engine default
     iters_hint: Optional[int] = None     # expected SRDS iterations (cost model)
 
-    def absolute_deadline(self) -> float:
-        if self.deadline is not None:
-            return float(self.deadline)
+    def absolute_deadline(self, wall: bool = False) -> float:
+        """Absolute deadline in the given clock regime: ``wall=True``
+        resolves ``deadline_wall`` (ignoring the virtual ``deadline``),
+        the default resolves ``deadline`` (ignoring ``deadline_wall``);
+        both fall back to arrival-relative ``slo_ms``, then +inf.  Engine
+        code goes through ``engine.request_deadline(req)`` so the regime
+        always matches the engine's own clock."""
+        absolute = self.deadline_wall if wall else self.deadline
+        if absolute is not None:
+            return float(absolute)
         if self.slo_ms is not None:
             return self.arrival_time + self.slo_ms / 1e3
         return math.inf
@@ -253,6 +277,33 @@ class _Slot:
         self.evals = 0
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unresolved refinement of a micro-batch.
+
+    Everything the host needs to account the step *after* its residual
+    fetch lands: the un-fetched device residual (``fetch`` — ``(K,)``,
+    or ``(K+B,)`` with the per-block residuals under a residual-window
+    policy), the post-step final-block snapshot (``snap``, ``(K,
+    *shape)`` on device — a completed lane's sample is cut from here, so
+    the trajectory buffers can be donated to the *next* dispatched step
+    while this one is still unresolved), and the dispatch-time lane
+    census (``lanes``: slot index, rid, per-lane effective-eval charge —
+    a lane that completed or was evicted between dispatch and resolve is
+    recognized by its rid and skipped: its refinement here was
+    speculative waste, charged physically but never effectively).
+    """
+    batch: "_MicroBatch"
+    fetch: object                        # device (K,) or (K+B,) residuals
+    snap: object                         # device (K, *shape) final tails
+    lanes: List[Tuple[int, int, int]]    # (slot k, rid, effective evals)
+    windowed: bool                       # residual-window step?
+    lo: int                              # window lower bound at dispatch
+    phys: int                            # physical evals (incl. lane inits)
+    init_eff: int                        # effective evals of lane inits
+    epoch: int                           # batch.window_epoch at dispatch
+
+
 class _MicroBatch:
     """State of one compatibility group's K-slot batch (one compiled
     init/step program).  The engine owns admission/step ordering; this
@@ -280,6 +331,10 @@ class _MicroBatch:
         # advanced from the fetched per-block residuals; reset to 0 when a
         # fresh lane is admitted (its blocks are all unconverged)
         self.lo = 0
+        # dispatched-but-unresolved refinement count (async pipelining)
+        # and the admission epoch guarding window re-opens across them
+        self.inflight = 0
+        self.window_epoch = 0
         K = engine.batch_size
         self.x_init = jnp.zeros((K,) + shape, engine.dtype)
         self.x_tail = jnp.zeros((self.B, K) + shape, engine.dtype)
@@ -310,8 +365,11 @@ class _MicroBatch:
                 self.newly.append(k)
                 # a fresh lane's blocks are all unconverged: the shared
                 # residual window must re-open (existing lanes' frozen
-                # blocks thaw — sound, they only refine further)
+                # blocks thaw — sound, they only refine further); the
+                # epoch bump keeps an in-flight step's resolve from
+                # re-advancing the freshly reset window
                 self.lo = 0
+                self.window_epoch += 1
                 return k
         raise RuntimeError("admit() called with no free slot")
 
@@ -398,20 +456,25 @@ class _MicroBatch:
         return self.engine.batch_size * self._refine_evals_at(minf)
 
     @hot_loop
-    def step(self):
-        """Init newly admitted lanes, run one lockstep refinement truncated
-        to the group frontier, finalize converged slots.  Returns
-        ``(completions, effective_evals, physical_evals)`` where
-        completions are ``(rid, req, response)``.
+    def dispatch(self) -> _InFlight:
+        """Enqueue one lockstep refinement (newly-admitted lane inits
+        included) with NO device->host sync: the returned
+        :class:`_InFlight` token carries the un-fetched residual and the
+        post-step final-block snapshot as device values.  The async
+        serving loop dispatches the *next* refinement before resolving
+        this one, so the blocking fetch in :meth:`resolve` overlaps
+        device compute; the synchronous path (``step()``) fuses the two
+        back to back.
 
-        Host traffic: exactly ONE device->host sync per refinement — the
-        batched ``(K,)`` residual vector, with the ``(B,)`` per-block
-        residual piggybacked onto the same fetch under a residual-window
-        policy — plus one per completed request (that lane's final state
-        only).
+        A lane that — unbeknownst to the host — converged on the still
+        unresolved *previous* refinement gets one speculative extra
+        refinement here.  That work is physically wasted but never
+        observable: the lane's completed sample is cut from the previous
+        step's snapshot at resolve, so responses stay bit-identical to
+        the synchronous engine's.
         """
         K = self.engine.batch_size
-        eff = phys = 0
+        init_eff = phys = 0
         if self.newly:
             # coarse-init the fixed batch inside one donated program (the
             # new-lane write-back included, so the trajectory-sized
@@ -421,7 +484,7 @@ class _MicroBatch:
             m[self.newly] = True
             self.x_tail, self.prev_coarse = self.init_fn(
                 self.x_init, self.x_tail, self.prev_coarse, jnp.asarray(m))
-            eff += len(self.newly) * self.cost.init_evals
+            init_eff = len(self.newly) * self.cost.init_evals
             phys += K * self.cost.init_evals
             for k in self.newly:
                 self.slots[k].evals = self.cost.init_evals
@@ -437,37 +500,74 @@ class _MicroBatch:
                 self.step_for.windowed(minf)(
                     self.x_init, self.x_tail, self.prev_coarse, amask,
                     jnp.int32(lo))
-            fetched = _host_fetch(fetch)     # the one per-iteration sync
-            delta_np = fetched[:K]
-            block_np = fetched[K:]
-            # advance the shared window from the lane-max residuals
-            self.lo = int(self.policy.advance(lo, block_np, self.B))
             # effective = the window schedule every active lane actually
-            # executed; physical = the compiled suffix width times K
+            # executes; physical = the compiled suffix width times K
             per_lane = self.cost.refine_evals_window(lo)
-            for k, s in enumerate(self.slots):
-                if s is not None and self.active[k]:
-                    s.evals += per_lane
-                    eff += per_lane
+            lanes = [(k, s.rid, per_lane)
+                     for k, s in enumerate(self.slots)
+                     if s is not None and self.active[k]]
             phys += K * self.cost.refine_evals_window(minf)
+            windowed = True
         else:
             minf = self._frontier() if self.engine.truncate else 0
-            self.x_tail, self.prev_coarse, delta = self.step_for(minf)(
+            lo = minf
+            self.x_tail, self.prev_coarse, fetch = self.step_for(minf)(
                 self.x_init, self.x_tail, self.prev_coarse, amask)
             # effective = per-lane ideal (each lane truncated at its OWN
             # frontier when the engine truncates); physical = what the
             # lockstep program actually ran (K lanes at the group frontier)
-            eff += sum(self._refine_evals_at(prefix_frontier(s.iters))
-                       for k, s in enumerate(self.slots)
-                       if s is not None and self.active[k])
+            lanes = [(k, s.rid,
+                      self._refine_evals_at(prefix_frontier(s.iters)))
+                     for k, s in enumerate(self.slots)
+                     if s is not None and self.active[k]]
             phys += K * self._refine_evals_at(minf)
-            delta_np = _host_fetch(delta)    # the one per-iteration sync
+            windowed = False
+        self.inflight += 1
+        # the snapshot reads the REBOUND (post-step) x_tail: a device-side
+        # slice enqueued before the next dispatch donates the buffer away
+        return _InFlight(batch=self, fetch=fetch, snap=self.x_tail[-1],
+                         lanes=lanes, windowed=windowed, lo=lo, phys=phys,
+                         init_eff=init_eff, epoch=self.window_epoch)
 
+    @hot_loop
+    def resolve(self, tok: _InFlight):
+        """Land a dispatched refinement: block on its residual fetch,
+        update lane bookkeeping, finalize converged slots.  Returns
+        ``(completions, effective_evals, physical_evals)`` where
+        completions are ``(rid, req, response)``.
+
+        Host traffic: exactly ONE device->host sync per refinement — the
+        batched ``(K,)`` residual vector, with the ``(B,)`` per-block
+        residual piggybacked onto the same fetch under a residual-window
+        policy — plus one per completed request (that lane's row of the
+        snapshot only, never the ``(B, K, *shape)`` trajectory).
+        """
+        K = self.engine.batch_size
+        self.inflight -= 1
+        fetched = _host_fetch(tok.fetch)     # the one per-iteration sync
+        delta_np = fetched[:K]
+        if tok.windowed:
+            block_np = fetched[K:]
+            if tok.epoch == self.window_epoch:
+                # advance the shared window from the lane-max residuals;
+                # never retreat below what a younger resolved step already
+                # proved.  An admission since dispatch re-opened the
+                # window — its reset wins (smaller window = sound).
+                self.lo = max(self.lo, int(self.policy.advance(
+                    tok.lo, block_np, self.B)))
+
+        eff = tok.init_eff
         completed: List[Tuple[int, SampleRequest, SampleResponse]] = []
-        for k in range(K):
+        for k, rid, lane_eff in tok.lanes:
             slot = self.slots[k]
-            if slot is None or not self.active[k]:
+            if slot is None or slot.rid != rid:
+                # lane completed/was evicted between dispatch and resolve:
+                # this refinement of it was speculative waste — physical,
+                # never effective, and never observable
                 continue
+            eff += lane_eff
+            if tok.windowed:
+                slot.evals += lane_eff
             slot.iters += 1
             slot.history.append(float(delta_np[k]))
             # f32 compare, matching the engine's still_refining gate
@@ -477,14 +577,21 @@ class _MicroBatch:
                     # fetch ONLY the completed lane's final state — not the
                     # (B, K, *shape) trajectory, not even the (K, *shape)
                     # final row
-                    sample=_host_fetch(self.x_tail[-1, k]),
+                    sample=_host_fetch(tok.snap[k]),
                     iterations=slot.iters,
                     final_delta=slot.history[-1],
                     delta_history=np.asarray(slot.history, np.float32),
                     model_evals=self._slot_evals(slot))))
                 self.slots[k] = None
                 self.active[k] = False
-        return completed, eff, phys
+        return completed, eff, tok.phys
+
+    @hot_loop
+    def step(self):
+        """One synchronous refinement: dispatch + resolve back to back —
+        the ``simulate()``/``drain()`` path, bit-identical to the
+        pre-async fused step."""
+        return self.resolve(self.dispatch())
 
 
 class DiffusionSamplingEngine:
@@ -509,8 +616,21 @@ class DiffusionSamplingEngine:
                     axis size).  Composes with ``axis`` on a 2D mesh.
       allow_inexact: accept stochastic (``ddpm``) solvers despite the
                     lane-exactness caveat (see module docstring).
-      sec_per_eval: virtual seconds charged per *physical* model eval —
-                    the deterministic clock behind latency/SLO metrics.
+      sec_per_eval: seconds charged per *physical* model eval on the
+                    virtual clock, and the cost model's per-eval price
+                    under **either** clock (calibrate it to measured
+                    wall time per eval so ``predict_completion`` — and
+                    through it CostAware admission — stays meaningful on
+                    a wall clock).
+      clock:        the engine's time source (:mod:`repro.serve.clock`).
+                    ``None`` (default) -> a fresh deterministic
+                    :class:`~repro.serve.clock.VirtualClock` — bit-exact
+                    discrete-event time, what ``simulate()`` requires.
+                    Pass a :class:`~repro.serve.clock.MonotonicClock`
+                    for real-time serving under
+                    :class:`repro.serve.async_loop.AsyncServeLoop`;
+                    latency/SLO stamps then read real elapsed seconds
+                    and wall deadlines (``deadline_wall``) apply.
       truncate:     converged-prefix truncation of the refinement step
                     (default on): each step program is compiled for the
                     group's quantized minimum frontier and statically skips
@@ -549,7 +669,7 @@ class DiffusionSamplingEngine:
                  dtype=jnp.float32, truncate: bool = True,
                  truncate_quantum: Optional[int] = None,
                  use_fused: Optional[bool] = None, ema_alpha: float = 0.3,
-                 window=None):
+                 window=None, clock: Optional[Clock] = None):
         self.model_fn = model_fn
         # every model eval goes through the sharding-aware Denoiser seam;
         # plain callables adapt for free (replicated specs).  A
@@ -616,10 +736,27 @@ class DiffusionSamplingEngine:
         self.effective_evals = 0
         self.physical_evals = 0
         self.requests_served = 0
-        self.clock = 0.0                  # virtual seconds
+        # the time seam: deterministic virtual time unless the caller
+        # plugs in a wall clock (repro.serve.clock)
+        self._clock = clock if clock is not None else VirtualClock()
         self.records: List[CompletionRecord] = []
 
     # ------------------------------------------------------------------ API
+
+    @property
+    def clock(self) -> float:
+        """Current engine time (seconds): the deterministic accumulator
+        of a :class:`~repro.serve.clock.VirtualClock`, or real elapsed
+        seconds under a :class:`~repro.serve.clock.MonotonicClock`."""
+        return self._clock.now()
+
+    def request_deadline(self, req: SampleRequest) -> float:
+        """``req``'s absolute deadline in THIS engine's clock regime:
+        ``deadline_wall`` under a wall clock, the virtual ``deadline``
+        otherwise, ``slo_ms``-relative on either.  Policies and latency
+        stamping go through here so deadlines on the wrong clock are
+        never compared against the running one."""
+        return req.absolute_deadline(wall=self._clock.is_wall)
 
     def _resolve(self, req: SampleRequest):
         """(num_steps, schedule, shape, solver) with engine defaults filled."""
@@ -719,7 +856,9 @@ class DiffusionSamplingEngine:
             "physical_evals": self.physical_evals,
             "effective_evals_per_sample": self.effective_evals / served,
             "physical_evals_per_sample": self.physical_evals / served,
-            # virtual-clock latency/SLO metrics (0.0 / 1.0 when idle)
+            # clock-time latency/SLO metrics (0.0 / 1.0 when idle) —
+            # deterministic under the default VirtualClock, real elapsed
+            # seconds under a MonotonicClock
             "latency_p50": float(p50),
             "latency_p95": float(p95),
             "latency_p99": float(p99),
@@ -727,9 +866,11 @@ class DiffusionSamplingEngine:
             "slo_attainment": (sum(1 for r in with_slo
                                    if r.status == "ok" and r.slo_met)
                                / len(with_slo)) if with_slo else 1.0,
-            # SLO-met completions per virtual second (deadline-free requests
+            # SLO-met completions per clock second (deadline-free requests
             # always count as met)
             "goodput_rps": met / span if span > 0 else 0.0,
+            # key name kept for artifact-schema stability; reads the
+            # engine clock, virtual or wall
             "virtual_time": self.clock,
         }
 
@@ -749,7 +890,7 @@ class DiffusionSamplingEngine:
         self.effective_evals = 0
         self.physical_evals = 0
         self.requests_served = 0
-        self.clock = 0.0
+        self._clock.reset()
         self.records = []
         # the learned per-tier iteration estimates are run state too: a
         # warm re-run must make the same admission decisions as a fresh one
@@ -793,23 +934,46 @@ class DiffusionSamplingEngine:
 
     @hot_loop
     def step_once(self) -> List[Tuple[int, SampleResponse]]:
-        """One lockstep refinement on the next busy micro-batch
-        (round-robin), advancing the virtual clock by the step's physical
-        eval cost.  Returns completions finalized by this step."""
-        batches = list(self._batches.values())
-        if not batches:
+        """One synchronous lockstep refinement on the next busy
+        micro-batch (round-robin): dispatch + resolve fused back to
+        back, advancing the clock by the step's physical eval cost.
+        Returns completions finalized by this step.  Bit-identical to
+        the pre-async engine — the asynchronous loop instead interleaves
+        :meth:`step_dispatch` / :meth:`step_resolve` so device compute
+        overlaps the host's blocking fetch."""
+        tok = self.step_dispatch()
+        if tok is None:
             return []
+        return self.step_resolve(tok)
+
+    def step_dispatch(self, max_inflight: int = 2) -> Optional[_InFlight]:
+        """Dispatch one refinement on the next busy micro-batch
+        (round-robin) that has fewer than ``max_inflight`` unresolved
+        steps; returns an opaque token for :meth:`step_resolve`, or
+        ``None`` when nothing is dispatchable.  Performs NO host sync —
+        the device starts computing while the host goes on scheduling.
+        Tokens must be resolved in dispatch order (oldest first)."""
+        batches = list(self._batches.values())
         for off in range(len(batches)):
             b = batches[(self._rr + off) % len(batches)]
-            if b.busy():
+            if b.busy() and b.inflight < max_inflight:
                 self._rr = (self._rr + off + 1) % len(batches)
-                completed, eff, phys = b.step()
-                self.effective_evals += eff
-                self.physical_evals += phys
-                self.clock += phys * self.sec_per_eval
-                return [(rid, self._finalize(rid, req, resp))
-                        for rid, req, resp in completed]
-        return []
+                return b.dispatch()
+        return None
+
+    @hot_loop
+    def step_resolve(self, tok: _InFlight) -> List[Tuple[int,
+                                                         SampleResponse]]:
+        """Land a dispatched refinement: block on its residual fetch
+        (that refinement's ONE host sync), account effective/physical
+        evals, charge the clock its physical cost, and finalize
+        completions."""
+        completed, eff, phys = tok.batch.resolve(tok)
+        self.effective_evals += eff
+        self.physical_evals += phys
+        self._clock.charge(phys * self.sec_per_eval)
+        return [(rid, self._finalize(rid, req, resp))
+                for rid, req, resp in completed]
 
     def evict(self, rid: int) -> SampleResponse:
         """Preempt a running request (scheduler policy decision); its
@@ -823,8 +987,9 @@ class DiffusionSamplingEngine:
         raise KeyError(f"request {rid} is not running")
 
     def advance_clock(self, until: float) -> None:
-        """Idle the engine forward (no work to do before the next arrival)."""
-        self.clock = max(self.clock, until)
+        """Idle the engine forward (no work to do before the next
+        arrival): a virtual clock warps, a wall clock really sleeps."""
+        self._clock.wait_until(until)
 
     def predict_iterations(self, req: SampleRequest) -> float:
         """Expected refinement count for ``req``: the *most optimistic* of
@@ -881,9 +1046,10 @@ class DiffusionSamplingEngine:
         """Stamp virtual-clock latency/SLO fields and ledger the outcome."""
         resp.arrival_time = req.arrival_time
         resp.finish_time = self.clock
-        resp.latency = self.clock - req.arrival_time
-        resp.deadline = req.absolute_deadline()
-        resp.slo_met = resp.status == "ok" and self.clock <= resp.deadline
+        resp.latency = resp.finish_time - req.arrival_time
+        resp.deadline = self.request_deadline(req)
+        resp.slo_met = resp.status == "ok" \
+            and resp.finish_time <= resp.deadline
         if resp.status == "ok":
             self.requests_served += 1
             # feed the online per-tier iterations predictor

@@ -70,7 +70,7 @@ from repro.serve.diffusion import (DiffusionSamplingEngine, SampleRequest,
                                    SampleResponse)
 
 __all__ = ["Policy", "FIFO", "EDF", "CostAware", "Tier", "poisson_trace",
-           "bursty_trace", "SimReport", "simulate"]
+           "bursty_trace", "SimReport", "simulate", "build_report"]
 
 
 # --------------------------------------------------------------------------
@@ -115,7 +115,10 @@ class FIFO(Policy):
 
 class EDF(Policy):
     """Earliest absolute deadline first; deadline-free requests sort last
-    (deadline = +inf), among themselves by arrival."""
+    (deadline = +inf), among themselves by arrival.  Deadlines resolve
+    through ``engine.request_deadline`` so the policy is clock-agnostic:
+    virtual deadlines on a virtual-clock engine, ``deadline_wall`` on a
+    wall-clock one."""
 
     name = "edf"
 
@@ -123,7 +126,7 @@ class EDF(Policy):
         if not queue:
             return None
         return min(range(len(queue)),
-                   key=lambda i: (queue[i][1].absolute_deadline(),
+                   key=lambda i: (engine.request_deadline(queue[i][1]),
                                   queue[i][1].arrival_time, i))
 
 
@@ -142,7 +145,7 @@ class CostAware(EDF):
         self.preempt = preempt
 
     def reject(self, now, rid, req, engine):
-        deadline = req.absolute_deadline()
+        deadline = engine.request_deadline(req)
         if not math.isfinite(deadline):
             return False
         predicted = engine.predict_completion(req, now)
@@ -164,13 +167,13 @@ class CostAware(EDF):
             predicted = engine.predict_completion(req, now)
             if (engine.free_slots(req) == 0
                     and now + self.slack * (predicted - now)
-                    <= req.absolute_deadline()):
+                    <= engine.request_deadline(req)):
                 key = engine.compat_key(req)
                 starved[key] = starved.get(key, 0) + 1
         victims = []
         for rid, req in running:
             key = engine.compat_key(req)
-            if now > req.absolute_deadline() and starved.get(key, 0) > 0:
+            if now > engine.request_deadline(req) and starved.get(key, 0) > 0:
                 victims.append(rid)
                 starved[key] -= 1
         return victims
@@ -242,7 +245,9 @@ def bursty_trace(n_bursts: int, burst_size: int, period: float,
 class SimReport:
     """Outcome of one trace replay.  ``responses`` holds completed requests
     only; rejected/preempted rids are listed separately.  Percentiles are
-    over completed-request latencies (virtual seconds)."""
+    over completed-request latencies, in the replaying engine's clock
+    seconds — deterministic virtual ones out of :func:`simulate`, real
+    wall ones out of :class:`repro.serve.async_loop.AsyncServeLoop`."""
     policy: str
     responses: Dict[int, SampleResponse]
     rejected: List[int]
@@ -269,7 +274,25 @@ def simulate(engine: DiffusionSamplingEngine, trace: Sequence[SampleRequest],
     nothing has arrived, the clock jumps to the next arrival.  Resets the
     engine's metrics first so back-to-back runs on one warm engine are
     independent and bit-deterministic.
+
+    **Determinism guarantee:** ``simulate()`` is a host-stepped
+    discrete-event replay on the engine's deterministic
+    :class:`~repro.serve.clock.VirtualClock` — time advances only by
+    charged eval cost and arrival jumps, so a fixed (trace, policy,
+    engine config) reproduces byte-identical samples, latencies and
+    percentiles on every run.  It uses the engine's *synchronous* step
+    (dispatch + resolve fused) and is entirely unaffected by the
+    asynchronous wall-clock serving loop
+    (:class:`repro.serve.async_loop.AsyncServeLoop`), which lives beside
+    it, not under it.  An engine built on any non-virtual clock is
+    refused here — wall-clock evidence belongs to the async loop and
+    ``benchmarks/table10_wallclock.py``.
     """
+    if engine._clock.is_wall:
+        raise ValueError(
+            "simulate() is the bit-deterministic discrete-event driver and "
+            "requires a VirtualClock engine; wall-clock serving goes "
+            "through repro.serve.async_loop.AsyncServeLoop")
     policy = policy if policy is not None else FIFO()
     saved_spe = engine.sec_per_eval
     if sec_per_eval is not None:
@@ -355,6 +378,18 @@ def _simulate(engine: DiffusionSamplingEngine,
             responses[rid] = resp
             running.pop(rid, None)
 
+    return build_report(policy, responses, rejected, preempted, submitted,
+                        engine, first_arrival)
+
+
+def build_report(policy: Policy, responses: Dict[int, SampleResponse],
+                 rejected: List[int], preempted: List[int],
+                 submitted: List[int], engine: DiffusionSamplingEngine,
+                 first_arrival: float) -> SimReport:
+    """Assemble a :class:`SimReport` from one finished trace replay —
+    shared by the synchronous :func:`simulate` and the asynchronous
+    :class:`repro.serve.async_loop.AsyncServeLoop`, so virtual and
+    wall-clock runs report through one schema."""
     lats = [r.latency for r in responses.values()]
     p50, p95, p99 = (np.percentile(lats, [50, 95, 99]) if lats
                      else (0.0, 0.0, 0.0))

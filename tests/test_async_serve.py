@@ -1,0 +1,288 @@
+"""The asynchronous serving loop and the pluggable clock.
+
+Covers the wall-clock edge cases the async tentpole introduces:
+
+* the Clock seam — swapping an explicit ``VirtualClock`` in leaves
+  ``simulate()`` bit-identical to the default-constructed engine (the
+  PR 7 baseline behaviour), and ``simulate()`` refuses wall clocks;
+* the pipelined dispatch/resolve path is bit-exact vs the synchronous
+  engine (samples, iterations, eval totals) on a virtual clock, where
+  the comparison is deterministic;
+* one host sync per refinement still holds under pipelining — counted
+  through the ``_host_fetch`` seam exactly like the synchronous test;
+* ``deadline_wall`` resolution (``request_deadline``), rejection of a
+  request already hopeless at admission, and eviction firing on a wall
+  deadline that passes mid-refinement.
+
+Wall-clock *numbers* are noisy by nature, so the MonotonicClock tests
+assert structure (who completed, who was rejected/evicted, monotone
+time) — never absolute seconds; ordering-level latency claims live in
+``benchmarks/table10_wallclock.py``.
+"""
+import math
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SolverConfig
+from repro.serve import (EDF, FIFO, AsyncServeLoop, CostAware,
+                         DiffusionSamplingEngine, MonotonicClock,
+                         SampleRequest, Tier, VirtualClock, poisson_trace,
+                         simulate)
+from repro.serve import diffusion as serve_diffusion
+from repro.core.window import ResidualWindow
+
+TIERS = [Tier(tol=1e-2, slo_ms=25, iters_hint=2, weight=0.9),
+         Tier(tol=1e-6, slo_ms=400, iters_hint=7, weight=0.1)]
+
+
+def _elementwise_model(dim=8):
+    scale = jnp.linspace(0.5, 1.5, dim)
+
+    def model_fn(x, t):
+        return jnp.tanh(x * scale) * (0.5 + 0.001 * t)
+
+    return model_fn
+
+
+def _engine(model, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("sec_per_eval", 1e-5)
+    return DiffusionSamplingEngine(model, (8,), SolverConfig("ddim"),
+                                   num_steps=64, dtype=jnp.float64, **kw)
+
+
+def _trace(n=12, rate=300.0, seed=0):
+    return poisson_trace(n, rate=rate, tiers=TIERS, seed=seed)
+
+
+# --------------------------------------------------------------------------
+# the Clock seam
+# --------------------------------------------------------------------------
+
+def test_virtual_clock_swap_simulate_bit_identical():
+    """An engine built with an explicit VirtualClock() reproduces the
+    default engine's simulate() output bit for bit — the clock refactor
+    must not perturb the PR 7 discrete-event baseline (same latencies,
+    same samples, same eval counters)."""
+    model = _elementwise_model()
+    trace = _trace()
+    rep_default = simulate(_engine(model), trace, EDF())
+    rep_explicit = simulate(_engine(model, clock=VirtualClock()), trace, EDF())
+    assert sorted(rep_default.responses) == sorted(rep_explicit.responses)
+    assert rep_default.latency_p50 == rep_explicit.latency_p50
+    assert rep_default.latency_p95 == rep_explicit.latency_p95
+    assert rep_default.makespan == rep_explicit.makespan
+    assert rep_default.effective_evals == rep_explicit.effective_evals
+    assert rep_default.physical_evals == rep_explicit.physical_evals
+    for rid in rep_default.responses:
+        a, b = rep_default.responses[rid], rep_explicit.responses[rid]
+        assert a.latency == b.latency
+        assert a.iterations == b.iterations
+        assert np.array_equal(np.asarray(a.sample), np.asarray(b.sample))
+
+
+def test_simulate_refuses_wall_clock():
+    model = _elementwise_model()
+    eng = _engine(model, clock=MonotonicClock())
+    with pytest.raises(ValueError, match="VirtualClock"):
+        simulate(eng, _trace(n=2))
+
+
+def test_request_deadline_resolution_per_clock():
+    """deadline is virtual-clock absolute, deadline_wall is wall-clock
+    absolute; each engine resolves its own regime and both fall back to
+    arrival-relative slo_ms."""
+    model = _elementwise_model()
+    virt = _engine(model)
+    wall = _engine(model, clock=MonotonicClock())
+    req = SampleRequest(seed=0, arrival_time=1.0, slo_ms=100.0,
+                        deadline=5.0, deadline_wall=9.0)
+    assert virt.request_deadline(req) == 5.0
+    assert wall.request_deadline(req) == 9.0
+    # slo fallback when the matching absolute deadline is absent
+    req2 = SampleRequest(seed=0, arrival_time=1.0, slo_ms=100.0)
+    assert virt.request_deadline(req2) == pytest.approx(1.1)
+    assert wall.request_deadline(req2) == pytest.approx(1.1)
+    # a virtual deadline does not leak into the wall regime
+    req3 = SampleRequest(seed=0, deadline=5.0)
+    assert wall.request_deadline(req3) == math.inf
+    assert virt.request_deadline(req3) == 5.0
+
+
+# --------------------------------------------------------------------------
+# pipelined dispatch/resolve == synchronous engine (deterministic, virtual)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy_cls", [FIFO, EDF])
+def test_async_loop_bit_exact_vs_simulate(policy_cls):
+    """On a virtual clock the async loop must reproduce simulate()'s
+    samples and iteration counts bit-exactly: speculative refinements of
+    already-converged lanes are never observable.  (Latencies may differ
+    — completions are discovered one dispatch later — but the math may
+    not.)"""
+    model = _elementwise_model()
+    trace = _trace(n=10)
+    sync = simulate(_engine(model), trace, policy_cls())
+    rep = AsyncServeLoop(_engine(model), policy_cls()).run(trace)
+    assert sorted(rep.responses) == sorted(sync.responses)
+    for rid in sync.responses:
+        a, b = sync.responses[rid], rep.responses[rid]
+        assert a.iterations == b.iterations
+        assert a.final_delta == b.final_delta
+        assert np.array_equal(np.asarray(a.sample), np.asarray(b.sample))
+
+
+def test_async_loop_bit_exact_under_residual_window():
+    """The shared residual window survives pipelining: the epoch guard
+    keeps an in-flight resolve from clobbering an admission's window
+    re-open, and responses still match the synchronous engine."""
+    model = _elementwise_model()
+    trace = _trace(n=8)
+    mk = lambda: _engine(model, window=ResidualWindow(1e-8))
+    sync = simulate(mk(), trace, FIFO())
+    rep = AsyncServeLoop(mk(), FIFO()).run(trace)
+    assert sorted(rep.responses) == sorted(sync.responses)
+    for rid in sync.responses:
+        a, b = sync.responses[rid], rep.responses[rid]
+        assert a.iterations == b.iterations
+        assert np.array_equal(np.asarray(a.sample), np.asarray(b.sample))
+
+
+def test_async_loop_deterministic_on_virtual_clock():
+    """Two async runs on fresh virtual-clock engines agree exactly —
+    the pipelined loop adds no nondeterminism of its own."""
+    model = _elementwise_model()
+    trace = _trace(n=10)
+    r1 = AsyncServeLoop(_engine(model), EDF()).run(trace)
+    r2 = AsyncServeLoop(_engine(model), EDF()).run(trace)
+    assert r1.latency_p95 == r2.latency_p95
+    assert r1.makespan == r2.makespan
+    assert r1.physical_evals == r2.physical_evals
+    for rid in r1.responses:
+        assert np.array_equal(np.asarray(r1.responses[rid].sample),
+                              np.asarray(r2.responses[rid].sample))
+
+
+def test_async_max_inflight_one_degenerates_to_sync_discipline():
+    """max_inflight=1 serializes dispatch/resolve — the A/B control for
+    the overlap itself — and still completes everything exactly."""
+    model = _elementwise_model()
+    trace = _trace(n=6)
+    sync = simulate(_engine(model), trace, FIFO())
+    rep = AsyncServeLoop(_engine(model), FIFO(), max_inflight=1).run(trace)
+    assert sorted(rep.responses) == sorted(sync.responses)
+    for rid in sync.responses:
+        assert np.array_equal(np.asarray(sync.responses[rid].sample),
+                              np.asarray(rep.responses[rid].sample))
+
+
+# --------------------------------------------------------------------------
+# one host sync per refinement, under pipelining
+# --------------------------------------------------------------------------
+
+class _FetchCounter:
+    """Monkeypatch hook for repro.serve.diffusion._host_fetch: records one
+    entry (the fetched array's shape) per device->host sync."""
+
+    def __init__(self, real):
+        self.real = real
+        self.shapes = []
+
+    def __call__(self, x):
+        out = self.real(x)
+        self.shapes.append(out.shape)
+        return out
+
+
+def test_async_loop_one_sync_per_refinement(monkeypatch):
+    """Pipelining must not add syncs: across a whole async run the fetch
+    count is exactly one (K,) residual per resolved refinement plus one
+    (shape,) final-state fetch per completion — and dispatching performs
+    none (every recorded fetch is residual- or lane-shaped)."""
+    model = _elementwise_model()
+    counter = _FetchCounter(serve_diffusion._host_fetch)
+    monkeypatch.setattr(serve_diffusion, "_host_fetch", counter)
+    eng = _engine(model)
+    K = eng.batch_size
+    rep = AsyncServeLoop(eng, FIFO()).run(_trace(n=7))
+    n_completions = len(rep.responses)
+    residual_fetches = [s for s in counter.shapes if s == (K,)]
+    lane_fetches = [s for s in counter.shapes if s == (8,)]
+    assert len(lane_fetches) == n_completions
+    assert len(residual_fetches) + len(lane_fetches) == len(counter.shapes), \
+        f"unexpected fetch shapes: {set(counter.shapes)}"
+    # one residual sync per refinement: total refinements resolved equals
+    # the physical step count implied by the engine's accounting; at
+    # minimum every completed request's iteration count is covered
+    assert len(residual_fetches) >= max(r.iterations
+                                        for r in rep.responses.values())
+
+
+# --------------------------------------------------------------------------
+# wall-clock edge cases (structure-only assertions; no absolute seconds)
+# --------------------------------------------------------------------------
+
+def test_wall_deadline_hopeless_at_admission_rejected():
+    """A request whose deadline_wall already passed at admission is shed
+    by CostAware admission control before burning a slot."""
+    model = _elementwise_model()
+    eng = _engine(model, clock=MonotonicClock())
+    trace = [SampleRequest(seed=0, tol=1e-2, arrival_time=0.0,
+                           deadline_wall=-1.0),       # already hopeless
+             SampleRequest(seed=1, tol=1e-2, arrival_time=0.0)]
+    rep = AsyncServeLoop(eng, CostAware(slack=1.0)).run(trace)
+    assert rep.rejected == [0]
+    assert sorted(rep.responses) == [1]
+    assert rep.responses[1].status == "ok"
+
+
+def test_wall_deadline_eviction_mid_refinement():
+    """A running request whose wall deadline passes mid-refinement is
+    evicted by CostAware(preempt=True) when a feasible same-group waiter
+    is starved of slots."""
+    model = _elementwise_model()
+    # batch_size=1 so the second request genuinely starves
+    eng = _engine(model, batch_size=1, clock=MonotonicClock())
+    trace = [
+        # feasible at admission (cost model predicts ~5 ms of virtual
+        # work) but the first refinement's real JIT compile alone takes
+        # far longer than 20 ms of wall time, so the deadline is past by
+        # the next preemption round
+        SampleRequest(seed=0, tol=1e-6, arrival_time=0.0,
+                      deadline_wall=0.02),
+        # same compat group, no deadline (always feasible), starved while
+        # request 0 holds the only slot
+        SampleRequest(seed=1, tol=1e-2, arrival_time=0.0),
+    ]
+    rep = AsyncServeLoop(eng, CostAware(slack=1.0, preempt=True)).run(trace)
+    assert rep.preempted == [0]
+    assert sorted(rep.responses) == [1]
+    assert rep.responses[1].status == "ok"
+    # the evicted lane's still-in-flight refinement resolved as
+    # speculative waste without corrupting the survivor: its sample is
+    # bit-exact vs a fresh single-request run
+    solo = simulate(_engine(model, batch_size=1),
+                    [SampleRequest(seed=1, tol=1e-2)])
+    assert np.array_equal(np.asarray(rep.responses[1].sample),
+                          np.asarray(solo.responses[0].sample))
+
+
+def test_wall_clock_monotone_and_latency_stamps():
+    """Wall-clock runs stamp real, monotone, non-negative times: finish
+    >= arrival for every completion and the engine clock only moves
+    forward."""
+    model = _elementwise_model()
+    eng = _engine(model, clock=MonotonicClock())
+    t0 = eng.clock
+    rep = AsyncServeLoop(eng, EDF()).run(_trace(n=5))
+    assert eng.clock >= t0
+    for resp in rep.responses.values():
+        assert resp.finish_time >= resp.arrival_time
+        assert resp.latency >= 0.0
+        assert resp.latency == resp.finish_time - resp.arrival_time
