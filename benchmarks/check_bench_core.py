@@ -1,30 +1,35 @@
 """CI regression gate for the core-hot-path benchmark (BENCH_core.json).
 
-Compares a freshly emitted artifact (``benchmarks.table11_truncation``
-rows plus ``benchmarks.table12_window`` rows, appended into one file)
-against the committed baseline and fails on a >20% evals/sample
-regression.  Only the *deterministic* fields are gated — physical model
-evals per sample (every ``evals_*`` count a row carries) and the
-truncation saving — never wall-clock, which is runner noise.  A baseline
-row that disappears is a failure too (silently dropping a measured config
-is how regressions hide), as is an ``ExactPrefix`` run that lost
-bit-identity with the untruncated engine (``bit_identical`` /
-``bit_identical_exact``) on a matching environment, a table12 row
-whose residual window stopped doing strictly fewer evals than the exact
-prefix, or any row carrying a ``within_tol`` accuracy verdict that is
-false (the table6 mesh row's single-device-parity contract — checked on
-the current run alone, so it gates on every environment).
+Compares a freshly emitted artifact (``benchmarks.table11_truncation``,
+``benchmarks.table12_window``, ``benchmarks.table6_devices`` and
+``benchmarks.table13_accel`` rows, appended into one file) against the
+committed baseline and fails on a >20% regression of any deterministic
+count — physical model evals per sample (every ``evals_*`` field a row
+carries), Parareal iterations-to-tolerance (``iters_*``, the table13
+acceleration rows) and the truncation saving — never wall-clock, which
+is runner noise.  A baseline row that disappears is a failure too
+(silently dropping a measured config is how regressions hide), as is an
+``ExactPrefix`` run that lost bit-identity with the untruncated engine
+(``bit_identical`` / ``bit_identical_exact``) on a matching environment,
+a table12 row whose residual window stopped doing strictly fewer evals
+than the exact prefix, a table13 row whose accelerated run costs *more*
+iterations than plain (checked on the current run alone — acceleration
+that decelerates is a regression at any count), or any row carrying a
+``within_tol`` accuracy verdict that is false (the table6 mesh row's
+single-device-parity contract — also current-run-alone, so it gates on
+every environment).
 
 Usage (what .github/workflows/ci.yml runs):
 
     PYTHONPATH=src python -m benchmarks.table11_truncation --out BENCH_core.json
     PYTHONPATH=src python -m benchmarks.table12_window --out BENCH_core.json
     PYTHONPATH=src python -m benchmarks.table6_devices --out BENCH_core.json
+    PYTHONPATH=src python -m benchmarks.table13_accel --out BENCH_core.json
     PYTHONPATH=src python -m benchmarks.check_bench_core \
         --current BENCH_core.json \
         --baseline benchmarks/baselines/BENCH_core_baseline.json
 
-Refreshing the baseline after an intentional perf change: re-run both
+Refreshing the baseline after an intentional perf change: re-run all
 emitters into one JSON and commit it to ``benchmarks/baselines/``.
 """
 import argparse
@@ -62,12 +67,18 @@ def check(current: dict, baseline: dict, tolerance: float = TOLERANCE):
         if cur is None:
             failures.append(f"{name}: row missing from current artifact")
             continue
-        if cur.get("iterations") == base.get("iterations"):
-            # every deterministic eval count the row carries (table11:
+        # table13 rows carry no "iterations" field — their anchor count is
+        # iters_plain, the unaccelerated run (same knife-edge reasoning)
+        counts_match = (cur.get("iterations") == base.get("iterations")
+                        and cur.get("iters_plain") == base.get("iters_plain"))
+        if counts_match:
+            # every deterministic count the row carries (table11:
             # evals_truncated/untruncated; table12: evals_window/
-            # exact_prefix/flat) gates at the same tolerance
+            # exact_prefix/flat; table13: iters_plain/accel +
+            # evals_plain/accel) gates at the same tolerance
             for field in sorted(base):
-                if not field.startswith("evals_") or field.endswith("_pct"):
+                if not field.startswith(("evals_", "iters_")) \
+                        or field.endswith("_pct"):
                     continue
                 b, c = base[field], cur.get(field)
                 if c is not None and c > b * (1.0 + tolerance):
@@ -101,6 +112,14 @@ def check(current: dict, baseline: dict, tolerance: float = TOLERANCE):
             failures.append(
                 f"{name}: truncation saving fell below 25% "
                 f"({cur['evals_saving_pct']:.1f}%)")
+        # the table13 tentpole claim: the pinned headline row's iteration
+        # cut stays >= 25% (counts-matched, like the table11 saving)
+        if "iters_accel" in base and counts_match \
+                and base["iters_saving_pct"] >= 25.0 \
+                > cur["iters_saving_pct"]:
+            failures.append(
+                f"{name}: acceleration iteration saving fell below 25% "
+                f"({cur['iters_saving_pct']:.1f}%)")
     # accuracy contract (table6 mesh row): any current row that measures
     # a within-tolerance verdict must hold it — checked on the current
     # run alone (even rows not yet in the baseline), since parity with
@@ -112,6 +131,15 @@ def check(current: dict, baseline: dict, tolerance: float = TOLERANCE):
                 f"{name}: within_tol is false "
                 f"(max_abs_diff={cur.get('max_abs_diff')} > "
                 f"tol={cur.get('tol')})")
+        # table13 contract: acceleration must never cost iterations —
+        # current-run-alone (even rows not yet in the baseline), since
+        # accelerated <= plain is an invariant of the code, not of the
+        # environment
+        if "iters_accel" in cur and "iters_plain" in cur \
+                and not cur["iters_accel"] <= cur["iters_plain"]:
+            failures.append(
+                f"{name}: acceleration costs iterations "
+                f"({cur['iters_accel']} > {cur['iters_plain']})")
     return failures
 
 

@@ -125,5 +125,15 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None,
                     help="write the BENCH_core.json artifact here")
     ap.add_argument("--n", type=int, default=N)
+    ap.add_argument("--platform", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="pin the JAX backend via "
+                         "repro.launch.env.configure_platform")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="fake N host devices "
+                         "(--xla_force_host_platform_device_count)")
     args = ap.parse_args()
+    if args.platform is not None or args.host_devices is not None:
+        from repro.launch.env import configure_platform
+        configure_platform(args.platform, args.host_devices)
     main(out=args.out, n=args.n)

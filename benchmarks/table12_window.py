@@ -170,7 +170,17 @@ if __name__ == "__main__":
                     help="BENCH_core.json artifact to append rows into")
     ap.add_argument("--n", type=int, default=None,
                     help="run a single grid size instead of the pinned set")
+    ap.add_argument("--platform", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="pin the JAX backend via "
+                         "repro.launch.env.configure_platform")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="fake N host devices "
+                         "(--xla_force_host_platform_device_count)")
     args = ap.parse_args()
+    if args.platform is not None or args.host_devices is not None:
+        from repro.launch.env import configure_platform
+        configure_platform(args.platform, args.host_devices)
     cfgs = None
     if args.n is not None:
         cfgs = [c for c in CONFIGS if c["n"] == args.n] \

@@ -1,0 +1,184 @@
+"""Table 13 (new): Anderson fixed-point acceleration — Parareal
+iterations-to-tolerance, plain vs ``AndersonAccel``, at equal
+convergence tolerance on a pinned slowly-converging N=100 config.
+
+The headline metric is the paper's own hardware-independent unit: the
+*iteration count* — every refinement pays one full fine sweep, so a
+mixed run that converges in fewer iterations does proportionally fewer
+physical model evals (``evals_plain`` vs ``evals_accel``, priced by
+:func:`repro.core.engine.predicted_evals`; mixing itself adds zero model
+evals).  The toy is deliberately *slow*: a time-varying linear model
+whose per-dim oscillating contraction rates keep the refinement map in
+its near-linear tail for many iterations — the regime Anderson mixing is
+for (the repo's standard tanh toy converges in 2-3 refinements and
+leaves mixing no headroom).  Both arms run untruncated
+(``truncate=False``): joint Anderson mixing refuses truncating frontier
+policies (see docs/acceleration.md), so the honest comparison is
+flat-frontier vs flat-frontier at equal tolerance.
+
+Asserted before anything is reported — a broken accelerator must crash
+the benchmark, not emit pretty numbers:
+
+* ``accel=NoAccel()`` is *bit-identical* to the default engine
+  (``bit_identical``, gated by ``benchmarks.check_bench_core``);
+* the accelerated run never costs more iterations than plain, and the
+  headline row cuts them by >= 25%;
+* the mixed sample's max-abs error vs the serial solve stays within
+  ``err_bound``, a small multiple of the convergence tolerance (the
+  mixed fixed point is the same fixed point).
+
+Appends its rows to the ``BENCH_core.json`` artifact, alongside
+table11/table12/table6's:
+
+    PYTHONPATH=src python -m benchmarks.table13_accel --out BENCH_core.json
+
+Row schema: ``{name, n, tol, accel, iters_plain, iters_accel,
+iters_saving_pct, evals_plain, evals_accel, max_err_plain,
+max_err_accel, err_bound, bit_identical, t_plain_s, t_accel_s}`` —
+``iters_*`` / ``evals_*`` are deterministic (the regression gate keys on
+them); ``t_*`` are informational wall-clock medians.
+
+``--platform`` / ``--host-devices`` route through
+:func:`repro.launch.env.configure_platform` (XLA flags must land before
+backend init — see docs/benchmarks.md).
+"""
+import argparse
+import dataclasses
+
+from .table12_window import merge_out
+
+# the pinned config: N=100 -> B=10 blocks of S=10 fine steps, cosine
+# schedule, ddim, 16-dim slow toy, f32 (the numbers are knife-edge
+# sensitive to precision, so the dtype is pinned explicitly)
+N = 100
+DIM = 16
+AMP, FREQ = 2.0, 2.0
+SEED = 1
+DEPTH, WARMUP = 5, 2
+# (tol, err-bound multiple): loose headline tolerance + a tight one
+TOLS = [(3.0, 5.0), (0.1, 1.0)]
+
+
+def slow_model(amp: float = AMP, freq: float = FREQ, dim: int = DIM):
+    """Time-varying linear model with slow Parareal convergence: per-dim
+    oscillating contraction rates (the same toy as tests/test_accel.py's
+    iteration-cut assertions)."""
+    import jax
+    import jax.numpy as jnp
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    f32 = jnp.float32
+    w = freq * (1 + jax.random.uniform(k1, (dim,), f32))
+    ph = 2 * jnp.pi * jax.random.uniform(k2, (dim,), f32)
+    a = amp * (0.5 + jax.random.uniform(k3, (dim,), f32))
+
+    def model_fn(x, t):
+        return (a * jnp.sin(w * t[..., None] * 0.06 + ph) * x).astype(f32)
+
+    return model_fn
+
+
+def run_rows(n: int = N, dim: int = DIM, tols=tuple(TOLS)):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (AndersonAccel, NoAccel, SolverConfig, SRDSConfig,
+                            iteration_cost, make_schedule, predicted_evals,
+                            sample_sequential, srds_sample)
+
+    from .common import emit, timeit
+
+    model_fn = slow_model(dim=dim)
+    sched = make_schedule("cosine", n)
+    sched = dataclasses.replace(sched, ab=sched.ab.astype(jnp.float32),
+                                t_model=sched.t_model.astype(jnp.float32))
+    solver = SolverConfig("ddim")
+    x0 = jax.random.normal(jax.random.PRNGKey(SEED), (dim,), jnp.float32)
+    cost = iteration_cost(n, None, 1)
+    ref = jax.jit(lambda x: sample_sequential(model_fn, sched, solver, x))(x0)
+    acc = AndersonAccel(depth=DEPTH, warmup=WARMUP)
+
+    def sample_with(cfg):
+        return jax.jit(lambda x, c=cfg: srds_sample(
+            model_fn, sched, solver, x, c))
+
+    # --- NoAccel bit-identity: the seam's default must not perturb the
+    # engine in any way before any acceleration number is trusted
+    head_tol = tols[0][0]
+    res_d = sample_with(SRDSConfig(tol=head_tol))(x0)
+    res_0 = sample_with(SRDSConfig(tol=head_tol, accel=NoAccel()))(x0)
+    bit_identical = (
+        bool(jnp.all(res_d.sample == res_0.sample))
+        and int(res_d.iterations) == int(res_0.iterations)
+        and bool(jnp.all(res_d.delta_history == res_0.delta_history)))
+    assert bit_identical, (
+        f"NoAccel diverged from the default engine at n={n}: iters "
+        f"{int(res_0.iterations)} vs {int(res_d.iterations)}")
+
+    rows = []
+    for tol, mult in tols:
+        samp_p = sample_with(SRDSConfig(tol=tol))
+        samp_a = sample_with(SRDSConfig(tol=tol, accel=acc))
+        res_p = samp_p(x0)
+        res_a = samp_a(x0)
+        ip, ia = int(res_p.iterations), int(res_a.iterations)
+        assert ia <= ip, (
+            f"n={n} tol={tol}: acceleration cost iterations ({ia} > {ip})")
+        err_p = float(jnp.max(jnp.abs(res_p.sample - ref)))
+        err_a = float(jnp.max(jnp.abs(res_a.sample - ref)))
+        # the approximation contract: the mixed fixed point is the same
+        # fixed point, so the converged sample stays within a small
+        # multiple of the tolerance every run already accepted
+        bound = mult * tol
+        assert err_a <= bound, (
+            f"n={n} tol={tol}: accelerated error {err_a} exceeds "
+            f"bound {bound}")
+        ev_p = predicted_evals(cost, ip)
+        ev_a = predicted_evals(cost, ia)
+        t_p = timeit(samp_p, x0)
+        t_a = timeit(samp_a, x0)
+        name = f"table13/n{n}_tol{tol:g}"
+        saving = 100.0 * (1.0 - ia / ip)
+        emit(name, t_a * 1e6,
+             f"iters={ia}vs{ip}plain;saving={saving:.1f}%;"
+             f"evals={ev_a}vs{ev_p};err={err_a:.2e}vs{err_p:.2e}plain;"
+             f"bit_identical={bit_identical}")
+        rows.append(dict(
+            name=name, n=n, tol=tol,
+            accel=f"anderson(depth={DEPTH},warmup={WARMUP})",
+            iters_plain=ip, iters_accel=ia, iters_saving_pct=saving,
+            evals_plain=ev_p, evals_accel=ev_a,
+            max_err_plain=err_p, max_err_accel=err_a, err_bound=bound,
+            bit_identical=bit_identical, t_plain_s=t_p, t_accel_s=t_a))
+    # the tentpole claim: >= 25% fewer iterations to the headline
+    # tolerance at equal tolerance on the pinned N=100 config
+    assert rows[0]["iters_saving_pct"] >= 25.0, rows[0]
+    return rows
+
+
+def main(out: str = None, n: int = N):
+    rows = run_rows(n=n)
+    return merge_out(out, rows, "pinned_accel",
+                     {"n": n, "dim": DIM, "seed": SEED, "amp": AMP,
+                      "freq": FREQ, "schedule": "cosine",
+                      "depth": DEPTH, "warmup": WARMUP,
+                      "tols": [t for t, _ in TOLS]})
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="BENCH_core.json artifact to append rows into")
+    ap.add_argument("--n", type=int, default=N)
+    ap.add_argument("--platform", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="pin the JAX backend (gpu additionally installs "
+                         "the XLA GPU performance preset) — "
+                         "repro.launch.env.configure_platform")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="fake N host devices "
+                         "(--xla_force_host_platform_device_count)")
+    args = ap.parse_args()
+    if args.platform is not None or args.host_devices is not None:
+        from repro.launch.env import configure_platform
+        configure_platform(args.platform, args.host_devices)
+    main(out=args.out, n=args.n)

@@ -20,7 +20,7 @@ for a in "$@"; do
 done
 
 # Static-analysis gate: reprolint (python -m repro.analysis) enforces the
-# standing policies as AST rules RL001-RL008 — compat drift, engine-seam
+# standing policies as AST rules RL001-RL009 — compat drift, engine-seam
 # ownership, host-sync discipline, donation safety, fused-path gating,
 # test-tier markers, tracked artifacts, model-eval seam.  It replaced the
 # old grep lints (which missed aliased imports like `from jax import

@@ -1,4 +1,4 @@
-"""reprolint rules RL001-RL008: the repo's standing policies, mechanically.
+"""reprolint rules RL001-RL009: the repo's standing policies, mechanically.
 
 Each rule enforces one policy from ROADMAP.md "Standing policies" (the rule
 code is cross-referenced there and in README "Static analysis"):
@@ -24,6 +24,10 @@ code is cross-referenced there and in README "Static analysis"):
                                 backbone only through the
                                 ``repro.core.denoiser.Denoiser`` seam, never
                                 by calling a bare ``model_fn(x, t)``
+* RL009 accel-seam-ownership  — Anderson/secant mixing math (dense linalg
+                                solves, gamma systems) lives only in
+                                ``repro.core.accel``; drivers consume the
+                                ``Accelerator`` seam
 
 All rules are pure-AST (no JAX import anywhere in this package): they see
 through import aliases via :func:`repro.analysis.core.qualname`, which is
@@ -860,3 +864,80 @@ def rl008_model_eval_seam(mod: ModuleInfo) -> Iterable[Finding]:
             f"through the Denoiser (standalone call, .inner_eval() inside "
             f"a driver shard_map, or .shard_eval() under denoiser_spec) so "
             f"time/data/model parallelism compose driver-free")
+
+
+# ==========================================================================
+# RL009 — accel-seam ownership (mixing math lives in repro.core.accel)
+# ==========================================================================
+
+# Same scope story as RL008: only drivers and the serving engine must
+# consume the Accelerator seam — models/tests/benchmarks do whatever they
+# probe.  Fixture files opt into the scope by name (the RL006/RL008
+# precedent).
+_ACCEL = "repro.core.accel"
+_RL009_OWNER = ("src/repro/core/accel.py",)
+_RL009_SCOPES = ("src/repro/core/", "src/repro/serve/")
+# Names whose *definition* outside the owner is a re-derivation of the
+# mixing seam (leading underscores stripped before matching).
+_ACCEL_OWNED_DEFS = frozenset({"resolve_accel", "solve_gamma",
+                               "anderson_mix"})
+# Dense linear-algebra entry points: the secant/normal-equations solve is
+# the acceleration seam's signature — no other core/serve module does
+# dense linalg (frontier control, sweeps and solvers are all elementwise
+# or reductions).
+_LINALG_SOLVERS = frozenset({"solve", "lstsq", "inv", "pinv", "cholesky",
+                             "qr", "svd"})
+
+
+def _rl009_in_scope(path: str) -> bool:
+    p = path.replace(os.sep, "/")
+    if any(s in p for s in _RL009_SCOPES):
+        return True
+    return os.path.basename(p).startswith("rl009")
+
+
+@module_rule("RL009", "accel-seam-ownership",
+             "Anderson/secant mixing math (dense linalg solves, gamma "
+             "systems) re-derived outside repro.core.accel")
+def rl009_accel_seam(mod: ModuleInfo) -> Iterable[Finding]:
+    if not _rl009_in_scope(mod.path) or _in(mod.path, *_RL009_OWNER):
+        return
+    for node in ast.walk(mod.tree):
+        # (a) private-helper access across the seam boundary
+        if isinstance(node, ast.ImportFrom) and not node.level and \
+                node.module == _ACCEL:
+            for a in node.names:
+                if a.name.startswith("_"):
+                    yield _find(
+                        mod, node, "RL009", "accel-seam-ownership",
+                        f"private accel-seam helper `{_ACCEL}.{a.name}` "
+                        f"imported outside its owner module — consume the "
+                        f"public seam (Accelerator.apply/init_state/"
+                        f"reset_lanes, resolve_accel) instead")
+        elif isinstance(node, ast.Attribute) and node.attr.startswith("_"):
+            qn = qualname(node, mod.aliases)
+            if qn and qn.startswith(_ACCEL + "._"):
+                yield _find(
+                    mod, node, "RL009", "accel-seam-ownership",
+                    f"private accel-seam helper `{qn}` referenced outside "
+                    f"its owner module — consume the public seam instead")
+        # (b) re-derivation by name: defining a seam-owned function
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node.name.lstrip("_") in _ACCEL_OWNED_DEFS:
+            yield _find(
+                mod, node, "RL009", "accel-seam-ownership",
+                f"`def {node.name}` outside repro.core.accel re-derives "
+                f"the acceleration seam — import it from repro.core.accel "
+                f"(mixing math lives in exactly one module)")
+        # (c) re-implementation by shape: a dense least-squares/secant
+        # solve in a driver or the serving engine IS mixing math
+        elif isinstance(node, ast.Call):
+            qn = qualname(node.func, mod.aliases)
+            if qn and ".linalg." in qn and \
+                    qn.split(".")[-1] in _LINALG_SOLVERS:
+                yield _find(
+                    mod, node, "RL009", "accel-seam-ownership",
+                    f"dense linear-algebra solve `{qn}` in a driver/serve "
+                    f"module — Anderson/secant mixing math belongs to "
+                    f"repro.core.accel; select an Accelerator "
+                    f"(SRDSConfig(accel=...)) and let the engine apply it")

@@ -13,6 +13,8 @@ from .engine import (IterationCost, SRDSConfig, SRDSResult, iteration_cost,
                      windowed_evals)
 from .window import (ExactPrefix, FixedBudget, FrontierPolicy,
                      ResidualWindow, resolve_policy)
+from .accel import (Accelerator, AndersonAccel, NoAccel, TriangularAccel,
+                    resolve_accel)
 from .parareal import srds_sample, srds_stats
 from .paradigms import ParaDiGMSConfig, ParaDiGMSResult, paradigms_sample, paradigms_stats
 
@@ -26,5 +28,7 @@ __all__ = [
     "windowed_evals",
     "FrontierPolicy", "ExactPrefix", "ResidualWindow", "FixedBudget",
     "resolve_policy",
+    "Accelerator", "NoAccel", "AndersonAccel", "TriangularAccel",
+    "resolve_accel",
     "ParaDiGMSConfig", "ParaDiGMSResult", "paradigms_sample", "paradigms_stats",
 ]

@@ -1,0 +1,434 @@
+"""Fixed-point acceleration for Parareal refinement — the ONE home of
+Anderson/triangular mixing math.
+
+SRDS's refinement loop is a fixed-point iteration ``z_{p+1} = T(z_p)``
+over the joint state ``z = (x_tail, prev_coarse)``: one refinement maps
+the current trajectory tail and coarse results to the next, and the
+whole cost model is the number of applications of ``T`` until the
+convergence residual passes tolerance.  Anderson acceleration (AA)
+extrapolates over the iterate history the loop already carries —
+mixing the last ``m`` iterate/residual differences through a tiny
+least-squares solve — and typically reaches the same tolerance in
+noticeably fewer applications of ``T``, i.e. fewer full fine sweeps.
+ParaTAA ("Accelerating Parallel Sampling of Diffusion Models",
+PAPERS.md) specializes AA to exactly this triangular Parareal fixed
+point.
+
+An :class:`Accelerator` is the seam every driver consumes (sibling of
+:class:`repro.core.window.FrontierPolicy`): the engine's shared
+refinement bodies call :meth:`Accelerator.apply` on the post-sweep
+joint state, and the serving engine's per-frontier step programs do the
+same — the mixing math lives here exactly once (reprolint rule RL009).
+Three implementations ship:
+
+``NoAccel``
+    The default: no mixing, no extra loop carry (``RefineState.accel``
+    stays ``None`` — an empty pytree — so compiled carries are
+    byte-identical to the pre-seam engine).  **Bit-exact**: the repo's
+    exactness guarantee is untouched when acceleration is off.
+
+``AndersonAccel(depth=m)``
+    Classical type-II Anderson mixing over a sliding window of the last
+    ``m`` iterate/residual differences, solved per sample via a
+    regularized ``m×m`` normal-equations system.  **Approximate,
+    opt-in**: mixed iterates are no longer the serial solve's iterates,
+    so intermediate trajectories differ from the unaccelerated engine —
+    but the *fixed point is the same* (at the fixed point the residual
+    ``f = T(z) - z`` is 0 and mixing is the identity), so converged
+    samples agree with the serial solve up to the convergence tolerance.
+    ``benchmarks/table13_accel.py`` measures the max-vs-serial error per
+    config and CI asserts the bound.  Mixing is a handful of reductions
+    and an ``m×m`` solve — **zero extra model evals** — so every mixed
+    iteration costs exactly what a plain one does, and any iteration cut
+    is a pure win.
+
+``TriangularAccel``
+    Prefix-exact variant exploiting the triangular structure of the
+    Parareal trajectory map (block ``i``'s fine solve depends only on
+    blocks ``< i``): mixing is restricted to the not-yet-exact
+    ``x_tail`` block suffix — the serial-exact leading blocks commit
+    the raw iterate and are excluded from the secant system, and the
+    coarse component is never mixed.  By induction the protected prefix
+    stays exactly the serial solve's (a capped run returns the bitwise
+    serial result), which is what lets it compose with ``ExactPrefix``
+    truncation without freezing mixed values — the conservative choice;
+    :class:`AndersonAccel` is the stronger accelerator (see the
+    interaction table in docs/acceleration.md).
+
+Driver notes
+------------
+
+* The **engine** (:func:`repro.core.engine.run_parareal`) applies the
+  accelerator inside the one shared refinement body, *after* the
+  corrector sweep and convergence-gate masking, with the live-block
+  mask of the active window — so mixing composes with per-sample gating
+  and, for ``prefix_exact`` accelerators, with ``ExactPrefix``
+  truncation and ``ResidualWindow``, all with no new host syncs.
+  Truncating policies freeze blocks on the provable serial-prefix
+  schedule — a theorem about the plain iteration — so the engine
+  refuses to pair them with joint mixing (``AndersonAccel``), which
+  breaks that invariant; use ``TriangularAccel`` there, or run
+  ``AndersonAccel`` untruncated (``FixedBudget``).  The convergence
+  residual is recomputed post-mix (mixing moves the final block, and
+  the gate must see what was actually committed).
+* The **sharded** driver inherits the engine loop unchanged: mixing is
+  deterministic elementwise math over replicated carries, so every
+  device computes the same mixed state.  Straggler reuse
+  (``carry_fine_results``) is incompatible — stale fine results are not
+  iterates of the mixed sequence — and raises.
+* The **wavefront** distributes one block per device with no central
+  iterate history, so accelerating accelerators raise there (an
+  explicit error beats a silent no-op).
+* The **serving engine** applies the same seam in its per-quantized-
+  frontier step programs; the accelerator state rides the micro-batch
+  (reset per lane on admission via :meth:`Accelerator.reset_lanes`) and
+  the residual fetch is unchanged — still exactly one host sync per
+  refinement.
+
+Frozen-content invariant: wherever a driver freezes content — the
+truncated prefix, window-masked blocks, gate-masked converged lanes —
+``z_new == z_prev`` bitwise, hence ``f = 0``, and ``apply`` masks its
+history columns by the same live mask, so the mixed value is exactly
+``z_prev``: frozen content stays bitwise untouched through mixing.
+
+Cost-model note: mixing adds **zero model evals**, so
+:class:`repro.core.engine.IterationCost` is unchanged per iteration —
+the speedup is entirely fewer iterations, which the serving layer's
+:class:`IterationEMA` learns from completions and
+``predict_completion`` then reflects (the EMA prior before any
+completion is ``max_iters``, an upper bound — the same conservative
+semantics as ``ResidualWindow.predict_evals``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AccelState", "Accelerator", "NoAccel", "AndersonAccel",
+           "TriangularAccel", "resolve_accel"]
+
+
+class AccelState(NamedTuple):
+    """Loop carry of an accelerating :class:`Accelerator` (``None`` under
+    :class:`NoAccel` — an empty pytree, so unaccelerated compiled carries
+    are unchanged).
+
+    ``z`` is the joint iterate ``stack([x_tail, prev_coarse])`` of shape
+    ``(2, B, ...)`` — or ``(2, B, K, ...)`` per sample — and the rings
+    hold its last ``m`` differences (newest last, zero-filled until the
+    history warms up; ``count`` gates which columns are valid).
+    """
+    dz: jnp.ndarray      # (m, 2, B, [K,] ...) iterate-difference ring
+    df: jnp.ndarray      # (m, 2, B, [K,] ...) residual-difference ring
+    z_last: jnp.ndarray  # (2, B, [K,] ...) previous apply's input iterate
+    f_last: jnp.ndarray  # (2, B, [K,] ...) previous apply's residual
+    count: jnp.ndarray   # int32 () or (K,) — mixing steps applied so far
+
+
+def _live_mask(live: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a live-block mask against a joint iterate ``(2, B, ...)``.
+
+    ``live`` is bool over the block axis — ``(B,)``, or ``(B, K)`` when
+    the window bound is per-sample — aligned to ``z``'s axis 1.
+    """
+    return live.reshape((1,) + live.shape + (1,) * (z.ndim - 1 - live.ndim))
+
+
+@dataclasses.dataclass(frozen=True)
+class Accelerator:
+    """The fixed-point-acceleration seam every SRDS driver consumes.
+
+    Subclasses override :meth:`_mix`; the class-level flags tell drivers
+    what the accelerator needs and what it guarantees:
+
+    ``accelerates``
+        whether :meth:`apply` mixes at all (drivers skip state plumbing
+        entirely when False, keeping compiled carries unchanged).
+    ``exact``
+        whether results are guaranteed identical to the unaccelerated
+        engine (only :class:`NoAccel`; accelerated modes are
+        tolerance-equivalent, with a measured error bound).
+    ``prefix_exact``
+        whether mixing preserves the serial-prefix invariant ("block
+        ``i`` is exactly the serial solve after ``i + 1`` refinements")
+        that truncating :class:`~repro.core.window.FrontierPolicy`
+        schedules are built on.  Joint mixing (:class:`AndersonAccel`)
+        does not — a truncating policy would freeze not-yet-converged
+        mixed values as if they were exact, and the run diverges — so
+        the engine refuses that pairing; :class:`TriangularAccel`
+        restores the invariant by construction.
+    """
+
+    name = "accel"
+    accelerates = False
+    exact = True
+    prefix_exact = True
+
+    # ---------------------------------------------------------- lifecycle
+
+    def history_depth(self, max_iters: int) -> int:
+        """Ring length ``m`` for a run capped at ``max_iters``."""
+        return 0
+
+    def init_state(self, z: jnp.ndarray, max_iters: int,
+                   batched: bool = False) -> Optional[AccelState]:
+        """Fresh carry for a joint iterate shaped like ``z`` (``(2, B,
+        ...)``, or ``(2, B, K, ...)`` with ``batched``).  ``None`` when
+        not accelerating."""
+        if not self.accelerates:
+            return None
+        m = self.history_depth(max_iters)
+        ring = jnp.zeros((m,) + z.shape, z.dtype)
+        count = jnp.zeros((z.shape[2],), jnp.int32) if batched \
+            else jnp.int32(0)
+        return AccelState(ring, ring, jnp.zeros_like(z), jnp.zeros_like(z),
+                          count)
+
+    def reset_lanes(self, state: Optional[AccelState],
+                    new_mask) -> Optional[AccelState]:
+        """Zero the history of newly-(re)admitted lanes (serving engine:
+        a recycled slot's old transients must not mix into the next
+        request).  ``new_mask`` is bool ``(K,)`` over the sample axis;
+        ``count = 0`` gates the zeroed rings out until they re-warm."""
+        if state is None:
+            return None
+        nm = jnp.asarray(new_mask)
+        ring_m = nm.reshape((1, 1, 1) + nm.shape
+                            + (1,) * (state.dz.ndim - 4))
+        z_m = nm.reshape((1, 1) + nm.shape + (1,) * (state.z_last.ndim - 3))
+        return AccelState(
+            jnp.where(ring_m, jnp.zeros_like(state.dz), state.dz),
+            jnp.where(ring_m, jnp.zeros_like(state.df), state.df),
+            jnp.where(z_m, jnp.zeros_like(state.z_last), state.z_last),
+            jnp.where(z_m, jnp.zeros_like(state.f_last), state.f_last),
+            jnp.where(nm, jnp.zeros_like(state.count), state.count))
+
+    # -------------------------------------------------------------- apply
+
+    def apply(self, state: Optional[AccelState], z_prev: jnp.ndarray,
+              z_new: jnp.ndarray, *, live=None, batched: bool = False):
+        """One mixing step: given the pre-refinement joint iterate
+        ``z_prev`` and the refinement's raw output ``z_new = T(z_prev)``,
+        return ``(z_mixed, new_state)`` — the iterate the driver should
+        commit.  ``live`` (optional bool over the block axis, ``(B,)`` or
+        ``(B, K)``) masks mixing to the active window: frozen blocks'
+        residuals and history columns are zeroed so their content stays
+        bitwise ``z_prev``.  With ``batched`` the iterate carries a
+        sample axis at position 2 and mixing runs independently per
+        sample (vmapped — converged/frozen lanes see ``f = 0`` and are
+        fixed points of the mix)."""
+        if not self.accelerates:
+            return z_new, state
+        if not batched:
+            return self._apply_single(state, z_prev, z_new, live)
+        live_ax = None if live is None or live.ndim == 1 else 1
+        return jax.vmap(
+            self._apply_single,
+            in_axes=(AccelState(dz=3, df=3, z_last=2, f_last=2, count=0),
+                     2, 2, live_ax),
+            out_axes=(2, AccelState(dz=3, df=3, z_last=2, f_last=2,
+                                    count=0)),
+        )(state, z_prev, z_new, live)
+
+    # ------------------------------------------------------------ internals
+
+    def _apply_single(self, s: AccelState, z_prev: jnp.ndarray,
+                      z_new: jnp.ndarray, live):
+        f = z_new - z_prev
+        if live is not None:
+            lm = _live_mask(live, z_prev)
+            f = jnp.where(lm, f, jnp.zeros_like(f))
+        m = s.dz.shape[0]
+        # ring push is gated on count >= 1: the first apply has no prior
+        # (z_last, f_last) pair, so the zero-initialized rings stay zero
+        # and the valid-column mask below keeps them out of the solve
+        push = s.count >= 1
+        dz_col = z_prev - s.z_last
+        df_col = f - s.f_last
+        dz = jnp.where(push, jnp.concatenate([s.dz[1:], dz_col[None]]), s.dz)
+        df = jnp.where(push, jnp.concatenate([s.df[1:], df_col[None]]), s.df)
+        # columns valid so far (newest last); live-mask them at use time so
+        # blocks frozen *since* a column was recorded cannot be perturbed
+        valid = (jnp.arange(m) >= m - jnp.minimum(s.count, m)).astype(
+            f.dtype).reshape((m,) + (1,) * f.ndim)
+        dz_u = dz * valid
+        df_u = df * valid
+        if live is not None:
+            dz_u = jnp.where(lm[None], dz_u, jnp.zeros_like(dz_u))
+            df_u = jnp.where(lm[None], df_u, jnp.zeros_like(df_u))
+        # protection (triangular variant): blocks outside the mask commit
+        # the raw iterate AND are excluded from the secant system — the
+        # least-squares solve must only see blocks whose committed sequence
+        # is the mixed sequence, or the recorded history violates the
+        # secant relations AA assumes and the mix diverges
+        pm = self._protect_mask(s, z_prev)
+        f_mix = f
+        if pm is not None:
+            f_mix = jnp.where(pm, f, jnp.zeros_like(f))
+            dz_u = jnp.where(pm[None], dz_u, jnp.zeros_like(dz_u))
+            df_u = jnp.where(pm[None], df_u, jnp.zeros_like(df_u))
+        z_mixed = self._mix(s, z_prev, z_new, f_mix, dz_u, df_u)
+        if pm is not None:
+            z_mixed = jnp.where(pm, z_mixed, z_new)
+        if live is not None:
+            # bitwise guarantee for frozen blocks (not just f == 0):
+            # their committed value is exactly z_prev
+            z_mixed = jnp.where(lm, z_mixed, z_prev)
+        return z_mixed, AccelState(dz, df, z_prev, f, s.count + 1)
+
+    def _mix(self, s: AccelState, z_prev, z_new, f, dz_u, df_u):
+        raise NotImplementedError
+
+    def _protect_mask(self, s: AccelState, z_prev: jnp.ndarray):
+        """Optional bool mask over the joint iterate (broadcastable to its
+        shape): True where mixing may apply; masked-out entries commit the
+        raw ``z_new`` and are excluded from the secant system.  ``None``
+        (the default) mixes everywhere."""
+        return None
+
+    def _solve_gamma(self, f: jnp.ndarray, df_u: jnp.ndarray,
+                     reg: float) -> jnp.ndarray:
+        """Type-II AA coefficients: the regularized ``m×m`` normal
+        equations ``(Gm + lam·I) gamma = <df_i, f>`` with ``Gm[i, j] =
+        <df_i, df_j>``.  Zero/invalid columns give exactly ``gamma = 0``
+        (zero rhs rows through a finite solve), so the formula is uniform
+        across warm-up with no ``lax.cond``."""
+        m = df_u.shape[0]
+        cols = df_u.reshape(m, -1).astype(jnp.float32)
+        # column normalization: residual differences shrink by orders of
+        # magnitude per Parareal iteration, so the raw normal equations are
+        # hopelessly ill-conditioned in f32 — scale each column to unit
+        # norm (zero/invalid columns stay exactly zero) and unscale gamma
+        nrm = jnp.sqrt(jnp.sum(cols * cols, axis=1, keepdims=True))
+        scale = jnp.where(nrm > 0, nrm, jnp.ones_like(nrm))
+        colsn = cols / scale
+        gm = colsn @ colsn.T
+        rhs = colsn @ f.reshape(-1).astype(jnp.float32)
+        lam = reg * (jnp.trace(gm) / m) + jnp.float32(1e-30)
+        gamma = jnp.linalg.solve(gm + lam * jnp.eye(m, dtype=jnp.float32),
+                                 rhs)
+        return gamma / scale[:, 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class NoAccel(Accelerator):
+    """No mixing: ``apply`` returns the refinement's raw output and the
+    loop carries no accelerator state — byte-identical to the pre-seam
+    engine (the default everywhere)."""
+
+    name = "no_accel"
+    accelerates = False
+    exact = True
+
+
+@dataclasses.dataclass(frozen=True)
+class AndersonAccel(Accelerator):
+    """Sliding-window type-II Anderson mixing of the refinement fixed
+    point.
+
+    ``depth`` is the history window ``m`` — how many past
+    iterate/residual differences the least-squares extrapolation sees.
+    Small depths (2-3) are the sweet spot for Parareal: the map is
+    strongly contracting in its leading blocks, deep histories mostly
+    add stale transients (and ``m×m`` solve conditioning issues) without
+    better search directions.  ``warmup`` delays the first *mixed*
+    commit (history still records): Parareal's first refinements are
+    strongly nonlinear — residuals drop orders of magnitude per
+    iteration — and extrapolating over that transient hurts more than it
+    helps; mixing starts once the map is in its slowly-contracting
+    near-linear tail, which is exactly where AA shines.  ``reg`` scales
+    the Tikhonov term of the normal-equations solve relative to
+    ``trace(G)/m``; ``damping`` is the AA beta (``1.0`` = undamped, the
+    standard choice — lower it only if mixed iterates visibly
+    overshoot).
+    """
+
+    depth: int = 2
+    warmup: int = 3
+    reg: float = 1e-8
+    damping: float = 1.0
+
+    name = "anderson"
+    accelerates = True
+    exact = False
+    prefix_exact = False
+
+    def history_depth(self, max_iters: int) -> int:
+        return max(1, min(int(self.depth), int(max_iters)))
+
+    def _mix(self, s, z_prev, z_new, f, dz_u, df_u):
+        gamma = self._solve_gamma(f, df_u, self.reg)
+        beta = jnp.asarray(self.damping, jnp.float32)
+        corr = beta * f.astype(jnp.float32) - jnp.tensordot(
+            gamma, (dz_u + beta * df_u).astype(jnp.float32), axes=1)
+        mixed = z_prev + corr.astype(z_prev.dtype)
+        # warm-up: commit the raw iterate while the transient is still
+        # nonlinear (the rings keep recording, so the first mixed step
+        # already sees a full history)
+        return jnp.where(s.count < self.warmup, z_new, mixed)
+
+
+@dataclasses.dataclass(frozen=True)
+class TriangularAccel(AndersonAccel):
+    """Prefix-exact triangular Anderson mixing (ParaTAA-inspired): the
+    same sliding-window extrapolation as :class:`AndersonAccel`,
+    restricted by a *triangular protection* mask that exploits the
+    block-triangular structure of the Parareal trajectory map (block
+    ``i``'s fine solve depends only on blocks ``< i``): ``x_tail``
+    blocks ``<= count + 1`` commit the raw iterate and are excluded from
+    the secant system, and the ``prev_coarse`` component is never mixed
+    (it is recomputed raw every sweep, so it stays the coarse solve of
+    the committed x-chain).  By induction the protected prefix is
+    exactly the serial solve's, marching one block per refinement — so a
+    run that reaches the iteration cap returns the **bitwise-identical**
+    serial result (Parareal's finite convergence), and composition with
+    ``ExactPrefix`` truncation freezes serial values, never mixed ones.
+
+    This is the *conservative* variant: mixing only the not-yet-exact
+    block suffix is provably safe but measurably weaker than
+    :class:`AndersonAccel`'s joint-state mixing — on strongly
+    contracting problems the protection marches exactness across blocks
+    at the serial rate and the suffix mix adds little (the bench's
+    iteration-cut gate targets :class:`AndersonAccel`; see
+    docs/acceleration.md for when to pick which).  The aggressive
+    alternative — mixing everything and only *committing* raw on the
+    protected prefix — is tempting but wrong: the joint map is not
+    strictly triangular (the corrector for block ``i`` reads
+    ``prev_coarse[i]``), so mixed coarse values corrupt the protected
+    prefix one call later and the iteration diverges."""
+
+    name = "triangular"
+    accelerates = True
+    exact = False
+    prefix_exact = True
+
+    def _protect_mask(self, s, z_prev):
+        # mix only x_tail blocks beyond the serial prefix; never mix
+        # prev_coarse.  The joint map is NOT strictly triangular — the
+        # corrector for block i reads prev_coarse[i] (same index) — so a
+        # mixed prev_coarse corrupts the "already exact" premise one call
+        # later and the protected prefix pins wrong values (empirically:
+        # divergence).  Keeping prev_coarse raw makes it G(committed
+        # x-chain), and protecting x blocks <= count+1 closes the
+        # serial-prefix induction one block ahead of the commit.
+        b = z_prev.shape[1]
+        idx = jnp.arange(b, dtype=jnp.int32).reshape(
+            (1, b) + (1,) * (z_prev.ndim - 2))
+        comp = jnp.arange(2, dtype=jnp.int32).reshape(
+            (2,) + (1,) * (z_prev.ndim - 1))
+        return (comp == 0) & (idx > s.count + 1)
+
+
+def resolve_accel(accel) -> Accelerator:
+    """The one place ``accel=None`` maps onto the seam: ``None`` means
+    :class:`NoAccel` (bit-exact, no extra carry); anything else must be
+    an :class:`Accelerator`."""
+    if accel is None:
+        return NoAccel()
+    if not isinstance(accel, Accelerator):
+        raise TypeError(f"accel must be an Accelerator, got "
+                        f"{type(accel).__name__}")
+    return accel

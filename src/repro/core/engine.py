@@ -79,6 +79,16 @@ class SRDSConfig:
                   are masked to no-ops) and the loop exits only when every
                   sample converged or ``max_iters`` hits.  Off (the default):
                   a single joint-norm residual gates the whole batch.
+    accel:        a :class:`repro.core.accel.Accelerator` mixing the
+                  refinement fixed point (Anderson/triangular
+                  acceleration — fewer iterations to the same tolerance,
+                  zero extra model evals per iteration).  ``None`` (the
+                  default) resolves to ``NoAccel``: no mixing, no extra
+                  loop carry, bit-identical to the pre-seam engine.
+                  Accelerated modes are *approximate* in the window
+                  sense: converged samples match the serial solve to
+                  tolerance, with the error measured and CI-asserted
+                  (see :mod:`repro.core.accel`).
     """
 
     num_blocks: Optional[int] = None
@@ -101,6 +111,10 @@ class SRDSConfig:
     # bodies once; also useful for fixed-budget sampling).
     fixed_iters: bool = False
     scan_unroll: bool = False
+    # Fixed-point accelerator (repro.core.accel.Accelerator); None resolves
+    # to NoAccel.  AndersonAccel(depth=m) / TriangularAccel() opt into
+    # approximate iteration-count acceleration.
+    accel: Optional[object] = None
 
 
 class SRDSResult(NamedTuple):
@@ -558,6 +572,11 @@ class RefineState(NamedTuple):
     lo_hist: Optional[jnp.ndarray] = None
                                # window lower bound used by refinement p,
                                # int32 (max_iters,[ K]), -1 beyond iters
+    # --- fixed-point-acceleration carry (None unless the accelerator
+    # mixes — see repro.core.accel; None is an empty pytree, so
+    # unaccelerated loop carries stay byte-identical to the pre-seam ones)
+    accel: Optional[object] = None
+                               # repro.core.accel.AccelState ring buffers
 
 
 FineFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
@@ -597,7 +616,7 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
                  fixed_iters: bool = False, scan_unroll: bool = False,
                  constrain=None, carry_fine_results: bool = False,
                  batched: bool = False, truncate: bool = False,
-                 window=None) -> RefineState:
+                 window=None, accel=None) -> RefineState:
     """The complete Parareal refinement loop (Alg 1 minus the fine solves).
 
     ``fine_fn(x_heads, p, y_prev) -> y`` computes the fine-solve results
@@ -645,9 +664,43 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
     bound and per-refinement window history live in the returned state's
     ``block_resid`` / ``window_lo`` / ``lo_hist`` fields (None for
     non-residual policies).
+
+    ``accel`` is a :class:`repro.core.accel.Accelerator` mixing the
+    refinement fixed point: after each refinement's corrector sweep (and
+    convergence-gate masking) the joint iterate ``(x_tail, prev_coarse)``
+    is extrapolated over the accelerator's ring-buffer history — fewer
+    iterations to tolerance, zero extra model evals.  The convergence
+    residual is recomputed from the *mixed* state (the gate must see what
+    is committed) and the live-window mask keeps frozen blocks bitwise
+    untouched.  ``None`` resolves to ``NoAccel`` (no mixing, no extra
+    carry — bit-identical).  Incompatible with ``carry_fine_results``
+    (stale fine results are not iterates of the mixed sequence) and —
+    unless the accelerator is ``prefix_exact`` (``TriangularAccel``) —
+    with truncating frontier policies, whose provable-prefix schedule is
+    a theorem about the plain iteration only.
     """
+    from .accel import resolve_accel
     from .window import resolve_policy
     policy = resolve_policy(window, truncate)
+    acc = resolve_accel(accel)
+    accel_on = acc.accelerates
+    if accel_on and carry_fine_results:
+        raise ValueError("an accelerating Accelerator is incompatible with "
+                         "straggler reuse (carry_fine_results): stale fine "
+                         "results are not iterates of the mixed sequence.")
+    if accel_on and policy.truncates and not acc.prefix_exact:
+        # truncating policies freeze blocks on the provable serial-prefix
+        # schedule ("block i is exact after i+1 refinements") — a theorem
+        # about the PLAIN iteration that joint mixing invalidates, so the
+        # frozen prefix would pin not-yet-converged mixed values and the
+        # committed trajectory diverges.  TriangularAccel restores the
+        # invariant by construction.
+        raise ValueError(
+            f"{type(acc).__name__} does not preserve the serial-prefix "
+            f"invariant that truncating frontier policies "
+            f"({type(policy).__name__}) rely on; use TriangularAccel "
+            f"(prefix-exact mixing), or disable truncation "
+            f"(truncate=False / window=FixedBudget()).")
     truncate = policy.truncates
     windowed = policy.needs_block_residuals
     if truncate and constrain is not None:
@@ -687,8 +740,11 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
         loh0 = jnp.full((max_iters,) + kd, -1, jnp.int32)
     else:
         br0 = lo0 = loh0 = None
+    astate0 = acc.init_state(jnp.stack([x_tail, x_tail]), max_iters,
+                             batched=batched) if accel_on else None
     init = RefineState(jnp.int32(0), x_tail, x_tail, y_prev0,
-                       delta0, hist0, iters0, active0, br0, lo0, loh0)
+                       delta0, hist0, iters0, active0, br0, lo0, loh0,
+                       astate0)
 
     def cond(c: RefineState):
         return jnp.logical_and(c.p < max_iters, jnp.any(c.active))
@@ -716,6 +772,23 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
             m = _batch_mask(c.active, new_tail)
             new_tail = jnp.where(m, new_tail, c.x_tail)
             cur_all = jnp.where(m, cur_all, c.prev_coarse)
+        if accel_on:
+            # mix the joint fixed-point iterate AFTER gate masking (frozen
+            # lanes are fixed points of the mix) with the live-window mask
+            # (the truncated prefix must stay bitwise untouched); the
+            # convergence residual is recomputed from the committed state
+            live = jnp.arange(B, dtype=jnp.int32) >= f if f else None
+            z_mix, astate = acc.apply(
+                c.accel, jnp.stack([c.x_tail, c.prev_coarse]),
+                jnp.stack([new_tail, cur_all]), live=live, batched=batched)
+            new_tail, cur_all = cb(z_mix[0]), cb(z_mix[1])
+            if gate:
+                new_tail = jnp.where(m, new_tail, c.x_tail)
+                cur_all = jnp.where(m, cur_all, c.prev_coarse)
+            resid = convergence_norm(new_tail[-1] - c.x_tail[-1], norm,
+                                     batched=batched)
+        else:
+            astate = c.accel
 
         if gate:
             delta = jnp.where(c.active, resid, c.delta)
@@ -734,7 +807,7 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
             y_keep = c.y_prev
         return RefineState(c.p + 1, new_tail, cur_all, y_keep, delta, history,
                            iters, active, c.block_resid, c.window_lo,
-                           c.lo_hist)
+                           c.lo_hist, astate)
 
     def body_windowed(c: RefineState, f: int) -> RefineState:
         """One refinement under a residual-driven window policy: the
@@ -756,6 +829,34 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
             m = _batch_mask(c.active, new_tail)
             new_tail = jnp.where(m, new_tail, c.x_tail)
             cur_all = jnp.where(m, cur_all, c.prev_coarse)
+        if accel_on:
+            # mix with the dynamic window's live mask (blocks below lo_eff
+            # stay bitwise frozen through mixing), then recompute the
+            # full-width per-block residuals and the convergence residual
+            # from the committed (mixed) state — frozen blocks are bitwise
+            # unchanged, so their recomputed residual is exactly 0
+            idx = jnp.arange(B, dtype=jnp.int32)
+            live = idx.reshape((B,) + (1,) * lo_eff.ndim) >= lo_eff
+            z_mix, astate = acc.apply(
+                c.accel, jnp.stack([c.x_tail, c.prev_coarse]),
+                jnp.stack([new_tail, cur_all]), live=live, batched=batched)
+            new_tail, cur_all = z_mix[0], z_mix[1]
+            if gate:
+                new_tail = jnp.where(m, new_tail, c.x_tail)
+                cur_all = jnp.where(m, cur_all, c.prev_coarse)
+            br = blockwise_norm(new_tail - c.x_tail, norm, batched=batched)
+            resid = br[-1]
+        else:
+            astate = c.accel
+            # full-width per-block residuals: the statically-skipped prefix
+            # is bitwise frozen, i.e. residual 0
+            if f:
+                br = jnp.concatenate(
+                    [jnp.zeros((f,) + br_sfx.shape[1:], br_sfx.dtype),
+                     br_sfx], axis=0)
+            else:
+                br = br_sfx
+        if gate:
             delta = jnp.where(c.active, resid, c.delta)
             history = c.history.at[c.p].set(
                 jnp.where(c.active, resid, c.history[c.p]))
@@ -765,14 +866,6 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
             history = c.history.at[c.p].set(resid)
             iters = c.iters + 1
         active = jnp.logical_and(c.active, still_refining(delta, tol))
-        # full-width per-block residuals: the statically-skipped prefix is
-        # bitwise frozen, i.e. residual 0
-        if f:
-            br = jnp.concatenate(
-                [jnp.zeros((f,) + br_sfx.shape[1:], br_sfx.dtype), br_sfx],
-                axis=0)
-        else:
-            br = br_sfx
         new_lo = policy.advance(lo_eff, br, B)
         if gate:
             # converged samples' window state freezes with them
@@ -783,7 +876,8 @@ def run_parareal(G, fine_fn: FineFn, x_init: jnp.ndarray,
         else:
             lo_hist = c.lo_hist.at[c.p].set(lo_eff)
         return RefineState(c.p + 1, new_tail, cur_all, c.y_prev, delta,
-                           history, iters, active, br, new_lo, lo_hist)
+                           history, iters, active, br, new_lo, lo_hist,
+                           astate)
 
     if truncate:
         # Unrolled: refinement p's suffix shape is static, so the fine

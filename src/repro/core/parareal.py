@@ -44,6 +44,10 @@ def srds_sample(model_fn: ModelFn, sched: DiffusionSchedule, solver: SolverConfi
     result's ``window_history`` records the window lower bound each
     refinement actually ran with (feed it to
     :func:`repro.core.engine.windowed_evals` for the realized eval cost).
+    ``cfg.accel`` (a :class:`repro.core.accel.Accelerator`) mixes the
+    refinement fixed point — fewer iterations to the same tolerance at
+    zero extra model evals per iteration; ``None`` keeps the bit-exact
+    unaccelerated loop.
     """
     n = sched.num_steps
     B, S = resolve_blocks(n, cfg.num_blocks)
@@ -78,7 +82,7 @@ def srds_sample(model_fn: ModelFn, sched: DiffusionSchedule, solver: SolverConfi
                        constrain=_cb if cfg.block_sharding is not None
                        else None,
                        batched=cfg.per_sample, truncate=cfg.truncate,
-                       window=cfg.window)
+                       window=cfg.window, accel=cfg.accel)
 
     traj = None
     if return_trajectory:

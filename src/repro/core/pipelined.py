@@ -42,6 +42,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 
+from .accel import resolve_accel
 from .denoiser import as_denoiser
 from .engine import (SRDSConfig, assemble_result, convergence_norm,
                      has_converged, parareal_update, resolve_blocks,
@@ -148,7 +149,7 @@ def srds_sharded_local(model_fn: ModelFn, sched: DiffusionSchedule,
                        scan_unroll=cfg.scan_unroll,
                        carry_fine_results=straggler_fn is not None,
                        batched=cfg.per_sample, truncate=cfg.truncate,
-                       window=cfg.window)
+                       window=cfg.window, accel=cfg.accel)
     return out.x_tail[-1], out.iters, out.delta, out.history
 
 
@@ -278,6 +279,15 @@ def srds_pipelined_local(model_fn: ModelFn, sched: DiffusionSchedule,
     eval_fn = as_denoiser(model_fn).inner_eval()
     if n % d != 0:
         raise ValueError(f"N={n} must be divisible by device count {d}")
+    if resolve_accel(cfg.accel).accelerates:
+        # one block per device, no central iterate history: the joint-state
+        # mixing the Accelerator seam defines has nowhere to live on the
+        # ring — refuse loudly rather than silently not accelerating
+        raise ValueError("the wavefront pipeline does not support "
+                         "accelerating Accelerators (per-block state is "
+                         "distributed with no central iterate history); "
+                         "use srds_sample or the sharded driver, or pass "
+                         "accel=None")
     s_steps = n // d                       # fine steps per block
     evals_per_step = solver.evals_per_step
     max_iters = cfg.max_iters if cfg.max_iters is not None else d

@@ -10,6 +10,7 @@ CPU test time).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -29,6 +30,12 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# backends where falling back to the reference path is expected and
+# silent: TPU runs the compiled kernels, CPU is the known test/dev tier
+_QUIET_BACKENDS = ("tpu", "cpu")
+_warned_degraded = False
+
+
 def fused_default() -> bool:
     """Whether the fused elementwise Pallas path is on by default.
 
@@ -37,8 +44,28 @@ def fused_default() -> bool:
     (Python-executed, for semantics validation), which would dominate the
     sampler's runtime, so CPU/GPU default to the pure-jnp reference path.
     ``FORCE_REF`` force-disables the kernels regardless of backend.
+
+    On an accelerator backend that is neither (GPU/ROCm), the silent
+    fallback is a real perf surprise — the deployment paid for an
+    accelerator and the fused update quietly runs unfused — so the first
+    call emits one structured ``UserWarning`` naming the backend and the
+    knobs (``use_fused`` / ``FORCE_REF``); subsequent calls stay silent.
     """
-    return (not FORCE_REF) and jax.default_backend() == "tpu"
+    backend = jax.default_backend()
+    global _warned_degraded
+    if not FORCE_REF and backend not in _QUIET_BACKENDS \
+            and not _warned_degraded:
+        _warned_degraded = True
+        warnings.warn(
+            f"repro.kernels: fused Pallas elementwise path is OFF by "
+            f"default on backend={backend!r} (compiled kernels ship for "
+            f"TPU only; elsewhere they exist in interpret mode, which "
+            f"would dominate runtime) — the pure-jnp reference path is "
+            f"used instead.  Pass use_fused=True to force the kernels, "
+            f"or set repro.kernels.ops.FORCE_REF=True to silence this "
+            f"by pinning the reference path.",
+            UserWarning, stacklevel=2)
+    return (not FORCE_REF) and backend == "tpu"
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,114 @@
+"""Runtime platform configuration: XLA flags + backend selection in one
+place, applied BEFORE the JAX backend initializes.
+
+``configure_platform`` is the launch-time front door for the knobs every
+deployment (and benchmark emitter) otherwise re-derives by hand:
+
+* ``platform`` — pin the JAX backend (``jax.config.update(
+  'jax_platform_name', ...)``).  On ``"gpu"`` it also installs the XLA
+  GPU performance preset (ROADMAP "GPU parity" item): triton softmax
+  fusion, triton gemms, async collectives, the latency-hiding scheduler
+  and the highest-priority async stream — the flag set upstream JAX
+  documents for GPU serving workloads.
+* ``host_device_count`` — fake N host devices via
+  ``--xla_force_host_platform_device_count`` (the CPU-backed mesh trick
+  the dry-run and the multi-process tests already use), so sharded
+  drivers and mesh code run on a laptop.
+
+Flags are **merged** into any existing ``XLA_FLAGS`` (ours win on
+conflict, everything else is preserved) — clobbering would silently undo
+a dry-run's fake-device count or a user's own tuning.
+
+Ordering matters: XLA reads the environment once, when the backend
+first initializes.  Importing JAX is fine; *running* anything is not.
+``configure_platform`` raises if the backend is already up rather than
+half-apply (an env var mutated after init is a silent no-op — the
+worst failure mode for a performance preset).  Benchmark emitters call
+it from their ``--platform`` / ``--host-devices`` CLI flags before any
+device work (see docs/benchmarks.md).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+__all__ = ["GPU_PERF_FLAGS", "configure_platform"]
+
+# the XLA GPU performance preset (upstream gpu_performance_tips set):
+# fusion + async collectives + latency hiding, for serving-shaped work
+GPU_PERF_FLAGS = (
+    "--xla_gpu_enable_triton_softmax_fusion=true",
+    "--xla_gpu_triton_gemm_any=True",
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
+def _merge_xla_flags(new_flags) -> str:
+    """Merge ``new_flags`` into XLA_FLAGS, replacing same-name flags and
+    preserving everything else (order: survivors first, ours last)."""
+    names = {f.split("=", 1)[0] for f in new_flags}
+    kept = [f for f in os.environ.get("XLA_FLAGS", "").split()
+            if f.split("=", 1)[0] not in names]
+    merged = " ".join(kept + list(new_flags))
+    os.environ["XLA_FLAGS"] = merged
+    return merged
+
+
+def _backend_initialized() -> bool:
+    """True once the JAX backend is up (env mutations no longer apply).
+
+    Probes private-ish state defensively across JAX versions: absent
+    introspection, assume NOT initialized (the caller is about to set
+    env vars, which is harmless when wrong but load-bearing when
+    right)."""
+    try:
+        import jax._src.xla_bridge as xb
+        backends = getattr(xb, "_backends", None)
+        return bool(backends)
+    except Exception:
+        return False
+
+
+def configure_platform(platform: Optional[str] = None,
+                       host_device_count: Optional[int] = None) -> dict:
+    """Configure the JAX runtime for ``platform`` before backend init.
+
+    Args:
+      platform: ``"cpu"`` | ``"gpu"`` | ``"tpu"`` — pins
+        ``jax_platform_name``.  ``"gpu"`` additionally merges
+        :data:`GPU_PERF_FLAGS` into ``XLA_FLAGS``.  ``None`` leaves the
+        backend choice to JAX (useful when only faking host devices).
+      host_device_count: fake this many host (CPU) devices via
+        ``--xla_force_host_platform_device_count`` — the local-mesh
+        substrate for the sharded/wavefront drivers and the serving
+        engine's ``data_axis`` on machines without real accelerators.
+
+    Returns a dict of what was applied (``platform``, ``xla_flags``) —
+    handy for benchmark metadata blocks.
+
+    Raises ``RuntimeError`` if the JAX backend already initialized:
+    XLA reads the environment exactly once, so a late call would be a
+    silent no-op for the flag-carried settings.
+    """
+    if platform is not None and platform not in ("cpu", "gpu", "tpu"):
+        raise ValueError(f"platform must be cpu|gpu|tpu, got {platform!r}")
+    if _backend_initialized():
+        raise RuntimeError(
+            "configure_platform() after the JAX backend initialized: "
+            "XLA_FLAGS are read once at backend init, so this call would "
+            "silently not apply — call it before any jax computation "
+            "(importing jax is fine)")
+    flags = []
+    if host_device_count is not None:
+        flags.append("--xla_force_host_platform_device_count="
+                     f"{int(host_device_count)}")
+    if platform == "gpu":
+        flags.extend(GPU_PERF_FLAGS)
+    xla_flags = _merge_xla_flags(flags) if flags \
+        else os.environ.get("XLA_FLAGS", "")
+    if platform is not None:
+        import jax
+        jax.config.update("jax_platform_name", platform)
+    return {"platform": platform, "xla_flags": xla_flags}

@@ -82,7 +82,11 @@ What the engine does / does not guarantee:
   group window is shared, so batch-mates influence *which* blocks freeze
   and results are approximate (bounded by ``window_tol``) and
   composition-dependent — exactness-critical workloads keep the default
-  ``ExactPrefix``;
+  ``ExactPrefix``.  Building the engine with an accelerating ``accel``
+  (:mod:`repro.core.accel`) similarly trades exactness for iterations:
+  mixed iterates are tolerance-equivalent, not bitwise, and mixing is
+  per-lane (vmapped), so batch-mates still cannot perturb each other
+  beyond the existing window/gemm caveats;
 * eval accounting is *effective* (per-active-slot): lockstep SPMD still
   computes masked lanes, so physical compute equals effective compute only
   while the queue keeps every slot busy — exactly the heavy-traffic regime
@@ -126,7 +130,9 @@ import numpy as np
 from repro import compat
 from repro.analysis.markers import hot_loop
 from repro.serve.clock import Clock, VirtualClock
-from repro.core.engine import (IterationCost, coarse_init_sweep,
+from repro.core.accel import resolve_accel
+from repro.core.engine import (IterationCost, blockwise_norm,
+                               coarse_init_sweep, convergence_norm,
                                iteration_cost, predicted_evals,
                                prefix_frontier, resolve_blocks,
                                resolve_fused, suffix_refinement,
@@ -339,6 +345,12 @@ class _MicroBatch:
         self.x_init = jnp.zeros((K,) + shape, engine.dtype)
         self.x_tail = jnp.zeros((self.B, K) + shape, engine.dtype)
         self.prev_coarse = jnp.zeros_like(self.x_tail)
+        # accelerator mixing state (None under NoAccel — the step
+        # programs then neither take nor return it, keeping them
+        # byte-identical to the unaccelerated engine)
+        self.astate = engine.accel.init_state(
+            jnp.stack([self.x_tail, self.x_tail]), self.max_iters,
+            batched=True) if engine.accel.accelerates else None
         self.active = np.zeros((K,), bool)
         self.slots: List[Optional[_Slot]] = [None] * K
         self.newly: List[int] = []
@@ -484,6 +496,12 @@ class _MicroBatch:
             m[self.newly] = True
             self.x_tail, self.prev_coarse = self.init_fn(
                 self.x_init, self.x_tail, self.prev_coarse, jnp.asarray(m))
+            if self.astate is not None:
+                # a recycled slot's mixing history belongs to its previous
+                # tenant: zero it so old transients never mix into the
+                # freshly admitted request
+                self.astate = self.engine.accel.reset_lanes(
+                    self.astate, jnp.asarray(m))
             init_eff = len(self.newly) * self.cost.init_evals
             phys += K * self.cost.init_evals
             for k in self.newly:
@@ -496,10 +514,16 @@ class _MicroBatch:
             # quantized window floor, blocks [minf, lo) freeze by masking,
             # and the (B,) group block residual rides the one fetch
             lo, minf = self._window_frontier()
-            self.x_tail, self.prev_coarse, fetch = \
-                self.step_for.windowed(minf)(
-                    self.x_init, self.x_tail, self.prev_coarse, amask,
-                    jnp.int32(lo))
+            if self.astate is not None:
+                self.x_tail, self.prev_coarse, fetch, self.astate = \
+                    self.step_for.windowed(minf)(
+                        self.x_init, self.x_tail, self.prev_coarse, amask,
+                        jnp.int32(lo), self.astate)
+            else:
+                self.x_tail, self.prev_coarse, fetch = \
+                    self.step_for.windowed(minf)(
+                        self.x_init, self.x_tail, self.prev_coarse, amask,
+                        jnp.int32(lo))
             # effective = the window schedule every active lane actually
             # executes; physical = the compiled suffix width times K
             per_lane = self.cost.refine_evals_window(lo)
@@ -511,8 +535,14 @@ class _MicroBatch:
         else:
             minf = self._frontier() if self.engine.truncate else 0
             lo = minf
-            self.x_tail, self.prev_coarse, fetch = self.step_for(minf)(
-                self.x_init, self.x_tail, self.prev_coarse, amask)
+            if self.astate is not None:
+                self.x_tail, self.prev_coarse, fetch, self.astate = \
+                    self.step_for(minf)(
+                        self.x_init, self.x_tail, self.prev_coarse, amask,
+                        self.astate)
+            else:
+                self.x_tail, self.prev_coarse, fetch = self.step_for(minf)(
+                    self.x_init, self.x_tail, self.prev_coarse, amask)
             # effective = per-lane ideal (each lane truncated at its OWN
             # frontier when the engine truncates); physical = what the
             # lockstep program actually ran (K lanes at the group frontier)
@@ -656,6 +686,25 @@ class DiffusionSamplingEngine:
                     fused Pallas kernel, whose per-tile L1 partials feed
                     the ``(K,)`` convergence residual directly.  ``None``
                     (default) = on where supported (TPU), off elsewhere.
+      accel:        optional :class:`repro.core.accel.Accelerator` mixing
+                    the refinement fixed point (fewer iterations to the
+                    same tolerance, zero extra model evals per
+                    iteration).  ``None`` (default) keeps the bit-exact
+                    unaccelerated step programs byte-for-byte.  The
+                    mixing state rides each micro-batch (reset per lane
+                    on admission, so a recycled slot's history never
+                    leaks into the next request) and the residual fetch
+                    is untouched — still exactly one host sync per
+                    refinement.  Iteration savings are priced honestly:
+                    per-iteration ``IterationCost`` is unchanged (mixing
+                    is eval-free) and :class:`IterationEMA` learns the
+                    reduced per-tier iteration counts from completions,
+                    which ``predict_completion`` then reflects.  Pairing
+                    rule: a truncating frontier policy (the default
+                    ``ExactPrefix``, or ``ResidualWindow``) requires a
+                    ``prefix_exact`` accelerator (``TriangularAccel``);
+                    ``AndersonAccel`` needs ``truncate=False`` /
+                    ``window=FixedBudget()`` (see ``repro.core.accel``).
     """
 
     def __init__(self, model_fn: ModelFn, sample_shape: Tuple[int, ...],
@@ -669,7 +718,7 @@ class DiffusionSamplingEngine:
                  dtype=jnp.float32, truncate: bool = True,
                  truncate_quantum: Optional[int] = None,
                  use_fused: Optional[bool] = None, ema_alpha: float = 0.3,
-                 window=None, clock: Optional[Clock] = None):
+                 window=None, clock: Optional[Clock] = None, accel=None):
         self.model_fn = model_fn
         # every model eval goes through the sharding-aware Denoiser seam;
         # plain callables adapt for free (replicated specs).  A
@@ -711,6 +760,22 @@ class DiffusionSamplingEngine:
         self.window = pol
         self.truncate = pol.truncates
         self.truncate_quantum = truncate_quantum
+        # fixed-point acceleration seam (repro.core.accel): with NoAccel
+        # (the default) the step programs are byte-identical to the
+        # pre-seam engine; an accelerating Accelerator's mixing state
+        # rides each micro-batch and its step programs take/return it
+        self.accel = resolve_accel(accel)
+        if self.accel.accelerates and pol.truncates \
+                and not self.accel.prefix_exact:
+            # same pairing rule as run_parareal: truncation freezes blocks
+            # on the provable serial-prefix schedule, which joint mixing
+            # invalidates (see repro.core.accel)
+            raise ValueError(
+                f"{type(self.accel).__name__} does not preserve the "
+                f"serial-prefix invariant that the engine's truncating "
+                f"frontier policy ({type(pol).__name__}) relies on; use "
+                f"TriangularAccel, or build the engine with truncate=False "
+                f"/ window=FixedBudget().")
         self.use_fused = resolve_fused(use_fused)
         # buffer donation lets XLA reuse the trajectory-sized x_tail /
         # prev_coarse allocations across refinements; the CPU backend
@@ -1086,6 +1151,7 @@ class DiffusionSamplingEngine:
         starts = jnp.arange(B, dtype=jnp.int32) * S
         den, norm = self.denoiser, self.norm
         use_fused = self.use_fused
+        accel = self.accel
 
         def G(x, i0):
             # coarse sweep + corrector run outside any shard_map: the
@@ -1119,6 +1185,44 @@ class DiffusionSamplingEngine:
         step_win_cache: Dict[int, Callable] = {}
 
         def make_step(minf: int):
+            if accel.accelerates:
+                def step_accel(x_init, x_tail, prev_coarse, active, astate):
+                    """Accelerated refinement: the unaccelerated step's
+                    math, then one :meth:`Accelerator.apply` on the joint
+                    state (per-lane, live-masked to the compiled suffix).
+                    The residual is recomputed post-mix — the gate must
+                    see what was actually committed — and still rides the
+                    program's one output fetch."""
+                    heads = jnp.concatenate([x_init[None], x_tail[:-1]],
+                                            axis=0)
+                    if minf:
+                        heads = heads[minf:]
+                    y = fine(heads)
+                    new_tail, cur_all, _ = suffix_refinement(
+                        G, y, x_init, x_tail, prev_coarse, starts, minf,
+                        use_fused=use_fused, norm=norm, batched=True)
+                    m = active.reshape((1,) + active.shape
+                                       + (1,) * (x_tail.ndim - 2))
+                    new_tail = jnp.where(m, new_tail, x_tail)
+                    cur_all = jnp.where(m, cur_all, prev_coarse)
+                    live = (jnp.arange(B, dtype=jnp.int32) >= minf) \
+                        if minf else None
+                    z_mix, astate = accel.apply(
+                        astate, jnp.stack([x_tail, prev_coarse]),
+                        jnp.stack([new_tail, cur_all]), live=live,
+                        batched=True)
+                    # inactive lanes are fixed points of the mix (f = 0);
+                    # the re-mask makes that bitwise, not just numeric
+                    new_tail = jnp.where(m, z_mix[0], x_tail)
+                    cur_all = jnp.where(m, z_mix[1], prev_coarse)
+                    delta = convergence_norm(new_tail[-1] - x_tail[-1],
+                                             norm, batched=True)
+                    delta = jnp.where(active, delta, jnp.inf)
+                    return new_tail, cur_all, delta, astate
+
+                donate = self._donate + (4,) if self._donate else ()
+                return jax.jit(step_accel, donate_argnums=donate)
+
             def step_fn(x_init, x_tail, prev_coarse, active):
                 """One Parareal refinement over all K slots, truncated to
                 the suffix [minf, B) via the engine's shared
@@ -1142,6 +1246,48 @@ class DiffusionSamplingEngine:
             return jax.jit(step_fn, donate_argnums=self._donate)
 
         def make_step_windowed(minf: int):
+            if accel.accelerates:
+                def step_accel(x_init, x_tail, prev_coarse, active, lo,
+                               astate):
+                    """Accelerated residual-window refinement: mixing is
+                    live-masked to the dynamic window ``[lo, B)`` —
+                    window-frozen blocks stay bitwise untouched — and the
+                    per-block residuals are recomputed post-mix before
+                    the lane-max reduction, so the window only advances
+                    past blocks whose *committed* values converged."""
+                    heads = jnp.concatenate([x_init[None], x_tail[:-1]],
+                                            axis=0)
+                    if minf:
+                        heads = heads[minf:]
+                    y = fine(heads)
+                    new_tail, cur_all, _, _ = suffix_refinement(
+                        G, y, x_init, x_tail, prev_coarse, starts, minf,
+                        use_fused=use_fused, norm=norm, batched=True,
+                        window_lo=lo)
+                    m = active.reshape((1,) + active.shape
+                                       + (1,) * (x_tail.ndim - 2))
+                    new_tail = jnp.where(m, new_tail, x_tail)
+                    cur_all = jnp.where(m, cur_all, prev_coarse)
+                    live = jnp.arange(B, dtype=jnp.int32) >= lo
+                    z_mix, astate = accel.apply(
+                        astate, jnp.stack([x_tail, prev_coarse]),
+                        jnp.stack([new_tail, cur_all]), live=live,
+                        batched=True)
+                    new_tail = jnp.where(m, z_mix[0], x_tail)
+                    cur_all = jnp.where(m, z_mix[1], prev_coarse)
+                    # full-width post-mix block residuals: frozen blocks
+                    # are bitwise unchanged, so their rows are exactly 0
+                    br = blockwise_norm(new_tail - x_tail, norm,
+                                        batched=True)
+                    delta = jnp.where(active, br[-1], jnp.inf)
+                    br_g = jnp.max(jnp.where(active[None, :], br, 0.0),
+                                   axis=1)
+                    return (new_tail, cur_all,
+                            jnp.concatenate([delta, br_g]), astate)
+
+                donate = self._donate + (5,) if self._donate else ()
+                return jax.jit(step_accel, donate_argnums=donate)
+
             def step_fn(x_init, x_tail, prev_coarse, active, lo):
                 """One residual-window refinement over all K slots: the
                 compiled suffix is [minf, B), blocks [minf, lo) freeze by

@@ -1,0 +1,13 @@
+"""Seeded RL009 violations: mixing math re-derived outside the seam."""
+from repro.core.accel import _live_mask              # line 2: private import
+import jax.numpy as jnp
+
+
+def solve_gamma(f, df, reg):                         # line 6: owned def
+    return f
+
+
+def driver_mix(z_prev, f, df_cols, dz_cols):
+    gm = df_cols @ df_cols.T
+    gamma = jnp.linalg.solve(gm, df_cols @ f)        # line 12: secant solve
+    return z_prev + f - jnp.tensordot(gamma, dz_cols, axes=1)

@@ -1,0 +1,20 @@
+"""RL009-clean driver code: mixing goes through the Accelerator seam."""
+import jax.numpy as jnp
+
+from repro.core.accel import AndersonAccel, resolve_accel
+
+
+def driver_step(astate, z_prev, z_new, accel=None):
+    acc = resolve_accel(accel)
+    z_mixed, astate = acc.apply(astate, z_prev, z_new)
+    return z_mixed, astate
+
+
+def build(max_iters, z):
+    acc = AndersonAccel(depth=3, warmup=2)
+    return acc.init_state(z, max_iters)
+
+
+def non_mixing_math(x):
+    # reductions / elementwise math are not the seam's signature
+    return jnp.sum(x * x) + jnp.linalg.norm(x)

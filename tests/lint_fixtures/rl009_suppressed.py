@@ -1,0 +1,6 @@
+"""A deliberate out-of-seam solve, recorded (not hidden) via suppression."""
+import jax.numpy as jnp
+
+
+def debug_gamma(gm, rhs):
+    return jnp.linalg.solve(gm, rhs)  # reprolint: disable=RL009

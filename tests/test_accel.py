@@ -1,0 +1,483 @@
+"""The Accelerator seam (repro.core.accel): NoAccel bit-identity against
+the pre-seam engine on every driver and the serving engine, Anderson
+iteration cuts with a CI-asserted max-vs-serial error bound, the
+prefix-exact TriangularAccel contract (bitwise serial at the iteration
+cap, composition with truncating frontier policies), the pairing rules
+(joint mixing refuses truncating policies, the wavefront refuses
+accelerating accelerators, straggler reuse refuses mixing), serving-side
+state lifecycle (per-lane reset on slot recycling, one host sync per
+refinement, EMA pricing of the reduced schedule) and simulate()/
+AsyncServeLoop bit-identity under a shared accelerator.
+
+Two toy models, chosen deliberately: the repo's standard elementwise
+tanh model for bitwise claims (fast-converging — lane math identical
+across batch widths), and a slowly-converging time-varying linear model
+(the benchmarks/table13_accel.py config) for iteration-cut claims —
+Parareal on the tanh toy converges too fast to leave mixing any headroom.
+"""
+import dataclasses
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AndersonAccel, ExactPrefix, FixedBudget, NoAccel,
+                        ResidualWindow, SolverConfig, SRDSConfig,
+                        TriangularAccel, make_schedule, resolve_accel,
+                        sample_sequential, srds_sample)
+from repro.core.accel import Accelerator
+from repro.core.engine import run_parareal
+from repro.serve import (AsyncServeLoop, DiffusionSamplingEngine, FIFO,
+                         SampleRequest, Tier, poisson_trace, simulate)
+from repro.serve import diffusion as serve_diffusion
+from conftest import run_subprocess, to_f64
+
+TOLS = [1e-2, 1e-4, 1e-6, 1e-3, 1e-5]
+
+
+def _elementwise_model(dim=8):
+    scale = jnp.linspace(0.5, 1.5, dim)
+
+    def model_fn(x, t):
+        return jnp.tanh(x * scale) * (0.5 + 0.001 * t)
+
+    return model_fn
+
+
+def _slow_model(amp=2.0, freq=2.0, dim=16):
+    """Time-varying linear model with slow Parareal convergence (the
+    table13 bench toy): per-dim oscillating contraction rates keep the
+    refinement map in its near-linear tail for many iterations — the
+    regime Anderson mixing is for."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    f32 = jnp.float32                  # the bench runs f32 (x64 is module-
+    w = freq * (1 + jax.random.uniform(k1, (dim,), f32))    # wide here)
+    ph = 2 * jnp.pi * jax.random.uniform(k2, (dim,), f32)
+    a = amp * (0.5 + jax.random.uniform(k3, (dim,), f32))
+
+    def model_fn(x, t):
+        return (a * jnp.sin(w * t[..., None] * 0.06 + ph) * x).astype(f32)
+
+    return model_fn
+
+
+def _x0(batch=3, dim=8):
+    return jax.random.normal(jax.random.PRNGKey(1), (batch, dim),
+                             dtype=jnp.float64)
+
+
+def _slow_setup():
+    model = _slow_model()
+    sched = make_schedule("cosine", 100)
+    sched = dataclasses.replace(sched, ab=sched.ab.astype(jnp.float32),
+                                t_model=sched.t_model.astype(jnp.float32))
+    solver = SolverConfig("ddim")
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (16,), jnp.float32)
+    return model, sched, solver, x0
+
+
+# --------------------------------------------------------------------------
+# seam resolution + flags
+# --------------------------------------------------------------------------
+
+def test_resolve_accel_mapping():
+    """accel=None maps onto NoAccel in exactly one place; non-accelerators
+    are rejected loudly; the driver-dispatch flags match the contract."""
+    assert isinstance(resolve_accel(None), NoAccel)
+    aa = AndersonAccel(depth=3)
+    assert resolve_accel(aa) is aa
+    with pytest.raises(TypeError, match="Accelerator"):
+        resolve_accel("anderson")
+    # the flags drivers dispatch on
+    assert not NoAccel().accelerates and NoAccel().exact
+    assert NoAccel().prefix_exact
+    assert aa.accelerates and not aa.exact and not aa.prefix_exact
+    tri = TriangularAccel()
+    assert tri.accelerates and not tri.exact and tri.prefix_exact
+    # NoAccel carries no state: compiled carries stay byte-identical
+    z = jnp.zeros((2, 4, 3))
+    assert NoAccel().init_state(z, 8) is None
+    assert NoAccel().reset_lanes(None, jnp.ones((3,), bool)) is None
+    zm, st = NoAccel().apply(None, z, z + 1.0)
+    assert st is None and bool(jnp.all(zm == z + 1.0))
+
+
+def test_accel_pairing_rules():
+    """Joint mixing refuses truncating frontier policies (their provable
+    serial-prefix schedule is a theorem about the plain iteration);
+    prefix-exact mixing is accepted; straggler reuse refuses any mixing."""
+    model, sched, solver, x0 = _slow_setup()
+    for kw in ({"truncate": True}, {"window": ResidualWindow(1e-3)}):
+        with pytest.raises(ValueError, match="serial-prefix"):
+            srds_sample(model, sched, solver, x0,
+                        SRDSConfig(tol=1.0, accel=AndersonAccel(), **kw))
+    # carry_fine_results (straggler reuse) is incompatible with mixing
+    fine = lambda h, p, y: h
+    G = lambda x, i0: x
+    with pytest.raises(ValueError, match="carry_fine_results"):
+        run_parareal(G, fine, jnp.ones((2,)),
+                     jnp.arange(4, dtype=jnp.int32), tol=0.0, max_iters=2,
+                     carry_fine_results=True, accel=AndersonAccel())
+
+
+def test_wavefront_rejects_accelerating():
+    """One block per device, no central iterate history: the wavefront
+    refuses accelerating accelerators loudly instead of silently not
+    mixing (single-device mesh is enough to hit the trace-time check)."""
+    from repro.compat import make_mesh
+    from repro.core.pipelined import make_pipelined_sampler
+    model = _elementwise_model(6)
+    sched = to_f64(make_schedule("ddpm_linear", 8))
+    mesh = make_mesh((1,), ("time",))
+    cfg = SRDSConfig(tol=1e-4, accel=AndersonAccel())
+    samp = make_pipelined_sampler(mesh, "time", model, sched,
+                                  SolverConfig("ddim"), cfg)
+    with pytest.raises(ValueError, match="wavefront"):
+        samp(jnp.ones((2, 6), jnp.float64))
+
+
+# --------------------------------------------------------------------------
+# state lifecycle units
+# --------------------------------------------------------------------------
+
+def test_init_state_shapes_and_reset_lanes():
+    """The ring carry matches the joint iterate; reset_lanes zeroes exactly
+    the re-admitted lanes' history (rings, last iterate/residual, count)."""
+    acc = AndersonAccel(depth=3)
+    z = jnp.ones((2, 4, 5, 7))                     # (2, B, K, dim)
+    s = acc.init_state(z, 8, batched=True)
+    assert s.dz.shape == (3, 2, 4, 5, 7) and s.df.shape == s.dz.shape
+    assert s.z_last.shape == z.shape and s.count.shape == (5,)
+    # depth is clamped to the iteration budget
+    assert AndersonAccel(depth=9).init_state(z, 4).dz.shape[0] == 4
+    junk = s._replace(
+        dz=s.dz + 1, df=s.df + 2, z_last=s.z_last + 3, f_last=s.f_last + 4,
+        count=s.count + 5)
+    new = jnp.asarray([True, False, True, False, False])
+    r = acc.reset_lanes(junk, new)
+    for lane in range(5):
+        for ring in (r.dz, r.df):
+            got = ring[:, :, :, lane]
+            assert bool(jnp.all(got == 0)) == bool(new[lane])
+        assert bool(jnp.all(r.z_last[:, :, lane] == 0)) == bool(new[lane])
+        assert bool(jnp.all(r.f_last[:, :, lane] == 0)) == bool(new[lane])
+        assert (int(r.count[lane]) == 0) == bool(new[lane])
+
+
+def test_apply_frozen_blocks_bitwise_and_warmup_raw():
+    """Blocks outside the live mask commit exactly z_prev (bitwise, not
+    just f==0); during warmup the raw iterate is committed while the
+    rings record."""
+    acc = AndersonAccel(depth=2, warmup=2)
+    key = jax.random.PRNGKey(0)
+    z_prev = jax.random.normal(key, (2, 4, 3))
+    z_new = z_prev + jax.random.normal(jax.random.PRNGKey(1), (2, 4, 3))
+    s = acc.init_state(z_prev, 8)
+    live = jnp.asarray([True, True, False, False])
+    zm, s1 = acc.apply(s, z_prev, z_new, live=live)
+    # warmup commit is the raw iterate on live blocks ...
+    np.testing.assert_array_equal(np.asarray(zm[:, :2]),
+                                  np.asarray(z_new[:, :2]))
+    # ... and bitwise z_prev on frozen ones
+    np.testing.assert_array_equal(np.asarray(zm[:, 2:]),
+                                  np.asarray(z_prev[:, 2:]))
+    assert int(s1.count) == 1
+
+
+# --------------------------------------------------------------------------
+# NoAccel bit-identity vs the pre-seam engine (driver by driver)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg_kw", [
+    {}, {"truncate": True}, {"window": ResidualWindow(1e-3)},
+    {"per_sample": True},
+])
+def test_noaccel_bit_identical_srds_sample(cfg_kw):
+    """accel=NoAccel() reproduces the default engine bit for bit in every
+    frontier/gating mode — the exactness guarantee is untouched when
+    acceleration is off."""
+    model = _elementwise_model()
+    sched = to_f64(make_schedule("ddpm_linear", 64))
+    solver = SolverConfig("ddim")
+    x = _x0(len(TOLS)) if cfg_kw.get("per_sample") else _x0()
+    tol = jnp.asarray(TOLS, jnp.float32) if cfg_kw.get("per_sample") else None
+    a = srds_sample(model, sched, solver, x,
+                    SRDSConfig(tol=1e-4, **cfg_kw), tol=tol)
+    b = srds_sample(model, sched, solver, x,
+                    SRDSConfig(tol=1e-4, accel=NoAccel(), **cfg_kw), tol=tol)
+    assert bool(jnp.all(a.sample == b.sample))
+    np.testing.assert_array_equal(np.asarray(a.iterations),
+                                  np.asarray(b.iterations))
+    np.testing.assert_array_equal(np.asarray(a.delta_history),
+                                  np.asarray(b.delta_history))
+
+
+@pytest.mark.slow
+@pytest.mark.distributed
+def test_noaccel_and_anderson_sharded_match_single_program():
+    """The sharded driver behind the seam: NoAccel is bit-identical to the
+    default, and Anderson mixing — deterministic elementwise math over
+    replicated carries — matches the single-program accelerated run
+    iteration for iteration."""
+    code = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core import *
+from repro.core.pipelined import make_sharded_sampler
+from repro.compat import make_mesh
+
+assert len(jax.devices()) == 8
+w = jax.random.normal(jax.random.PRNGKey(0), (6, 6), dtype=jnp.float64) * 0.3
+def model_fn(x, t):
+    return jnp.tanh(x @ w) * (0.5 + 0.001 * t)
+mesh = make_mesh((8,), ("time",))
+sched = make_schedule("ddpm_linear", 64)
+sched = DiffusionSchedule(ab=sched.ab.astype(jnp.float64),
+                          t_model=sched.t_model.astype(jnp.float64),
+                          kind=sched.kind)
+x0 = jax.random.normal(jax.random.PRNGKey(1), (2, 6), dtype=jnp.float64)
+solver = SolverConfig("ddim")
+
+plain = SRDSConfig(tol=1e-6, num_blocks=8)
+noacc = SRDSConfig(tol=1e-6, num_blocks=8, accel=NoAccel())
+r_p = make_sharded_sampler(mesh, "time", model_fn, sched, solver, plain)(x0)
+r_n = make_sharded_sampler(mesh, "time", model_fn, sched, solver, noacc)(x0)
+assert bool(jnp.all(r_p.sample == r_n.sample))
+assert int(r_p.iterations) == int(r_n.iterations)
+
+acfg = SRDSConfig(tol=1e-6, num_blocks=8,
+                  accel=AndersonAccel(depth=3, warmup=2))
+r_d = make_sharded_sampler(mesh, "time", model_fn, sched, solver, acfg)(x0)
+r_s = srds_sample(model_fn, sched, solver, x0, acfg)
+assert int(r_d.iterations) == int(r_s.iterations)
+assert float(jnp.max(jnp.abs(r_d.sample - r_s.sample))) < 1e-10
+"""
+    r = run_subprocess(code, devices=8)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr}"
+
+
+# --------------------------------------------------------------------------
+# acceleration: iteration cut at equal tolerance, bounded error
+# --------------------------------------------------------------------------
+
+def test_anderson_cuts_iterations_at_equal_tolerance():
+    """The headline claim on the bench toy (N=100): Anderson reaches the
+    same convergence tolerance in >= 25% fewer refinements, and the
+    converged sample stays within a small multiple of the tolerance of
+    the serial solve."""
+    model, sched, solver, x0 = _slow_setup()
+    ref = sample_sequential(model, sched, solver, x0)
+    acc = AndersonAccel(depth=5, warmup=2)
+    tol = 3.0
+    plain = srds_sample(model, sched, solver, x0, SRDSConfig(tol=tol))
+    mixed = srds_sample(model, sched, solver, x0,
+                        SRDSConfig(tol=tol, accel=acc))
+    ip, ia = int(plain.iterations), int(mixed.iterations)
+    assert ia <= 0.75 * ip, (ip, ia)
+    assert float(mixed.final_delta) < tol
+    # the mixed fixed point is the same: vs-serial error within a small
+    # multiple of the (loose) tolerance, same order as the plain run's
+    err = float(jnp.max(jnp.abs(mixed.sample - ref)))
+    assert err <= 5.0 * tol, err
+    # and at a tight tolerance it still never costs MORE iterations
+    p2 = srds_sample(model, sched, solver, x0, SRDSConfig(tol=0.1))
+    a2 = srds_sample(model, sched, solver, x0,
+                     SRDSConfig(tol=0.1, accel=acc))
+    assert int(a2.iterations) <= int(p2.iterations)
+    assert float(jnp.max(jnp.abs(a2.sample - ref))) <= 1.0 * 0.1
+
+
+def test_anderson_per_sample_gating():
+    """Per-sample gating composes with mixing: every sample converges to
+    its own tolerance and frozen lanes stay frozen (iterations differ)."""
+    model, sched, solver, _ = _slow_setup()
+    xb = jax.random.normal(jax.random.PRNGKey(2), (3, 16))
+    tols = jnp.asarray([3.0, 0.3, 1.0], jnp.float32)
+    res = srds_sample(model, sched, solver, xb,
+                      SRDSConfig(per_sample=True,
+                                 accel=AndersonAccel(depth=3, warmup=2)),
+                      tol=tols)
+    for s in range(3):
+        assert float(res.final_delta[s]) < float(tols[s])
+    assert len(set(np.asarray(res.iterations).tolist())) > 1
+
+
+def test_triangular_bitwise_serial_at_cap():
+    """The prefix-exact contract: a TriangularAccel run driven to the
+    iteration cap returns the bitwise-identical result of the plain
+    truncated engine (Parareal's finite convergence survives mixing),
+    and composing with ExactPrefix truncation is accepted."""
+    model, sched, solver, x0 = _slow_setup()
+    tri = TriangularAccel(depth=3, warmup=2)
+    plain = srds_sample(model, sched, solver, x0,
+                        SRDSConfig(tol=0.0, truncate=True))
+    mixed = srds_sample(model, sched, solver, x0,
+                        SRDSConfig(tol=0.0, truncate=True, accel=tri))
+    assert bool(jnp.all(plain.sample == mixed.sample))
+    # and under a residual window it converges to the same answer
+    win = srds_sample(model, sched, solver, x0,
+                      SRDSConfig(tol=0.1, window=ResidualWindow(1e-2),
+                                 accel=tri))
+    assert float(jnp.max(jnp.abs(win.sample - plain.sample))) < 0.1
+
+
+# --------------------------------------------------------------------------
+# the serving engine behind the same seam
+# --------------------------------------------------------------------------
+
+def _engine(model, **kw):
+    kw.setdefault("batch_size", 3)
+    return DiffusionSamplingEngine(model, (8,), SolverConfig("ddim"),
+                                   num_steps=36, dtype=jnp.float64, **kw)
+
+
+def _drain(model, reqs, **kw):
+    eng = _engine(model, **kw)
+    rids = [eng.submit(r) for r in reqs]
+    out = eng.drain()
+    return eng, [out[r] for r in rids]
+
+
+def test_serve_noaccel_bit_identical():
+    """An engine built with accel=NoAccel() reproduces the default
+    engine's responses bit for bit (samples, iterations, eval billing)."""
+    model = _elementwise_model()
+    reqs = [SampleRequest(seed=i, tol=TOLS[i % len(TOLS)]) for i in range(5)]
+    _, a = _drain(model, reqs)
+    _, b = _drain(model, reqs, accel=NoAccel())
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x.sample), np.asarray(y.sample))
+        assert x.iterations == y.iterations
+        assert x.model_evals == y.model_evals
+
+
+def test_serve_engine_pairing_rule():
+    """The engine's default ExactPrefix policy refuses joint mixing at
+    build time; TriangularAccel and untruncated Anderson are accepted."""
+    model = _elementwise_model()
+    with pytest.raises(ValueError, match="serial-prefix"):
+        _engine(model, accel=AndersonAccel())
+    assert _engine(model, accel=TriangularAccel()).accel.accelerates
+    eng = _engine(model, truncate=False, accel=AndersonAccel())
+    assert isinstance(eng.window, FixedBudget)
+
+
+def test_serve_anderson_reduces_iterations_and_prices_honestly():
+    """Anderson behind the serving engine on the slow toy: fewer
+    refinements per completion at the same tolerance, responses within a
+    small multiple of the tolerance of the plain engine's, and the
+    iteration EMA (which predict_completion consults) learns the reduced
+    schedule from completions."""
+    model = _slow_model()
+
+    def run(accel=None):
+        eng = DiffusionSamplingEngine(model, (16,), SolverConfig("ddim"),
+                                      schedule="cosine", num_steps=100,
+                                      batch_size=2, truncate=False,
+                                      accel=accel)
+        rids = [eng.submit(SampleRequest(seed=i, tol=3.0)) for i in range(2)]
+        out = eng.drain()
+        return eng, [out[r] for r in rids]
+
+    ep, plain = run()
+    ea, mixed = run(AndersonAccel(depth=5, warmup=2))
+    assert sum(r.iterations for r in mixed) < sum(r.iterations
+                                                  for r in plain)
+    for p, m in zip(plain, mixed):
+        assert m.iterations <= p.iterations
+        assert float(np.max(np.abs(np.asarray(p.sample)
+                                   - np.asarray(m.sample)))) <= 10.0 * 3.0
+    (k_p,) = set(ep.iters_ema._mean)
+    assert ea.iters_ema._mean[k_p] < ep.iters_ema._mean[k_p]
+
+
+class _FetchCounter:
+    def __init__(self, real):
+        self.real = real
+        self.shapes = []
+
+    def __call__(self, x):
+        out = self.real(x)
+        self.shapes.append(out.shape)
+        return out
+
+
+def test_serve_accel_one_sync_per_refinement(monkeypatch):
+    """Mixing adds no host syncs: the accelerated hot loop still fetches
+    exactly one (K,) residual per refinement plus one lane fetch per
+    completion — for both the triangular/truncated and the
+    Anderson/untruncated pairings."""
+    model = _elementwise_model()
+    for kw in ({"accel": TriangularAccel(depth=2, warmup=2)},
+               {"accel": AndersonAccel(depth=2, warmup=2),
+                "truncate": False}):
+        counter = _FetchCounter(serve_diffusion._host_fetch)
+        monkeypatch.setattr(serve_diffusion, "_host_fetch", counter)
+        eng = _engine(model, **kw)
+        rids = [eng.submit(SampleRequest(seed=i, tol=TOLS[i % len(TOLS)]))
+                for i in range(5)]
+        queue = eng.pull_queue()
+        done = {}
+        while eng.busy() or queue:
+            while queue and eng.free_slots(queue[0][1]) > 0:
+                rid, req = queue.pop(0)
+                eng.admit(rid, req)
+            before = len(counter.shapes)
+            completions = eng.step_once()
+            done.update(dict(completions))
+            fetched = counter.shapes[before:]
+            assert len(fetched) == 1 + len(completions), (kw, fetched)
+            assert fetched[0] == (eng.batch_size,)
+            for shp in fetched[1:]:
+                assert shp == (8,), shp
+        assert set(done) == set(rids)
+
+
+def test_serve_slot_recycling_resets_accel_state():
+    """Slot recycling under mixing: a recycled lane's response is
+    bit-identical to the same request served on a fresh engine — the old
+    occupant's ring history was zeroed on admission, so it cannot leak
+    into the newcomer's mixing."""
+    model = _elementwise_model()
+    acc = TriangularAccel(depth=2, warmup=1)
+    # mixed tolerances force staggered completion and slot reuse
+    reqs = [SampleRequest(seed=i, tol=TOLS[i % len(TOLS)])
+            for i in range(7)]
+    _, busy = _drain(model, reqs, batch_size=2, accel=acc)
+    for i, resp in enumerate(busy):
+        _, solo = _drain(model, [reqs[i]], batch_size=2, accel=acc)
+        assert np.array_equal(np.asarray(resp.sample),
+                              np.asarray(solo[0].sample)), i
+        assert resp.iterations == solo[0].iterations
+
+
+# --------------------------------------------------------------------------
+# simulate() / AsyncServeLoop bit-identity under a shared accelerator
+# --------------------------------------------------------------------------
+
+TIERS = [Tier(tol=1e-2, slo_ms=25, iters_hint=2, weight=0.9),
+         Tier(tol=1e-6, slo_ms=400, iters_hint=7, weight=0.1)]
+
+
+@pytest.mark.parametrize("max_inflight", [1, 2])
+def test_async_loop_bit_exact_vs_simulate_with_accel(max_inflight):
+    """Pipelined dispatch/resolve stays bit-exact vs the synchronous
+    engine when both share an accelerating Accelerator: mixing is
+    per-lane (vmapped), so speculative refinements of converged lanes
+    and batch-mate churn remain unobservable."""
+    model = _elementwise_model()
+    trace = poisson_trace(10, rate=300.0, tiers=TIERS, seed=0)
+    mk = lambda: _engine(model, truncate=False, sec_per_eval=1e-5,
+                         accel=AndersonAccel(depth=3, warmup=2))
+    sync = simulate(mk(), trace, FIFO())
+    rep = AsyncServeLoop(mk(), FIFO(), max_inflight=max_inflight).run(trace)
+    assert sorted(rep.responses) == sorted(sync.responses)
+    for rid in sync.responses:
+        a, b = sync.responses[rid], rep.responses[rid]
+        assert a.iterations == b.iterations
+        assert np.array_equal(np.asarray(a.sample), np.asarray(b.sample))

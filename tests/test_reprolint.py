@@ -161,6 +161,43 @@ def test_rl008_scope_covers_drivers_and_serve_only():
     assert not _rl008_in_scope("benchmarks/common.py")
 
 
+# ---------------------------------------------------------------- RL009
+
+def test_rl009_fires_on_out_of_seam_mixing_math():
+    report = lint_fixture("rl009_bad.py")
+    assert codes_and_lines(report) == [
+        ("RL009", 2),   # private helper imported across the seam
+        ("RL009", 6),   # def solve_gamma outside repro.core.accel
+        ("RL009", 12),  # dense secant solve in driver-shaped code
+    ]
+    for f in report.findings:
+        assert f.rule == "accel-seam-ownership"
+        assert "repro.core.accel" in f.message
+
+
+def test_rl009_clean_on_seam_consumers_and_non_solver_linalg():
+    assert lint_fixture("rl009_good.py").findings == []
+
+
+def test_rl009_suppressions_are_recorded_not_discarded():
+    report = lint_fixture("rl009_suppressed.py")
+    assert report.findings == []
+    assert codes_and_lines(
+        LintReport(report.suppressed, [], 1, [])) == [("RL009", 6)]
+
+
+def test_rl009_scope_covers_drivers_and_serve_only():
+    # the owner module itself is exempt; models/tests/benchmarks mix
+    # whatever they probe — only drivers and the serving engine must go
+    # through the Accelerator seam
+    from repro.analysis.rules import _rl009_in_scope
+    assert _rl009_in_scope("src/repro/core/engine.py")
+    assert _rl009_in_scope("src/repro/serve/diffusion.py")
+    assert _rl009_in_scope("tests/lint_fixtures/rl009_bad.py")
+    assert not _rl009_in_scope("src/repro/models/dit.py")
+    assert not _rl009_in_scope("benchmarks/table13_accel.py")
+
+
 # ---------------------------------------------------------------- RL007
 
 def test_rl007_pure_pattern_core():
@@ -236,7 +273,7 @@ def test_hot_loop_marker_is_a_noop():
 
 def test_rule_registry_is_complete_and_ordered():
     codes = [c for c, _, _ in rule_table()]
-    assert codes == [f"RL00{i}" for i in range(1, 9)]
+    assert codes == [f"RL00{i}" for i in range(1, 10)]
 
 
 def test_analysis_package_is_stdlib_only():
@@ -272,7 +309,7 @@ def test_cli_json_output_exit_code_and_artifact(tmp_path, capsys):
     assert payload["files_scanned"] == 1
     assert {f["code"] for f in payload["findings"]} == {"RL001"}
     assert {r["code"] for r in payload["rules"]} == \
-        {f"RL00{i}" for i in range(1, 9)}
+        {f"RL00{i}" for i in range(1, 10)}
     assert json.loads(out_file.read_text())["findings"] == payload["findings"]
 
 
