@@ -1,0 +1,298 @@
+"""Measured kernel autotune sweep — refreshes the committed tuning tables.
+
+Times every candidate launch configuration of each Pallas kernel family
+(``elementwise``, ``flash``, ``rwkv6``) on the current backend, picks the
+fastest per ``(kernel, dtype, shape-bucket)`` key, and assembles a
+schema-valid tuning-table payload (``repro.kernels.tuning.validate_table``)
+that ``--write-table`` commits to ``src/repro/kernels/tuning_tables/
+<backend>.json`` — the table tier the :class:`~repro.kernels.tuning.
+KernelTuner` resolves from.
+
+Two modes:
+
+* **full sweep** (default) — backend-gated: refuses to run unless
+  ``kernels.ops.fused_default()`` is true (a compiled TPU/GPU lowering),
+  because interpret-mode timings would tune the emulator, not the
+  hardware.  Paper-scale shapes, the full candidate grid, bf16 included
+  for flash.  Slow by construction — run it on the accelerator you are
+  tuning for, then commit the refreshed table.
+* **``--smoke``** — what CI runs in the CPU-only container: tiny shapes
+  in interpret mode, a trimmed candidate grid, f32 only.  Wall-clock is
+  informational; the assertions are structural — every winning config
+  must (a) execute and match the reference path numerically, (b) land in
+  a payload ``validate_table`` accepts, and (c) round-trip through a
+  ``KernelTuner(tables=...)`` resolve with ``source == "table"``.
+
+Each swept key also emits a roofline-harness-format cell (see
+``benchmarks.roofline``) when ``--cells-dir`` is given: ``compute_s``
+holds the tuned time, ``memory_s`` the heuristic-default time,
+``collective_s`` is 0.0 and ``useful_fraction`` is the default/tuned
+speedup — so ``python -m benchmarks.roofline --dir <cells-dir>`` renders
+the tuning wins next to the sharding cells.
+
+    PYTHONPATH=src python -m benchmarks.autotune_kernels --smoke
+    PYTHONPATH=src python -m benchmarks.autotune_kernels \
+        --platform gpu --write-table --cells-dir experiments/autotune
+
+``--platform`` / ``--host-devices`` route through
+:func:`repro.launch.env.configure_platform` (XLA flags must land before
+backend init — see docs/benchmarks.md).
+"""
+import argparse
+import json
+import os
+import sys
+
+# (kernel, dtype) -> problem shape, per mode.  Shapes are the tuning
+# shapes the seam buckets on: elementwise times a (rows, cols) operand,
+# flash a (batch, heads, sq, sk, d) attention, rwkv6 a (b, h, t, dk, dv)
+# recurrence.
+_SHAPES = {
+    False: {  # full sweep — paper-scale
+        "elementwise": (4096, 256),
+        "flash": (1, 4, 1024, 1024, 64),
+        "rwkv6": (1, 4, 256, 64, 64),
+    },
+    True: {  # --smoke — interpret-mode friendly
+        "elementwise": (64, 64),
+        "flash": (1, 2, 64, 64, 16),
+        "rwkv6": (1, 2, 32, 8, 8),
+    },
+}
+
+
+def candidates(kernel: str, backend: str, smoke: bool):
+    """Candidate param dicts for one kernel family on one backend."""
+    if kernel == "elementwise":
+        rows = (32, 64) if smoke else (32, 64, 128, 256, 512)
+        return [{"tile_rows": r} for r in rows]
+    if kernel == "flash":
+        if smoke:
+            pairs = ((16, 16), (32, 32))
+        elif backend == "gpu":
+            # Triton cares about warp/stage counts too
+            return [{"block_q": bq, "block_k": bk,
+                     "num_warps": w, "num_stages": s}
+                    for bq, bk in ((64, 64), (128, 64), (128, 128))
+                    for w in (4, 8) for s in (2, 3)]
+        else:
+            pairs = ((64, 64), (128, 128), (256, 128))
+        return [{"block_q": bq, "block_k": bk} for bq, bk in pairs]
+    if kernel == "rwkv6":
+        caps = (8, 16) if smoke else (8, 16, 32, 64)
+        return [{"chunk_target": c} for c in caps]
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def _runner(kernel: str, shape, dtype, interpret: bool):
+    """Returns ``(run(params) -> array, ref_out, arg_bytes)`` for one key."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, tuning
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    if kernel == "elementwise":
+        x = jax.random.normal(keys[0], shape, dtype)
+        eps = jax.random.normal(keys[1], shape, dtype)
+        args = (x, eps)
+
+        def run(params):
+            return ops.ddim_fused(x, eps, 0.98, 0.19,
+                                  block_rows=params["tile_rows"],
+                                  use_kernel=True)
+
+        ref = ops.ddim_fused(x, eps, 0.98, 0.19, use_kernel=False)
+    elif kernel == "flash":
+        b, h, sq, sk, d = shape
+        q = jax.random.normal(keys[0], (b, h, sq, d), dtype)
+        k = jax.random.normal(keys[1], (b, h, sk, d), dtype)
+        v = jax.random.normal(keys[2], (b, h, sk, d), dtype)
+        args = (q, k, v)
+
+        def run(params):
+            return ops.attention(q, k, v, causal=True,
+                                 block_q=params["block_q"],
+                                 block_k=params["block_k"],
+                                 num_warps=params.get("num_warps"),
+                                 num_stages=params.get("num_stages"),
+                                 use_kernel=True)
+
+        ref = ops.attention(q, k, v, causal=True, use_kernel=False)
+    elif kernel == "rwkv6":
+        b, h, t, dk, dv = shape
+        r = jax.random.normal(keys[0], (b, h, t, dk), dtype)
+        k = jax.random.normal(keys[1], (b, h, t, dk), dtype)
+        v = jax.random.normal(keys[2], (b, h, t, dv), dtype)
+        w = jax.random.normal(keys[3], (b, h, t, dk), dtype) * 0.1
+        u = jax.random.normal(keys[4], (h, dk), dtype)
+        args = (r, k, v, w, u)
+
+        def run(params):
+            chunk = tuning.pick_chunk(t, params["chunk_target"])
+            out, _ = ops.rwkv6_wkv(r, k, v, w, u, chunk=chunk,
+                                   use_kernel=True)
+            return out
+
+        ref, _ = ops.rwkv6_wkv(r, k, v, w, u, use_kernel=False)
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    arg_bytes = sum(int(a.size) * a.dtype.itemsize for a in args)
+    return run, ref, arg_bytes
+
+
+def tuning_shape(kernel: str, shape):
+    """The shape the seam buckets on (not the operand layout)."""
+    if kernel == "flash":
+        _, _, sq, sk, d = shape
+        return (sq, sk, d)
+    if kernel == "rwkv6":
+        _, _, t, dk, _ = shape
+        return (t, dk)
+    return shape
+
+
+def sweep_key(kernel: str, dtype_name: str, smoke: bool, backend: str,
+              tol: float):
+    """Time default + candidates for one key; returns (entry, cell)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import tuning
+
+    from .common import timeit
+
+    shape = _SHAPES[smoke][kernel]
+    run, ref, arg_bytes = _runner(kernel, shape, jnp.dtype(dtype_name),
+                                  interpret=smoke)
+    # heuristic-tier baseline: an empty (valid) in-memory table blocks the
+    # committed-table tier, so memory_s prices the pre-tuning default
+    empty = {"version": tuning.TABLE_SCHEMA_VERSION, "backend": backend,
+             "entries": []}
+    default = tuning.KernelTuner(tables={backend: empty}).resolve(
+        kernel, backend=backend, dtype=dtype_name,
+        shape=tuning_shape(kernel, shape))
+    t_default = timeit(run, dict(default.params), repeats=1 if smoke else 3)
+    best_params, t_best = dict(default.params), t_default
+    for params in candidates(kernel, backend, smoke):
+        out = run(params)
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        assert err <= tol, (
+            f"{kernel}/{dtype_name}{shape}: candidate {params} diverged "
+            f"from the reference path (max abs diff {err} > {tol})")
+        t = timeit(run, params, repeats=1 if smoke else 3)
+        if t < t_best:
+            best_params, t_best = dict(params), t
+    bucket = tuning.bucket_for(kernel, tuning_shape(kernel, shape))
+    entry = {"kernel": kernel, "dtype": dtype_name,
+             "bucket": list(bucket), "params": best_params}
+    cell = {
+        "arch": backend, "shape": f"{kernel}/{dtype_name}{tuple(shape)}",
+        "mesh": "-",
+        "roofline": {"compute_s": t_best, "memory_s": t_default,
+                     "collective_s": 0.0, "dominant": "compute_s",
+                     "useful_fraction": (t_default / t_best)
+                     if t_best > 0 else None},
+        "memory_analysis": {"argument_bytes": arg_bytes,
+                            "temp_bytes": int(ref.size) * ref.dtype.itemsize},
+    }
+    print(f"autotune {backend}/{kernel}/{dtype_name} bucket={list(bucket)}: "
+          f"best={best_params} ({t_best * 1e6:.0f}us vs "
+          f"{t_default * 1e6:.0f}us default)", flush=True)
+    return entry, cell
+
+
+def sweep(smoke: bool, cells_dir: str = None):
+    """Runs the sweep; returns the schema-valid table payload."""
+    import jax
+
+    from repro.kernels import tuning
+
+    backend = jax.default_backend()
+    dtypes = {"elementwise": ["float32"], "rwkv6": ["float32"],
+              "flash": ["float32"] if smoke else ["float32", "bfloat16"]}
+    tols = {"float32": 5e-5, "bfloat16": 5e-2}
+    entries, cells = [], []
+    for kernel in tuning.KERNELS:
+        for dt in dtypes[kernel]:
+            entry, cell = sweep_key(kernel, dt, smoke, backend, tols[dt])
+            entries.append(entry)
+            cells.append(cell)
+    payload = {
+        "version": tuning.TABLE_SCHEMA_VERSION,
+        "backend": backend,
+        "comment": ("measured by benchmarks.autotune_kernels "
+                    + ("--smoke (structural check only — interpret-mode "
+                       "timings tune the emulator, do not commit)"
+                       if smoke else "(full sweep)")),
+        "entries": entries,
+    }
+    tuning.validate_table(payload, "<autotune sweep>")
+    # round-trip self-check: a tuner built on this payload must resolve
+    # every swept key from the table tier with exactly the winning params
+    tuner = tuning.KernelTuner(tables={backend: payload})
+    for e in entries:
+        cfg = tuner.resolve(e["kernel"], backend=backend, dtype=e["dtype"],
+                            shape=tuple(e["bucket"])
+                            if e["kernel"] != "elementwise"
+                            else (e["bucket"][0],))
+        assert cfg.source == "table", cfg
+        assert all(cfg.params.get(p) == val
+                   for p, val in e["params"].items()), cfg
+    if cells_dir:
+        os.makedirs(cells_dir, exist_ok=True)
+        for cell in cells:
+            slug = cell["shape"].replace("/", "_").replace(" ", "")
+            with open(os.path.join(cells_dir, f"{slug}.json"), "w") as f:
+                json.dump(cell, f, indent=2, sort_keys=True)
+        print(f"wrote {len(cells)} roofline cells to {cells_dir}")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny interpret-mode structural check (CI mode); "
+                         "timings informational, table not committed")
+    ap.add_argument("--write-table", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="write the swept table (default: the committed "
+                         "tuning_tables/<backend>.json)")
+    ap.add_argument("--cells-dir", default=None,
+                    help="emit roofline-format cells here "
+                         "(benchmarks.roofline --dir renders them)")
+    ap.add_argument("--platform", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="pin the JAX backend (gpu additionally installs "
+                         "the XLA GPU performance preset) — "
+                         "repro.launch.env.configure_platform")
+    ap.add_argument("--host-devices", type=int, default=None)
+    args = ap.parse_args(argv)
+    if args.platform is not None or args.host_devices is not None:
+        from repro.launch.env import configure_platform
+        configure_platform(args.platform, args.host_devices)
+
+    from repro.kernels import ops, tuning
+
+    if not args.smoke and not ops.fused_default():
+        print("autotune_kernels: full sweep needs a compiled Pallas "
+              "backend (fused_default() is false here) — interpret-mode "
+              "timings would tune the emulator.  Run with --smoke for the "
+              "structural check, or on TPU/GPU for a real sweep.",
+              file=sys.stderr)
+        return 2
+    payload = sweep(args.smoke, cells_dir=args.cells_dir)
+    print(json.dumps(payload, indent=2, sort_keys=True))
+    if args.write_table is not None:
+        path = args.write_table or os.path.join(
+            tuning.TABLE_DIR, f"{payload['backend']}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,9 @@
 """CI regression gate for the core-hot-path benchmark (BENCH_core.json).
 
 Compares a freshly emitted artifact (``benchmarks.table11_truncation``,
-``benchmarks.table12_window``, ``benchmarks.table6_devices`` and
-``benchmarks.table13_accel`` rows, appended into one file) against the
+``benchmarks.table12_window``, ``benchmarks.table6_devices``,
+``benchmarks.table13_accel`` and ``benchmarks.table14_kernels`` rows,
+appended into one file) against the
 committed baseline and fails on a >20% regression of any deterministic
 count — physical model evals per sample (every ``evals_*`` field a row
 carries), Parareal iterations-to-tolerance (``iters_*``, the table13
@@ -17,7 +18,9 @@ iterations than plain (checked on the current run alone — acceleration
 that decelerates is a regression at any count), or any row carrying a
 ``within_tol`` accuracy verdict that is false (the table6 mesh row's
 single-device-parity contract — also current-run-alone, so it gates on
-every environment).
+every environment), a table14 kernel row whose fused path lost parity
+with its reference (``parity_ok``) or whose tuning-seam provenance
+(``config_source``/``config_params``) went missing.
 
 Usage (what .github/workflows/ci.yml runs):
 
@@ -25,6 +28,7 @@ Usage (what .github/workflows/ci.yml runs):
     PYTHONPATH=src python -m benchmarks.table12_window --out BENCH_core.json
     PYTHONPATH=src python -m benchmarks.table6_devices --out BENCH_core.json
     PYTHONPATH=src python -m benchmarks.table13_accel --out BENCH_core.json
+    PYTHONPATH=src python -m benchmarks.table14_kernels --out BENCH_core.json
     PYTHONPATH=src python -m benchmarks.check_bench_core \
         --current BENCH_core.json \
         --baseline benchmarks/baselines/BENCH_core_baseline.json
@@ -140,6 +144,27 @@ def check(current: dict, baseline: dict, tolerance: float = TOLERANCE):
             failures.append(
                 f"{name}: acceleration costs iterations "
                 f"({cur['iters_accel']} > {cur['iters_plain']})")
+        # table14 contract: every kernel row must hold fused-vs-reference
+        # parity and record where its launch config came from — both
+        # current-run-alone (a kernel that stopped matching its reference,
+        # or an artifact that stopped recording tuned-vs-default
+        # provenance, is a regression on any environment)
+        if "parity_ok" in cur and not cur["parity_ok"]:
+            failures.append(
+                f"{name}: parity_ok is false (fused kernel diverged from "
+                f"reference, max_abs_diff={cur.get('max_abs_diff')} > "
+                f"tol={cur.get('tol')})")
+        if name.startswith("table14/"):
+            src = cur.get("config_source")
+            params = cur.get("config_params")
+            if src not in ("table", "heuristic", "override"):
+                failures.append(
+                    f"{name}: config_source {src!r} is not one of "
+                    f"table/heuristic/override (tuning provenance lost)")
+            if not isinstance(params, dict) or not params:
+                failures.append(
+                    f"{name}: config_params missing/empty (tuning "
+                    f"provenance lost)")
     return failures
 
 

@@ -1,0 +1,131 @@
+"""Table 14 (new): fused Pallas kernel families — per-backend parity and
+tuning-seam provenance rows in the gated ``BENCH_core.json`` artifact.
+
+One row per kernel family (``elementwise``, ``flash``, ``rwkv6``) on the
+current backend.  Each row carries:
+
+* ``parity_ok`` — the fused path (compiled on TPU/GPU, interpret-mode in
+  the CPU container) matches the pure-``jnp`` reference numerically at
+  the pinned shape/tolerance.  Gated current-run-alone by
+  ``benchmarks.check_bench_core`` — a kernel that stopped matching its
+  reference is a correctness regression on any environment, at any
+  count.
+* ``config_source`` / ``config_params`` — where the launch configuration
+  came from (``table`` entry, backend ``heuristic``, or an ``override``)
+  and what it resolved to, so the artifact records whether the run used
+  tuned or default tiles.  The gate requires the provenance fields to be
+  present and well-formed on every table14 row.
+* ``max_abs_diff`` / ``tol`` and an informational wall-clock median.
+
+Appends into the shared artifact, alongside table11/12/6/13's rows:
+
+    PYTHONPATH=src python -m benchmarks.table14_kernels --out BENCH_core.json
+
+``--platform`` / ``--host-devices`` route through
+:func:`repro.launch.env.configure_platform` (XLA flags must land before
+backend init — see docs/benchmarks.md).
+"""
+import argparse
+
+from .table12_window import merge_out
+
+# pinned probe shapes — big enough to cross tile boundaries (and to be
+# non-multiples of every default tile), small enough for interpret mode
+ELEM_SHAPE = (3, 129)                # ddim_fused: flattened total 387
+FLASH_SHAPE = (1, 2, 48, 80, 16)    # (b, h, sq, sk, d), cross-attention
+RWKV_SHAPE = (1, 2, 36, 8, 12)      # (b, h, t, dk, dv), t % 32 != 0
+TOL = {"float32": 5e-5}
+
+
+def run_rows():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, tuning
+
+    from .common import emit, timeit
+
+    backend = jax.default_backend()
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    f32 = jnp.float32
+    tol = TOL["float32"]
+
+    probes = {}
+
+    x = jax.random.normal(keys[0], ELEM_SHAPE, f32)
+    eps = jax.random.normal(keys[1], ELEM_SHAPE, f32)
+    probes["elementwise"] = (
+        lambda: ops.ddim_fused(x, eps, 0.98, 0.19, use_kernel=True),
+        lambda: ops.ddim_fused(x, eps, 0.98, 0.19, use_kernel=False),
+        (x.size,))
+
+    b, h, sq, sk, d = FLASH_SHAPE
+    q = jax.random.normal(keys[2], (b, h, sq, d), f32)
+    k = jax.random.normal(keys[3], (b, h, sk, d), f32)
+    v = jax.random.normal(keys[4], (b, h, sk, d), f32)
+    probes["flash"] = (
+        lambda: ops.attention(q, k, v, causal=True, use_kernel=True),
+        lambda: ops.attention(q, k, v, causal=True, use_kernel=False),
+        (sq, sk, d))
+
+    bb, hh, t, dk, dv = RWKV_SHAPE
+    r_ = jax.random.normal(keys[5], (bb, hh, t, dk), f32)
+    k_ = jax.random.normal(keys[6], (bb, hh, t, dk), f32)
+    v_ = jax.random.normal(keys[7], (bb, hh, t, dv), f32)
+    w_ = jax.random.normal(keys[0], (bb, hh, t, dk), f32) * 0.1
+    u_ = jax.random.normal(keys[1], (hh, dk), f32)
+    probes["rwkv6"] = (
+        lambda: ops.rwkv6_wkv(r_, k_, v_, w_, u_, use_kernel=True)[0],
+        lambda: ops.rwkv6_wkv(r_, k_, v_, w_, u_, use_kernel=False)[0],
+        (t, dk))
+
+    rows = []
+    for kernel, (fused, reference, shape) in probes.items():
+        cfg = tuning.resolve(kernel, backend=backend, dtype=f32, shape=shape)
+        out = fused()
+        ref_out = reference()
+        diff = float(jnp.max(jnp.abs(out.astype(f32) - ref_out.astype(f32))))
+        parity_ok = diff <= tol
+        assert parity_ok, (
+            f"{backend}/{kernel}: fused path diverged from reference "
+            f"(max abs diff {diff} > {tol})")
+        t_fused = timeit(fused)
+        name = f"table14/{backend}/{kernel}"
+        emit(name, t_fused * 1e6,
+             f"parity_ok={parity_ok};diff={diff:.2e};"
+             f"config={cfg.source}:{dict(cfg.params)}")
+        rows.append(dict(
+            name=name, kernel=kernel, backend=backend, dtype="float32",
+            compiled=ops.fused_default(), parity_ok=parity_ok,
+            max_abs_diff=diff, tol=tol,
+            config_source=cfg.source, config_params=dict(cfg.params),
+            t_fused_s=t_fused))
+    return rows
+
+
+def main(out: str = None):
+    rows = run_rows()
+    return merge_out(out, rows, "pinned_kernels",
+                     {"elementwise_shape": list(ELEM_SHAPE),
+                      "flash_shape": list(FLASH_SHAPE),
+                      "rwkv6_shape": list(RWKV_SHAPE),
+                      "tol": TOL})
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="BENCH_core.json artifact to append rows into")
+    ap.add_argument("--platform", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="pin the JAX backend (gpu additionally installs "
+                         "the XLA GPU performance preset) — "
+                         "repro.launch.env.configure_platform")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="fake N host devices "
+                         "(--xla_force_host_platform_device_count)")
+    args = ap.parse_args()
+    if args.platform is not None or args.host_devices is not None:
+        from repro.launch.env import configure_platform
+        configure_platform(args.platform, args.host_devices)
+    main(out=args.out)

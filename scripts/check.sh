@@ -20,9 +20,10 @@ for a in "$@"; do
 done
 
 # Static-analysis gate: reprolint (python -m repro.analysis) enforces the
-# standing policies as AST rules RL001-RL009 — compat drift, engine-seam
+# standing policies as AST rules RL001-RL010 — compat drift, engine-seam
 # ownership, host-sync discipline, donation safety, fused-path gating,
-# test-tier markers, tracked artifacts, model-eval seam.  It replaced the
+# test-tier markers, tracked artifacts, model-eval seam, accel-seam
+# ownership, kernel-tile literals.  It replaced the
 # old grep lints (which missed aliased imports like `from jax import
 # tree_map`).  A missing or crashing linter is a loud failure, never a
 # silent pass: the module is stdlib-only, so it must import even without

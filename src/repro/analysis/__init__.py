@@ -1,7 +1,7 @@
 """``repro.analysis`` — reprolint, the SRDS stack's AST invariant checker.
 
 An import-graph-aware static analysis pass enforcing the repo's standing
-policies (ROADMAP.md) as per-finding rule codes RL001-RL007, replacing the
+policies (ROADMAP.md) as per-finding rule codes RL001-RL010, replacing the
 grep pipelines that used to live in ``scripts/check.sh``:
 
 ==========  ======================  =============================================
@@ -15,6 +15,9 @@ RL004       donation-after-use      donated buffers are dead after the call
 RL005       fused-path-gating       Pallas dispatch via ``fused_default()``
 RL006       test-tier-markers       subprocess/multi-device tests marked slow/distributed
 RL007       tracked-artifacts       no build caches / dryrun outputs in git
+RL008       model-eval-seam         backbone evals only through the ``Denoiser`` seam
+RL009       accel-seam-ownership    mixing math only in ``repro.core.accel``
+RL010       kernel-tile-literals    tile/block sizes via ``repro.kernels.tuning``
 ==========  ======================  =============================================
 
 Run ``python -m repro.analysis [paths...]`` (text or ``--format=json``);

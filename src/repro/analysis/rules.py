@@ -1,4 +1,4 @@
-"""reprolint rules RL001-RL009: the repo's standing policies, mechanically.
+"""reprolint rules RL001-RL010: the repo's standing policies, mechanically.
 
 Each rule enforces one policy from ROADMAP.md "Standing policies" (the rule
 code is cross-referenced there and in README "Static analysis"):
@@ -28,6 +28,10 @@ code is cross-referenced there and in README "Static analysis"):
                                 solves, gamma systems) lives only in
                                 ``repro.core.accel``; drivers consume the
                                 ``Accelerator`` seam
+* RL010 kernel-tile-literals  — kernel tile/block/chunk sizes come from the
+                                ``repro.kernels.tuning`` seam; hardcoded
+                                integer tile kwargs (``block_q=32``) at call
+                                sites outside ``repro.kernels`` are flagged
 
 All rules are pure-AST (no JAX import anywhere in this package): they see
 through import aliases via :func:`repro.analysis.core.qualname`, which is
@@ -941,3 +945,54 @@ def rl009_accel_seam(mod: ModuleInfo) -> Iterable[Finding]:
                     f"module — Anderson/secant mixing math belongs to "
                     f"repro.core.accel; select an Accelerator "
                     f"(SRDSConfig(accel=...)) and let the engine apply it")
+
+
+# ==========================================================================
+# RL010 — kernel tile literals (launch sizes come from the tuning seam)
+# ==========================================================================
+
+# Kernel launch-shape kwargs owned by repro.kernels.tuning.  A hardcoded
+# integer for any of these at a call site outside the kernels package is a
+# size that silently stops tracking the tuner's per-backend tables — the
+# exact drift the seam exists to prevent.  Names passed *as variables*
+# (resolved configs, sweep candidates) are fine; only integer literals are
+# flagged.
+_RL010_TILE_KWARGS = frozenset({"block_q", "block_k", "block_rows",
+                                "tile_rows", "chunk", "chunk_target",
+                                "num_warps", "num_stages"})
+# The kernels package is the seam's owner: its heuristics, wrappers and
+# raw pallas_call entry points ARE where the defaults live.
+_RL010_OWNER = "src/repro/kernels/"
+
+
+def _rl010_exempt(path: str) -> bool:
+    return _RL010_OWNER in path.replace(os.sep, "/")
+
+
+def _int_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, int) and \
+            not isinstance(node.value, bool)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return _int_literal(node.operand)
+    return False
+
+
+@module_rule("RL010", "kernel-tile-literals",
+             "hardcoded kernel tile/block/chunk integer kwarg outside "
+             "repro.kernels — sizes come from the tuning seam")
+def rl010_tile_literals(mod: ModuleInfo) -> Iterable[Finding]:
+    if _rl010_exempt(mod.path):
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg in _RL010_TILE_KWARGS and _int_literal(kw.value):
+                yield _find(
+                    mod, node, "RL010", "kernel-tile-literals",
+                    f"hardcoded kernel tile size `{kw.arg}=...` at a call "
+                    f"site outside repro.kernels — launch shapes resolve "
+                    f"through repro.kernels.tuning (pass tuner= / "
+                    f"KernelTuner(overrides=...) so per-backend tables "
+                    f"and heuristics stay authoritative)")

@@ -29,6 +29,7 @@ __all__ = [
     "default_axis_types",
     "axis_size",
     "tpu_compiler_params",
+    "gpu_compiler_params",
     "cost_analysis",
     "tree",
 ]
@@ -163,6 +164,20 @@ def tpu_compiler_params(**kwargs):
     cls = getattr(pltpu, "CompilerParams", None)
     if cls is None:
         cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def gpu_compiler_params(**kwargs):
+    """``pltriton.CompilerParams(**kwargs)`` across the same rename.
+
+    The Triton lowering's options dataclass (``num_warps``,
+    ``num_stages``) is ``TritonCompilerParams`` on 0.4.x/0.5.x and
+    ``CompilerParams`` on newer JAX — the mirror image of the TPU
+    rename above.  Kernels must build it through here."""
+    from jax.experimental.pallas import triton as pltriton
+    cls = getattr(pltriton, "CompilerParams", None)
+    if cls is None:
+        cls = pltriton.TritonCompilerParams
     return cls(**kwargs)
 
 

@@ -41,8 +41,8 @@ class SRDSConfig:
     use_fused_update: route the predictor-corrector update + residual
                   accumulation through the Pallas kernel.  ``None`` (the
                   default) resolves at run time to "on where supported":
-                  compiled kernels on TPU, plain jnp elsewhere (interpreted
-                  Pallas would dominate CPU runtime) — see
+                  compiled kernels on TPU/GPU, plain jnp elsewhere
+                  (interpreted Pallas would dominate CPU runtime) — see
                   :func:`repro.kernels.ops.fused_default`.
     truncate:     converged-prefix truncation: refinement ``p`` runs its
                   fine solves and corrector sweep only on the active block
@@ -333,8 +333,9 @@ def windowed_evals(cost: IterationCost, lo_schedule):
 
 def resolve_fused(flag: Optional[bool]) -> bool:
     """Resolve a ``use_fused_*`` tri-state: an explicit bool wins; ``None``
-    means "on where supported" (compiled Pallas on TPU — interpreted Pallas
-    on CPU/GPU would dominate runtime, so those stay on the jnp path)."""
+    means "on where supported" (compiled Pallas on TPU and GPU — interpreted
+    Pallas elsewhere would dominate runtime, so e.g. CPU stays on the jnp
+    path)."""
     if flag is None:
         from repro.kernels import ops as kops
         return kops.fused_default()

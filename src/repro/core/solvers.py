@@ -44,7 +44,7 @@ class SolverConfig:
     eta: float = 0.0          # DDIM stochasticity (ddpm solver uses eta=1)
     noise_key: Optional[Any] = None  # PRNGKey for stochastic solvers (frozen noise)
     # Route the DDIM update through the Pallas op.  None = "on where
-    # supported" (compiled kernels on TPU; CPU/GPU keep the jnp path — see
+    # supported" (compiled kernels on TPU/GPU; CPU keeps the jnp path — see
     # repro.kernels.ops.fused_default); an explicit bool always wins.
     use_fused_kernel: Optional[bool] = None
     unroll: bool = False             # unroll multi-step solves (analysis mode)

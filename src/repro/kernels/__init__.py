@@ -1,10 +1,14 @@
-"""Pallas TPU kernels for SRDS hot spots (validated in interpret mode).
+"""Pallas kernels for SRDS hot spots (validated in interpret mode).
 
-flash_attention: backbone attention (fwd+bwd, causal/SWA/GQA)
-rwkv6_scan:      RWKV6 WKV recurrence (chunked, VMEM-resident state)
+flash_attention: backbone attention (fwd+bwd, causal/SWA/GQA; TPU + GPU
+                 kernel families)
+rwkv6_scan:      RWKV6 WKV recurrence (TPU chunked / GPU streaming)
 elementwise:     fused DDIM step + fused Parareal update/residual
+                 (lowering-portable)
 ops:             jit-ready dispatch wrappers;  ref: pure-jnp oracles
+tuning:          block/tile autotuning seam (overrides > committed
+                 per-backend tables > heuristics)
 """
-from . import ops, ref
+from . import ops, ref, tuning
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "tuning"]

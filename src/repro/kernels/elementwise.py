@@ -6,22 +6,28 @@ predictor-corrector (+ residual reduction, saving a separate full pass for
 the convergence norm) removes HBM round-trips on the latency-critical path.
 
 Layout: the ops wrapper flattens/pads operands to (rows, 128) — the TPU
-native lane width — and tiles rows.
+native lane width, and a warp-friendly lane count on the Triton lowering
+— and tiles rows.  These kernels are lowering-portable as written: no
+scratch is carried across grid steps (each row tile is independent, and
+the reduction outputs are per-tile partials summed by the wrapper), so
+the same body compiles on both the Mosaic (TPU) and Triton (GPU)
+pipelines.  Tile sizes are resolved per backend by
+:mod:`repro.kernels.tuning`; the constants here are the interpret-mode
+anchors that seam's heuristics reference.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 LANES = 128
-# Default row-tile size of the elementwise kernels.  The ops wrappers pad
-# row counts to a multiple of THIS constant whenever per-tile reduction
-# partials are consumed (a partial tile mapped past the array is an
-# unspecified read on compiled backends) — change them together.
+# Heuristic default row-tile size (the tuning seam's cpu/tpu anchor; GPU
+# resolves a smaller tile).  The ops wrappers pad row counts to a multiple
+# of the *resolved* tile size whenever per-tile reduction partials are
+# consumed (a partial tile mapped past the array is an unspecified read on
+# compiled backends) — resolve once, then pad and launch with the same
+# value.
 TILE_ROWS = 256
 
 

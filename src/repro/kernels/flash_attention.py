@@ -1,6 +1,11 @@
-"""Flash attention Pallas-TPU kernels (forward + backward).
+"""Flash attention Pallas kernels (forward + backward), TPU and GPU.
 
-TPU-native design decisions (vs a CUDA port):
+Two kernel families share the math (same ``_mask`` geometry, same
+online-softmax update, same ragged-row hygiene) but differ in how the KV
+reduction is structured, because the two lowerings disagree about grid
+semantics:
+
+TPU (Mosaic) family — ``_fwd_kernel`` / ``_dq_kernel`` / ``_dkv_kernel``:
   * online-softmax accumulators live in VMEM scratch and are carried across
     the *innermost sequential grid dimension* (TPU grids iterate the last
     axis sequentially per core — the idiomatic replacement for a CUDA
@@ -8,10 +13,29 @@ TPU-native design decisions (vs a CUDA port):
   * tiles default to (128, 128): the MXU systolic array is 128x128, and the
     lane dimension (head_dim) should be a multiple of 128 for full MXU
     utilization — the ops wrapper pads head_dim when needed;
-  * GQA is handled in the BlockSpec index_map (kv head = q head // group),
-    so grouped KV is never materialized/repeated in HBM;
   * causal and sliding-window masking skip fully-masked KV tiles with
     ``pl.when`` (no MXU work issued for skipped tiles).
+
+GPU (Triton) family — ``_fwd_kernel_gpu`` / ``_dq_kernel_gpu`` /
+``_dkv_kernel_gpu``:
+  * Triton grid cells are concurrent CUDA blocks — nothing carries across
+    grid steps, so the reduction axis moves *inside* the kernel: grid is
+    (batch*heads, q-tiles) and each program walks its live KV tiles with a
+    ``lax.fori_loop`` whose accumulators are loop carries (registers);
+  * the reduced operand arrives as one whole (padded) ref and tiles are
+    cut with ``pl.load``/``pl.dslice``; the wrappers zero-pad the walked
+    axis to a tile multiple while masks keep using the true lengths;
+  * tile skipping becomes loop *bounds*: the causal/window live-tile
+    predicates solved for the loop variable give [lo, hi) directly, so
+    masked tiles are never visited at all;
+  * ``num_warps``/``num_stages`` (tuning-seam params) reach Triton via
+    ``compat.gpu_compiler_params``.
+
+Both families are exercised in ``interpret=True`` mode on CPU (the parity
+suite); tile sizes come from :mod:`repro.kernels.tuning`.
+
+GQA is handled in the BlockSpec index_map (kv head = q head // group), so
+grouped KV is never materialized/repeated in HBM — both families.
 
 Forward saves the per-row logsumexp; backward recomputes probabilities
 tile-by-tile (two kernels: dQ over KV tiles; dK/dV over Q tiles).
@@ -109,12 +133,278 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc, m_sc, l_sc, *,
         lse_ref[0] = m_sc[...] + jnp.log(l_safe)
 
 
+# --------------------------------------------------------------------------
+# GPU (Triton) family: reduction axis inside the kernel, carries in registers
+# --------------------------------------------------------------------------
+
+def _pad_axis(x, axis, multiple):
+    """Zero-pad ``x`` along ``axis`` to a multiple of ``multiple``."""
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _kv_bounds(iq, *, causal, window, sq, sk, bq, bk, nk):
+    """[lo, hi) of live KV tiles for q-tile ``iq`` (loop-bound form of the
+    TPU kernels' ``pl.when`` live predicates; positions right-aligned)."""
+    q_last = iq * bq + bq - 1 + (sk - sq)
+    hi = nk
+    if causal:
+        hi = jnp.clip(q_last // bk + 1, 0, nk)
+    lo = 0
+    if window is not None:
+        q_first = iq * bq + (sk - sq)
+        lo = jnp.maximum(0, (q_first - window + 1) // bk)
+    return lo, hi
+
+
+def _q_bounds(ik, *, causal, window, sq, sk, bq, bk, nq):
+    """[lo, hi) of live Q tiles for kv-tile ``ik`` (the dK/dV loop)."""
+    lo = 0
+    if causal:
+        lo = jnp.maximum(0, (ik * bk - (sk - sq)) // bq)
+    hi = nq
+    if window is not None:
+        x = ik * bk + bk - 1 + window - (sk - sq)
+        hi = jnp.clip((x + bq - 1) // bq, 0, nq)
+    return lo, hi
+
+
+def _load_tile(refp, start, size):
+    """(size, D) f32 tile cut from a whole-axis 2D ref at row ``start``."""
+    return pl.load(refp, (pl.dslice(start, size), slice(None))).astype(
+        jnp.float32)
+
+
+def _fwd_kernel_gpu(q_ref, k_ref, v_ref, o_ref, lse_ref, *,
+                    scale, causal, window, sq, sk, bq, bk, nk):
+    iq = pl.program_id(1)
+    q = _clean(q_ref[...].astype(jnp.float32), _row_valid(bq, iq * bq, sq))
+    d = q.shape[-1]
+    lo, hi = _kv_bounds(iq, causal=causal, window=window, sq=sq, sk=sk,
+                        bq=bq, bk=bk, nk=nk)
+
+    def body(ik, carry):
+        acc, m_prev, l_prev = carry
+        kv_valid = _row_valid(bk, ik * bk, sk)
+        k = _clean(_load_tile(k_ref, ik * bk, bk), kv_valid)
+        v = _clean(_load_tile(v_ref, ik * bk, bk), kv_valid)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        keep = _mask(bq, bk, iq, ik, sq, sk, causal, window)
+        s = jnp.where(keep, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        # guard fully-masked rows: m_new == NEG_INF would give exp(0) == 1
+        p = jnp.where(keep, jnp.exp(s - m_new[:, None]), 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc, m, l = jax.lax.fori_loop(
+        lo, hi, body, (jnp.zeros((bq, d), jnp.float32),
+                       jnp.full((bq,), NEG_INF, jnp.float32),
+                       jnp.zeros((bq,), jnp.float32)))
+    l_safe = jnp.where(l == 0.0, 1.0, l)              # fully-masked rows -> 0
+    o_ref[...] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = m + jnp.log(l_safe)
+
+
+def _flash_fwd_gpu(q, k, v, *, causal, window, scale, bq, bk,
+                   compiler_params, interpret):
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    group = bh // bkv
+    # the in-kernel loop cuts KV tiles with pl.dslice: pad the walked axis
+    # to a tile multiple (masks keep using the true sk)
+    kp = _pad_axis(k, 1, bk)
+    vp = _pad_axis(v, 1, bk)
+    skp = kp.shape[1]
+    nk = skp // bk
+    kernel = functools.partial(_fwd_kernel_gpu, scale=scale, causal=causal,
+                               window=window, sq=sq, sk=sk, bq=bq, bk=bk,
+                               nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, pl.cdiv(sq, bq)),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, iq: (b, iq, 0)),
+            pl.BlockSpec((None, skp, d), lambda b, iq, g=group: (b // g, 0, 0)),
+            pl.BlockSpec((None, skp, d), lambda b, iq, g=group: (b // g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, iq: (b, iq, 0)),
+            pl.BlockSpec((None, bq), lambda b, iq: (b, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+        ],
+        compiler_params=compiler_params,
+        interpret=interpret,
+        name="srds_flash_fwd_gpu",
+    )(q, kp, vp)
+
+
+def _dq_kernel_gpu(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+                   scale, causal, window, sq, sk, bq, bk, nk):
+    iq = pl.program_id(1)
+    q_valid = _row_valid(bq, iq * bq, sq)
+    q = _clean(q_ref[...].astype(jnp.float32), q_valid)
+    do = _clean(do_ref[...].astype(jnp.float32), q_valid)
+    lse = jnp.where(q_valid[:, 0], lse_ref[...], 0.0)
+    delta = jnp.where(q_valid[:, 0], delta_ref[...], 0.0)
+    d = q.shape[-1]
+    lo, hi = _kv_bounds(iq, causal=causal, window=window, sq=sq, sk=sk,
+                        bq=bq, bk=bk, nk=nk)
+
+    def body(ik, dq_acc):
+        kv_valid = _row_valid(bk, ik * bk, sk)
+        k = _clean(_load_tile(k_ref, ik * bk, bk), kv_valid)
+        v = _clean(_load_tile(v_ref, ik * bk, bk), kv_valid)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        keep = _mask(bq, bk, iq, ik, sq, sk, causal, window)
+        p = jnp.where(keep, jnp.exp(jnp.where(keep, s, NEG_INF)
+                                    - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = jnp.where(keep, p * (dp - delta[:, None]) * scale, 0.0)
+        return dq_acc + jax.lax.dot(ds, k, preferred_element_type=jnp.float32)
+
+    dq = jax.lax.fori_loop(lo, hi, body, jnp.zeros((bq, d), jnp.float32))
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+
+
+def _dkv_kernel_gpu(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, scale, causal, window, sq, sk,
+                    bq, bk, nq):
+    ik = pl.program_id(1)
+    kv_valid = _row_valid(bk, ik * bk, sk)
+    k = _clean(k_ref[...].astype(jnp.float32), kv_valid)
+    v = _clean(v_ref[...].astype(jnp.float32), kv_valid)
+    d = k.shape[-1]
+    lo, hi = _q_bounds(ik, causal=causal, window=window, sq=sq, sk=sk,
+                       bq=bq, bk=bk, nq=nq)
+
+    def body(iq, carry):
+        dk_acc, dv_acc = carry
+        q_valid = _row_valid(bq, iq * bq, sq)
+        q = _clean(_load_tile(q_ref, iq * bq, bq), q_valid)
+        do = _clean(_load_tile(do_ref, iq * bq, bq), q_valid)
+        lse = jnp.where(q_valid[:, 0],
+                        pl.load(lse_ref, (pl.dslice(iq * bq, bq),)), 0.0)
+        delta = jnp.where(q_valid[:, 0],
+                          pl.load(delta_ref, (pl.dslice(iq * bq, bq),)), 0.0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        keep = _mask(bq, bk, iq, ik, sq, sk, causal, window)
+        p = jnp.where(keep, jnp.exp(jnp.where(keep, s, NEG_INF)
+                                    - lse[:, None]), 0.0)       # (bq, bk)
+        dv_acc = dv_acc + jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = jnp.where(keep, p * (dp - delta[:, None]) * scale, 0.0)
+        dk_acc = dk_acc + jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return dk_acc, dv_acc
+
+    dk, dv = jax.lax.fori_loop(
+        lo, hi, body, (jnp.zeros((bk, d), jnp.float32),
+                       jnp.zeros((bk, d), jnp.float32)))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _flash_bwd_gpu(q, k, v, do, lse, delta, *, causal, window, scale,
+                   bq, bk, compiler_params, interpret):
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    group = bh // bkv
+    kp = _pad_axis(k, 1, bk)
+    vp = _pad_axis(v, 1, bk)
+    skp, nk = kp.shape[1], kp.shape[1] // bk
+    kq = functools.partial(_dq_kernel_gpu, scale=scale, causal=causal,
+                           window=window, sq=sq, sk=sk, bq=bq, bk=bk, nk=nk)
+    dq = pl.pallas_call(
+        kq,
+        grid=(bh, pl.cdiv(sq, bq)),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, iq: (b, iq, 0)),
+            pl.BlockSpec((None, skp, d), lambda b, iq, g=group: (b // g, 0, 0)),
+            pl.BlockSpec((None, skp, d), lambda b, iq, g=group: (b // g, 0, 0)),
+            pl.BlockSpec((None, bq, d), lambda b, iq: (b, iq, 0)),
+            pl.BlockSpec((None, bq), lambda b, iq: (b, iq)),
+            pl.BlockSpec((None, bq), lambda b, iq: (b, iq)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda b, iq: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        compiler_params=compiler_params,
+        interpret=interpret,
+        name="srds_flash_dq_gpu",
+    )(q, kp, vp, do, lse, delta)
+
+    # dK/dV walks Q tiles in-kernel: pad the q-side arrays instead
+    qp = _pad_axis(q, 1, bq)
+    dop = _pad_axis(do, 1, bq)
+    lsep = _pad_axis(lse, 1, bq)
+    deltap = _pad_axis(delta, 1, bq)
+    sqp, nq = qp.shape[1], qp.shape[1] // bq
+    kkv = functools.partial(_dkv_kernel_gpu, scale=scale, causal=causal,
+                            window=window, sq=sq, sk=sk, bq=bq, bk=bk, nq=nq)
+    dk, dv = pl.pallas_call(
+        kkv,
+        grid=(bh, pl.cdiv(sk, bk)),
+        in_specs=[
+            pl.BlockSpec((None, sqp, d), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((None, bk, d), lambda b, ik, g=group: (b // g, ik, 0)),
+            pl.BlockSpec((None, bk, d), lambda b, ik, g=group: (b // g, ik, 0)),
+            pl.BlockSpec((None, sqp, d), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((None, sqp), lambda b, ik: (b, 0)),
+            pl.BlockSpec((None, sqp), lambda b, ik: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bk, d), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((None, bk, d), lambda b, ik: (b, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sk, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, sk, d), q.dtype),
+        ],
+        compiler_params=compiler_params,
+        interpret=interpret,
+        name="srds_flash_dkv_gpu",
+    )(qp, kp, vp, dop, lsep, deltap)
+    return dq, dk, dv
+
+
+def _gpu_params(num_warps, num_stages):
+    kw = {}
+    if num_warps is not None:
+        kw["num_warps"] = int(num_warps)
+    if num_stages is not None:
+        kw["num_stages"] = int(num_stages)
+    return compat.gpu_compiler_params(**kw)
+
+
 def flash_attention_fwd(q, k, v, *, causal=True, window=None, scale=None,
-                        block_q=128, block_k=128, interpret=False):
+                        block_q=128, block_k=128, num_warps=None,
+                        num_stages=None, plat="tpu", interpret=False):
     """q: (BH, Sq, D) already flattened over batch*q_heads; k/v: (BKV, Sk, D).
 
     ``group = BH // BKV`` kv-sharing factor (GQA) resolved via index_map.
-    Returns (o (BH, Sq, D), lse (BH, Sq)).
+    ``plat`` picks the kernel family ("tpu" grid-carried scratch vs "gpu"
+    in-kernel loop; see module docstring) — resolved by the ops layer from
+    the backend, orthogonal to ``interpret``.  ``num_warps``/``num_stages``
+    only apply to the Triton family.  Returns (o (BH, Sq, D), lse (BH, Sq)).
     """
     bh, sq, d = q.shape
     bkv, sk, _ = k.shape
@@ -122,6 +412,12 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=None, scale=None,
     scale = float(scale) if scale is not None else float(d) ** -0.5
     bq = min(block_q, sq)
     bk = min(block_k, sk)
+    if plat == "gpu":
+        return _flash_fwd_gpu(q, k, v, causal=causal, window=window,
+                              scale=scale, bq=bq, bk=bk,
+                              compiler_params=_gpu_params(num_warps,
+                                                          num_stages),
+                              interpret=interpret)
     grid = (bh, pl.cdiv(sq, bq), pl.cdiv(sk, bk))
 
     kernel = functools.partial(_fwd_kernel, scale=scale, causal=causal,
@@ -243,12 +539,14 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 
 def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=None,
-                        scale=None, block_q=128, block_k=128, interpret=False):
+                        scale=None, block_q=128, block_k=128, num_warps=None,
+                        num_stages=None, plat="tpu", interpret=False):
     """Returns (dq (BH,Sq,D), dk_g (BH,Sk,D), dv_g (BH,Sk,D)).
 
     dk/dv are produced per *q-head* (GQA groups not yet reduced); the ops
     wrapper sums over the group dimension — keeping the kernel free of
-    cross-grid-cell reductions.
+    cross-grid-cell reductions.  ``plat``/``num_warps``/``num_stages`` as
+    in :func:`flash_attention_fwd`.
     """
     bh, sq, d = q.shape
     bkv, sk, _ = k.shape
@@ -257,6 +555,12 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=None,
     bq = min(block_q, sq)
     bk = min(block_k, sk)
     delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    if plat == "gpu":
+        return _flash_bwd_gpu(q, k, v, do, lse, delta, causal=causal,
+                              window=window, scale=scale, bq=bq, bk=bk,
+                              compiler_params=_gpu_params(num_warps,
+                                                          num_stages),
+                              interpret=interpret)
 
     kq = functools.partial(_dq_kernel, scale=scale, causal=causal,
                            window=window, sq=sq, sk=sk, bq=bq, bk=bk)

@@ -1,11 +1,21 @@
 """Public jit-ready wrappers around the Pallas kernels.
 
-Dispatch policy: kernels run compiled on TPU and in ``interpret=True`` mode
+Dispatch policy: kernels run *compiled* on backends with a Pallas
+lowering — TPU (Mosaic) and GPU (Triton) — and in ``interpret=True`` mode
 elsewhere (this container is CPU-only — interpret mode executes the kernel
 body in Python, validating semantics against :mod:`repro.kernels.ref`).
+The backend also picks the kernel *family* where two exist: TPU-structured
+kernels carry state across the sequential innermost grid axis, GPU ones
+loop in-kernel (see the flash_attention/rwkv6_scan module docstrings).
 Set ``repro.kernels.ops.FORCE_REF = True`` to bypass kernels entirely (used
 by models on hot training paths where the interpreted kernel would dominate
 CPU test time).
+
+Tile/block sizes are never hardcoded here: every dispatch resolves its
+launch parameters through :mod:`repro.kernels.tuning` (overrides > committed
+per-backend tables > backend heuristics).  Call sites outside
+``repro.kernels`` must do the same — pass ``tuner=`` or explicit
+``KernelTuner`` overrides, not raw integers (reprolint RL010).
 """
 from __future__ import annotations
 
@@ -16,40 +26,64 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from . import ref
-from .elementwise import (LANES, TILE_ROWS, ddim_fused_pallas,
-                          parareal_update_pallas,
+from . import ref, tuning
+from .elementwise import (LANES, ddim_fused_pallas, parareal_update_pallas,
                           parareal_update_residual_pallas)
 from .flash_attention import flash_attention_bwd, flash_attention_fwd
 from .rwkv6_scan import rwkv6_wkv_pallas
 
 FORCE_REF = False
 
+# backends with a compiled Pallas lowering: Mosaic (tpu) and Triton (gpu).
+# Everything else runs the kernels interpreted (semantics-validation only).
+_COMPILED_BACKENDS = ("tpu", "gpu")
+
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return jax.default_backend() not in _COMPILED_BACKENDS
 
 
-# backends where falling back to the reference path is expected and
-# silent: TPU runs the compiled kernels, CPU is the known test/dev tier
-_QUIET_BACKENDS = ("tpu", "cpu")
+def _plat() -> str:
+    """Kernel family for the current backend ("gpu" Triton structure vs
+    "tpu" grid-carried structure; the latter is also the interpret-mode
+    default elsewhere)."""
+    return "gpu" if jax.default_backend() == "gpu" else "tpu"
+
+
+def _resolve(kernel: str, tuner: Optional[tuning.KernelTuner], *,
+             dtype=None, shape=None, **explicit) -> tuning.KernelConfig:
+    """Resolve a kernel config, treating non-None explicit kwargs as
+    overrides (an explicitly passed size always wins and marks the config
+    ``source="override"``)."""
+    overrides = {k: int(v) for k, v in explicit.items() if v is not None}
+    t = tuner if tuner is not None else tuning.get_tuner()
+    return t.resolve(kernel, dtype=dtype, shape=shape,
+                     overrides=overrides or None)
+
+
+# backends where the default path needs no warning: tpu/gpu run the
+# compiled kernels, cpu is the known interpret-mode test/dev tier
+_QUIET_BACKENDS = ("tpu", "gpu", "cpu")
 _warned_degraded = False
 
 
 def fused_default() -> bool:
     """Whether the fused elementwise Pallas path is on by default.
 
-    "On where supported" means the *compiled* kernels — i.e. a TPU backend.
-    Everywhere else the kernels only exist in ``interpret=True`` mode
+    Capability-driven: True exactly on backends with a *compiled* Pallas
+    lowering (``_COMPILED_BACKENDS`` — TPU via Mosaic, GPU via Triton).
+    Elsewhere the kernels only exist in ``interpret=True`` mode
     (Python-executed, for semantics validation), which would dominate the
-    sampler's runtime, so CPU/GPU default to the pure-jnp reference path.
-    ``FORCE_REF`` force-disables the kernels regardless of backend.
+    sampler's runtime, so e.g. CPU defaults to the pure-jnp reference
+    path.  ``FORCE_REF`` force-disables the kernels regardless of backend.
 
-    On an accelerator backend that is neither (GPU/ROCm), the silent
-    fallback is a real perf surprise — the deployment paid for an
-    accelerator and the fused update quietly runs unfused — so the first
-    call emits one structured ``UserWarning`` naming the backend and the
-    knobs (``use_fused`` / ``FORCE_REF``); subsequent calls stay silent.
+    On an accelerator backend with no Pallas lowering (e.g. a plugin
+    backend), the silent fallback is a real perf surprise — the deployment
+    paid for an accelerator and the fused update quietly runs unfused — so
+    the first call emits one structured ``UserWarning`` naming the backend
+    and the knobs (``use_fused`` / ``FORCE_REF`` / the
+    ``repro.kernels.tuning`` tables that would size a future lowering);
+    subsequent calls stay silent.
     """
     backend = jax.default_backend()
     global _warned_degraded
@@ -59,39 +93,48 @@ def fused_default() -> bool:
         warnings.warn(
             f"repro.kernels: fused Pallas elementwise path is OFF by "
             f"default on backend={backend!r} (compiled kernels ship for "
-            f"TPU only; elsewhere they exist in interpret mode, which "
-            f"would dominate runtime) — the pure-jnp reference path is "
-            f"used instead.  Pass use_fused=True to force the kernels, "
-            f"or set repro.kernels.ops.FORCE_REF=True to silence this "
-            f"by pinning the reference path.",
+            f"{_COMPILED_BACKENDS}; elsewhere they exist in interpret "
+            f"mode, which would dominate runtime) — the pure-jnp "
+            f"reference path is used instead.  Pass use_fused=True to "
+            f"force the kernels, set repro.kernels.ops.FORCE_REF=True to "
+            f"silence this by pinning the reference path, or — once a "
+            f"lowering exists for this backend — add it to "
+            f"_COMPILED_BACKENDS and commit a "
+            f"repro.kernels.tuning table for it.",
             UserWarning, stacklevel=2)
-    return (not FORCE_REF) and backend == "tpu"
+    return (not FORCE_REF) and backend in _COMPILED_BACKENDS
 
 
 # --------------------------------------------------------------------------
 # Flash attention (custom_vjp; Pallas fwd + Pallas bwd)
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _flash(q, k, v, causal, window, scale, block_q, block_k):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+def _flash(q, k, v, causal, window, scale, block_q, block_k, num_warps,
+           num_stages, plat):
     o, _ = flash_attention_fwd(q, k, v, causal=causal, window=window,
                                scale=scale, block_q=block_q, block_k=block_k,
-                               interpret=_interpret())
+                               num_warps=num_warps, num_stages=num_stages,
+                               plat=plat, interpret=_interpret())
     return o
 
 
-def _flash_fwd(q, k, v, causal, window, scale, block_q, block_k):
+def _flash_fwd(q, k, v, causal, window, scale, block_q, block_k, num_warps,
+               num_stages, plat):
     o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
                                  scale=scale, block_q=block_q, block_k=block_k,
-                                 interpret=_interpret())
+                                 num_warps=num_warps, num_stages=num_stages,
+                                 plat=plat, interpret=_interpret())
     return o, (q, k, v, o, lse)
 
 
-def _flash_bwd(causal, window, scale, block_q, block_k, res, do):
+def _flash_bwd(causal, window, scale, block_q, block_k, num_warps, num_stages,
+               plat, res, do):
     q, k, v, o, lse = res
     dq, dk_g, dv_g = flash_attention_bwd(
         q, k, v, o, lse, do, causal=causal, window=window, scale=scale,
-        block_q=block_q, block_k=block_k, interpret=_interpret())
+        block_q=block_q, block_k=block_k, num_warps=num_warps,
+        num_stages=num_stages, plat=plat, interpret=_interpret())
     group = q.shape[0] // k.shape[0]
     if group > 1:  # reduce GQA groups: (BH,...) -> (BKV,...)
         dk_g = dk_g.reshape(k.shape[0], group, *k.shape[1:]).sum(axis=1)
@@ -104,9 +147,21 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 
 def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
               causal: bool = True, window: Optional[int] = None,
-              scale: Optional[float] = None, block_q: int = 128,
-              block_k: int = 128, use_kernel: Optional[bool] = None):
-    """(B, Hq, Sq, D) x (B, Hkv, Sk, D) -> (B, Hq, Sq, D). GQA via Hq%Hkv==0."""
+              scale: Optional[float] = None,
+              block_q: Optional[int] = None, block_k: Optional[int] = None,
+              num_warps: Optional[int] = None,
+              num_stages: Optional[int] = None,
+              tuner: Optional[tuning.KernelTuner] = None,
+              plat: Optional[str] = None,
+              use_kernel: Optional[bool] = None):
+    """(B, Hq, Sq, D) x (B, Hkv, Sk, D) -> (B, Hq, Sq, D). GQA via Hq%Hkv==0.
+
+    Block sizes resolve through the tuning seam (``tuner`` or the process
+    default); explicit ``block_q``/``block_k``/``num_warps``/``num_stages``
+    act as overrides.  ``plat`` pins the kernel family (tests exercise the
+    Triton-structured kernels on CPU with ``plat="gpu"``); default follows
+    the backend.
+    """
     if use_kernel is None:
         use_kernel = not FORCE_REF
     if not use_kernel:
@@ -114,23 +169,22 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     b, hq, sq, d = q.shape
     hkv, sk = k.shape[1], k.shape[2]
     scale = float(scale) if scale is not None else float(d) ** -0.5
+    cfg = _resolve("flash", tuner, dtype=q.dtype, shape=(sq, sk, d),
+                   block_q=block_q, block_k=block_k, num_warps=num_warps,
+                   num_stages=num_stages)
     qf = q.reshape(b * hq, sq, d)
     kf = k.reshape(b * hkv, sk, d)
     vf = v.reshape(b * hkv, sk, d)
-    o = _flash(qf, kf, vf, causal, window, scale, block_q, block_k)
+    o = _flash(qf, kf, vf, causal, window, scale,
+               cfg.params["block_q"], cfg.params["block_k"],
+               cfg.params.get("num_warps"), cfg.params.get("num_stages"),
+               plat if plat is not None else _plat())
     return o.reshape(b, hq, sq, d)
 
 
 # --------------------------------------------------------------------------
 # RWKV6 WKV (kernel fwd; ref-autodiff bwd)
 # --------------------------------------------------------------------------
-
-def _pick_chunk(t: int, target: int = 32) -> int:
-    for c in range(min(target, t), 0, -1):
-        if t % c == 0:
-            return c
-    return 1
-
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=())
 def _wkv(r, k, v, w, u, s0):
@@ -152,11 +206,16 @@ _wkv.defvjp(_wkv_fwd, _wkv_bwd)
 
 
 def rwkv6_wkv(r, k, v, w, u, state=None, *, chunk: Optional[int] = None,
+              tuner: Optional[tuning.KernelTuner] = None,
+              plat: Optional[str] = None,
               use_kernel: Optional[bool] = None):
     """r,k,w: (B,H,T,Dk); v: (B,H,T,Dv); u: (H,Dk); state: (B,H,Dk,Dv).
 
     Returns (out (B,H,T,Dv), final_state).  Kernel forward; reference
     autodiff backward (training uses the pure-JAX chunked path in models).
+    The TPU family's chunk size comes from the tuning seam
+    (``chunk_target`` capped to a divisor of T); an explicit ``chunk``
+    overrides.  The GPU family streams timesteps in-kernel and ignores it.
     """
     bsz, h, t, dk = r.shape
     dv = v.shape[-1]
@@ -166,11 +225,17 @@ def rwkv6_wkv(r, k, v, w, u, state=None, *, chunk: Optional[int] = None,
         use_kernel = not FORCE_REF
     if not use_kernel:
         return ref.rwkv6_wkv(r, k, v, w, u, state)
-    c = chunk or _pick_chunk(t)
+    if chunk is None:
+        cfg = _resolve("rwkv6", tuner, dtype=r.dtype, shape=(t, dk))
+        c = tuning.pick_chunk(t, cfg.params["chunk_target"])
+    else:
+        c = int(chunk)
     flat = lambda x: x.reshape(bsz * h, *x.shape[2:])
     u_t = jnp.tile(u, (bsz, 1))
     out, s_fin = rwkv6_wkv_pallas(flat(r), flat(k), flat(v), flat(w), u_t,
-                                  flat(state), chunk=c, interpret=_interpret())
+                                  flat(state), chunk=c,
+                                  plat=plat if plat is not None else _plat(),
+                                  interpret=_interpret())
     return (out.reshape(bsz, h, t, dv),
             s_fin.reshape(bsz, h, dk, dv))
 
@@ -199,31 +264,45 @@ def _to_2d(x, row_multiple: int = 1):
     return flat.reshape(rows, LANES), n
 
 
-def ddim_fused(x, eps, a, b, *, use_kernel: Optional[bool] = None):
+def _tile_rows(tuner, dtype, shape, block_rows) -> int:
+    cfg = _resolve("elementwise", tuner, dtype=dtype, shape=shape,
+                   tile_rows=block_rows)
+    return cfg.params["tile_rows"]
+
+
+def ddim_fused(x, eps, a, b, *, tuner: Optional[tuning.KernelTuner] = None,
+               block_rows: Optional[int] = None,
+               use_kernel: Optional[bool] = None):
     if use_kernel is None:
         use_kernel = not FORCE_REF
     if not use_kernel:
         return ref.ddim_fused(x, eps, a, b)
+    tr = _tile_rows(tuner, x.dtype, x.shape, block_rows)
     x2, n = _to_2d(x)
     e2, _ = _to_2d(eps)
     ab = jnp.stack([jnp.asarray(a, jnp.float32),
                     jnp.asarray(b, jnp.float32)]).reshape(1, 2)
-    o = ddim_fused_pallas(x2, e2, ab, interpret=_interpret())
+    o = ddim_fused_pallas(x2, e2, ab, block_rows=tr, interpret=_interpret())
     return o.reshape(-1)[:n].reshape(x.shape)
 
 
-def parareal_update(y, cur, prev, *, use_kernel: Optional[bool] = None):
+def parareal_update(y, cur, prev, *,
+                    tuner: Optional[tuning.KernelTuner] = None,
+                    block_rows: Optional[int] = None,
+                    use_kernel: Optional[bool] = None):
     """Returns (y + cur - prev, sum|cur - prev|) fused in one pass."""
     if use_kernel is None:
         use_kernel = not FORCE_REF
     if not use_kernel:
         return ref.parareal_update(y, cur, prev)
-    # pad rows to the tile size: the L1 partials are consumed, so the last
-    # tile must not read past the array (see _to_2d)
-    y2, n = _to_2d(y, row_multiple=TILE_ROWS)
-    c2, _ = _to_2d(cur, row_multiple=TILE_ROWS)
-    p2, _ = _to_2d(prev, row_multiple=TILE_ROWS)
-    o, partials = parareal_update_pallas(y2, c2, p2, interpret=_interpret())
+    # pad rows to the resolved tile size: the L1 partials are consumed, so
+    # the last tile must not read past the array (see _to_2d)
+    tr = _tile_rows(tuner, y.dtype, y.shape, block_rows)
+    y2, n = _to_2d(y, row_multiple=tr)
+    c2, _ = _to_2d(cur, row_multiple=tr)
+    p2, _ = _to_2d(prev, row_multiple=tr)
+    o, partials = parareal_update_pallas(y2, c2, p2, block_rows=tr,
+                                         interpret=_interpret())
     return o.reshape(-1)[:n].reshape(y.shape), jnp.sum(partials)
 
 
@@ -241,17 +320,10 @@ def _to_2d_per_sample(x):
     return flat.reshape(k * rows, LANES), rows, n
 
 
-def _sample_tile_rows(rows: int, cap: int = TILE_ROWS) -> int:
-    """Largest divisor of ``rows`` not exceeding ``cap`` (tile rows must
-    divide the per-sample row count so partial tiles stay sample-local)."""
-    for br in range(min(rows, cap), 0, -1):
-        if rows % br == 0:
-            return br
-    return 1
-
-
 def parareal_update_residual(y, cur, prev, old, *, batched: bool = False,
                              batch_dims: Optional[int] = None,
+                             tuner: Optional[tuning.KernelTuner] = None,
+                             block_rows: Optional[int] = None,
                              use_kernel: Optional[bool] = None):
     """Fused predictor-corrector update + convergence-residual partials.
 
@@ -264,6 +336,8 @@ def parareal_update_residual(y, cur, prev, old, *, batched: bool = False,
     (legacy spelling ``batched=True``), 2 -> per-block per-sample
     ``(B, K)``, the sliding-window frontier feed (each leading-axes slice
     gets its own tile rows, so partials never straddle two slices).
+    Tile rows resolve through the tuning seam; ``block_rows`` overrides
+    (per-sample paths still cap it to a divisor of the sample row count).
     """
     if use_kernel is None:
         use_kernel = not FORCE_REF
@@ -282,25 +356,26 @@ def parareal_update_residual(y, cur, prev, old, *, batched: bool = False,
         flat = lambda t: t.reshape((-1,) + t.shape[nd:])
         out, resid = parareal_update_residual(
             flat(y), flat(cur), flat(prev), flat(old), batch_dims=1,
-            use_kernel=True)
+            tuner=tuner, block_rows=block_rows, use_kernel=True)
         return out.reshape(y.shape), resid.reshape(lead)
+    tr = _tile_rows(tuner, y.dtype, y.shape, block_rows)
     if nd == 0:
         # pad rows to the tile size so the consumed partials never cover
         # an out-of-bounds block region on compiled backends (zero rows
         # contribute |0 + 0 - 0 - 0| = 0 to the L1 sums)
-        y2, n = _to_2d(y, row_multiple=TILE_ROWS)
-        c2, _ = _to_2d(cur, row_multiple=TILE_ROWS)
-        p2, _ = _to_2d(prev, row_multiple=TILE_ROWS)
-        x2, _ = _to_2d(old, row_multiple=TILE_ROWS)
+        y2, n = _to_2d(y, row_multiple=tr)
+        c2, _ = _to_2d(cur, row_multiple=tr)
+        p2, _ = _to_2d(prev, row_multiple=tr)
+        x2, _ = _to_2d(old, row_multiple=tr)
         o, partials = parareal_update_residual_pallas(
-            y2, c2, p2, x2, interpret=_interpret())
+            y2, c2, p2, x2, block_rows=tr, interpret=_interpret())
         return o.reshape(-1)[:n].reshape(y.shape), jnp.sum(partials)
     k = y.shape[0]
     y2, rows, n = _to_2d_per_sample(y)
     c2, _, _ = _to_2d_per_sample(cur)
     p2, _, _ = _to_2d_per_sample(prev)
     x2, _, _ = _to_2d_per_sample(old)
-    br = _sample_tile_rows(rows)
+    br = tuning.sample_tile_rows(rows, tr)
     o, partials = parareal_update_residual_pallas(
         y2, c2, p2, x2, block_rows=br, interpret=_interpret())
     resid = partials.reshape(k, rows // br).sum(axis=1)

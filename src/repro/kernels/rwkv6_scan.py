@@ -1,9 +1,16 @@
-"""RWKV6 (Finch) WKV recurrence — Pallas TPU kernel.
+"""RWKV6 (Finch) WKV recurrence — Pallas kernels (TPU chunked + GPU).
 
-Chunked design: grid = (batch*heads, T/chunk); the (Dk, Dv) recurrent state
-lives in VMEM scratch and is carried across the sequential chunk axis (TPU
-grids execute the innermost axis in order — the state never round-trips to
-HBM between chunks, unlike a naive scan over pallas_calls).
+Chunked TPU design: grid = (batch*heads, T/chunk); the (Dk, Dv) recurrent
+state lives in VMEM scratch and is carried across the sequential chunk axis
+(TPU grids execute the innermost axis in order — the state never
+round-trips to HBM between chunks, unlike a naive scan over pallas_calls).
+
+The GPU (Triton) variant cannot carry scratch across grid steps (grid
+cells are concurrent CUDA blocks), so its grid is (batch*heads,) and one
+``lax.fori_loop`` streams all T timesteps with the (Dk, Dv) state as the
+loop carry (registers); rows are cut/written with ``pl.load``/``pl.store``.
+The chunk size is therefore a TPU-only tuning knob — the GPU kernel's
+state residency does not depend on it.
 
 Inside a chunk the recurrence is evaluated with an in-kernel ``lax.scan``
 over timesteps (matvec per step).  We deliberately chose the *sequential*
@@ -59,12 +66,64 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
         sT_ref[0] = s_fin.astype(sT_ref.dtype)
 
 
-def rwkv6_wkv_pallas(r, k, v, w, u, s0, *, chunk=32, interpret=False):
+def _wkv_kernel_gpu(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref,
+                    sT_ref, *, t):
+    u = u_ref[...].astype(jnp.float32)            # (Dk,)
+
+    def step(ti, s):
+        row = lambda ref: pl.load(
+            ref, (pl.dslice(ti, 1), slice(None)))[0].astype(jnp.float32)
+        r_t, k_t, v_t = row(r_ref), row(k_ref), row(v_ref)
+        dec_t = jnp.exp(-jnp.exp(row(w_ref)))
+        a = k_t[:, None] * v_t[None, :]                       # (Dk, Dv)
+        out = (r_t[None, :] @ (s + u[:, None] * a))[0]        # (Dv,)
+        pl.store(o_ref, (pl.dslice(ti, 1), slice(None)),
+                 out[None, :].astype(o_ref.dtype))
+        return dec_t[:, None] * s + a
+
+    s_fin = jax.lax.fori_loop(0, t, step, s0_ref[...].astype(jnp.float32))
+    sT_ref[...] = s_fin.astype(sT_ref.dtype)
+
+
+def _rwkv6_wkv_gpu(r, k, v, w, u, s0, *, interpret):
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    kern = functools.partial(_wkv_kernel_gpu, t=t)
+    return pl.pallas_call(
+        kern,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((None, t, dk), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t, dk), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t, dv), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t, dk), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, dk), lambda b: (b, 0)),
+            pl.BlockSpec((None, dk, dv), lambda b: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, t, dv), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, dk, dv), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dv), v.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        interpret=interpret,
+        name="srds_rwkv6_wkv_gpu",
+    )(r, k, v, w, u, s0)
+
+
+def rwkv6_wkv_pallas(r, k, v, w, u, s0, *, chunk=32, plat="tpu",
+                     interpret=False):
     """r,k,w: (BH, T, Dk); v: (BH, T, Dv); u: (BH, Dk); s0: (BH, Dk, Dv).
 
-    Returns (out (BH, T, Dv), final_state (BH, Dk, Dv)).  ``T % chunk == 0``
-    (the ops wrapper picks a divisor).
+    Returns (out (BH, T, Dv), final_state (BH, Dk, Dv)).  On the TPU
+    family ``T % chunk == 0`` (the ops wrapper picks a divisor via the
+    tuning seam); the GPU family streams all T steps in-kernel and
+    ignores ``chunk``.
     """
+    if plat == "gpu":
+        return _rwkv6_wkv_gpu(r, k, v, w, u, s0, interpret=interpret)
     bh, t, dk = r.shape
     dv = v.shape[-1]
     assert t % chunk == 0, (t, chunk)

@@ -32,7 +32,7 @@ from __future__ import annotations
 import os
 from typing import Optional
 
-__all__ = ["GPU_PERF_FLAGS", "configure_platform"]
+__all__ = ["GPU_PERF_FLAGS", "GPU_RUNTIME_ENV", "configure_platform"]
 
 # the XLA GPU performance preset (upstream gpu_performance_tips set):
 # fusion + async collectives + latency hiding, for serving-shaped work
@@ -43,6 +43,18 @@ GPU_PERF_FLAGS = (
     "--xla_gpu_enable_latency_hiding_scheduler=true",
     "--xla_gpu_enable_highest_priority_async_stream=true",
 )
+
+# GPU runtime preset env vars NOT carried in XLA_FLAGS: the client
+# allocator knobs (serving processes share the device with dataloaders /
+# sidecars, so the 75%-grab default is the first thing every deployment
+# script overrides) and runtime log verbosity.  Keys here are the
+# ``configure_platform`` kwarg names; values the env vars they set.
+GPU_RUNTIME_ENV = {
+    "gpu_preallocate": "XLA_PYTHON_CLIENT_PREALLOCATE",
+    "gpu_mem_fraction": "XLA_PYTHON_CLIENT_MEM_FRACTION",
+    "gpu_allocator": "XLA_PYTHON_CLIENT_ALLOCATOR",
+    "log_level": "TF_CPP_MIN_LOG_LEVEL",
+}
 
 
 def _merge_xla_flags(new_flags) -> str:
@@ -72,7 +84,11 @@ def _backend_initialized() -> bool:
 
 
 def configure_platform(platform: Optional[str] = None,
-                       host_device_count: Optional[int] = None) -> dict:
+                       host_device_count: Optional[int] = None, *,
+                       gpu_preallocate: Optional[bool] = None,
+                       gpu_mem_fraction: Optional[float] = None,
+                       gpu_allocator: Optional[str] = None,
+                       log_level: Optional[int] = None) -> dict:
     """Configure the JAX runtime for ``platform`` before backend init.
 
     Args:
@@ -84,9 +100,27 @@ def configure_platform(platform: Optional[str] = None,
         ``--xla_force_host_platform_device_count`` — the local-mesh
         substrate for the sharded/wavefront drivers and the serving
         engine's ``data_axis`` on machines without real accelerators.
+      gpu_preallocate: ``XLA_PYTHON_CLIENT_PREALLOCATE`` — whether the
+        client grabs its memory pool up front (JAX default True/75%).
+        ``False`` is the serving-friendly setting when the device is
+        shared with other processes.
+      gpu_mem_fraction: ``XLA_PYTHON_CLIENT_MEM_FRACTION`` — pool size as
+        a fraction of device memory (only meaningful with preallocation).
+      gpu_allocator: ``XLA_PYTHON_CLIENT_ALLOCATOR`` — ``"default"`` |
+        ``"platform"`` (allocate/free on demand; slow but exact — the
+        autotune sweep's setting so candidate configs don't fight the
+        pool) | ``"bfc"`` | ``"cuda_async"``.
+      log_level: ``TF_CPP_MIN_LOG_LEVEL`` — runtime log verbosity (4
+        silences the C++ backend chatter in benchmark output).
 
-    Returns a dict of what was applied (``platform``, ``xla_flags``) —
-    handy for benchmark metadata blocks.
+    The allocator knobs are plain env vars (not XLA_FLAGS) but obey the
+    same read-once-at-init rule, hence they live behind the same
+    before-init guard.  They are only *applied* when explicitly passed —
+    ``configure_platform("gpu")`` alone never overrides a deployment's
+    externally-set allocator env.
+
+    Returns a dict of what was applied (``platform``, ``xla_flags``,
+    ``env``) — handy for benchmark metadata blocks.
 
     Raises ``RuntimeError`` if the JAX backend already initialized:
     XLA reads the environment exactly once, so a late call would be a
@@ -94,6 +128,10 @@ def configure_platform(platform: Optional[str] = None,
     """
     if platform is not None and platform not in ("cpu", "gpu", "tpu"):
         raise ValueError(f"platform must be cpu|gpu|tpu, got {platform!r}")
+    if gpu_allocator is not None and gpu_allocator not in (
+            "default", "platform", "bfc", "cuda_async"):
+        raise ValueError(f"gpu_allocator must be default|platform|bfc|"
+                         f"cuda_async, got {gpu_allocator!r}")
     if _backend_initialized():
         raise RuntimeError(
             "configure_platform() after the JAX backend initialized: "
@@ -108,7 +146,18 @@ def configure_platform(platform: Optional[str] = None,
         flags.extend(GPU_PERF_FLAGS)
     xla_flags = _merge_xla_flags(flags) if flags \
         else os.environ.get("XLA_FLAGS", "")
+    env = {}
+    if gpu_preallocate is not None:
+        env[GPU_RUNTIME_ENV["gpu_preallocate"]] = \
+            "true" if gpu_preallocate else "false"
+    if gpu_mem_fraction is not None:
+        env[GPU_RUNTIME_ENV["gpu_mem_fraction"]] = f"{gpu_mem_fraction:.2f}"
+    if gpu_allocator is not None:
+        env[GPU_RUNTIME_ENV["gpu_allocator"]] = gpu_allocator
+    if log_level is not None:
+        env[GPU_RUNTIME_ENV["log_level"]] = str(int(log_level))
+    os.environ.update(env)
     if platform is not None:
         import jax
         jax.config.update("jax_platform_name", platform)
-    return {"platform": platform, "xla_flags": xla_flags}
+    return {"platform": platform, "xla_flags": xla_flags, "env": env}

@@ -1,0 +1,15 @@
+"""Seeded RL010 violations: hardcoded tile sizes at dispatch call sites."""
+from repro.kernels import ops
+
+
+def attend(q, k, v):
+    return ops.attention(q, k, v, block_q=32, block_k=32)   # line 6: 2 hits
+
+
+def recur(r, k, v, w, u):
+    return ops.rwkv6_wkv(r, k, v, w, u, chunk=16)           # line 10
+
+
+def fused(y, c, p, o, helper):
+    return helper(y, c, p, o,
+                  block_rows=-8)                            # line 14 (call)

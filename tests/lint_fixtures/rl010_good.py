@@ -1,0 +1,25 @@
+"""RL010-clean dispatch: sizes come from the tuning seam, not literals."""
+from repro.kernels import ops, tuning
+
+TUNER = tuning.KernelTuner(overrides={"flash": {"block_q": 32,
+                                                "block_k": 32}})
+
+
+def attend(q, k, v):
+    # overrides live inside the tuner config, not at the call site
+    return ops.attention(q, k, v, tuner=TUNER)
+
+
+def attend_resolved(q, k, v, cfg):
+    # variables (resolved configs, sweep candidates) are not literals
+    return ops.attention(q, k, v, block_q=cfg.params["block_q"],
+                         block_k=cfg.params["block_k"])
+
+
+def recur(r, k, v, w, u, chunk_cap):
+    return ops.rwkv6_wkv(r, k, v, w, u, chunk=chunk_cap)
+
+
+def unrelated_kwargs(fn, x):
+    # same-named kwarg families elsewhere are out of rule vocabulary
+    return fn(x, moe_chunk=8192, block_size=4)

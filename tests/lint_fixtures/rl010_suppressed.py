@@ -1,0 +1,8 @@
+"""A deliberate raw-entry-point literal, recorded via suppression."""
+from repro.kernels.elementwise import parareal_update_residual_pallas
+
+
+def raw_kernel_probe(y, c, p, o):
+    # the tile size IS the subject under test  # reprolint: disable=RL010
+    return parareal_update_residual_pallas(y, c, p, o, block_rows=2,
+                                           interpret=True)

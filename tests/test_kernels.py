@@ -9,9 +9,14 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, tuning
 
 KEYS = jax.random.split(jax.random.PRNGKey(0), 8)
+
+# tile sizes route through the tuning seam (RL010): one override tuner
+# instead of raw block integers at every dispatch call site
+TUNER32 = tuning.KernelTuner(overrides={"flash": {"block_q": 32,
+                                                  "block_k": 32}})
 
 
 # --------------------------------------------------------------------------
@@ -39,7 +44,7 @@ def test_flash_attention_fwd(case):
     k = jax.random.normal(KEYS[1], (b, hkv, sk, d))
     v = jax.random.normal(KEYS[2], (b, hkv, sk, d))
     out = ops.attention(q, k, v, causal=causal, window=win,
-                        block_q=32, block_k=32, use_kernel=True)
+                        tuner=TUNER32, use_kernel=True)
     exp = ref.attention(q, k, v, causal=causal, window=win)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                rtol=2e-5, atol=2e-5)
@@ -58,7 +63,7 @@ def test_flash_attention_grads(case):
             fn(q, k, v)))
 
     gk = jax.grad(loss(lambda q, k, v: ops.attention(
-        q, k, v, causal=causal, window=win, block_q=32, block_k=32,
+        q, k, v, causal=causal, window=win, tuner=TUNER32,
         use_kernel=True)), (0, 1, 2))(q, k, v)
     gr = jax.grad(loss(lambda q, k, v: ref.attention(
         q, k, v, causal=causal, window=win)), (0, 1, 2))(q, k, v)
@@ -72,7 +77,7 @@ def test_flash_attention_dtypes(dtype):
     q = jax.random.normal(KEYS[0], (1, 4, 64, 32), dtype)
     k = jax.random.normal(KEYS[1], (1, 2, 64, 32), dtype)
     v = jax.random.normal(KEYS[2], (1, 2, 64, 32), dtype)
-    out = ops.attention(q, k, v, block_q=32, block_k=32, use_kernel=True)
+    out = ops.attention(q, k, v, tuner=TUNER32, use_kernel=True)
     exp = ref.attention(q, k, v)
     assert out.dtype == dtype
     tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
@@ -89,7 +94,7 @@ def test_flash_attention_property(sq, dk, hq, group, causal):
     q = jax.random.normal(KEYS[3], (1, hkv * group, sq, dk))
     k = jax.random.normal(KEYS[4], (1, hkv, sq, dk))
     v = jax.random.normal(KEYS[5], (1, hkv, sq, dk))
-    out = ops.attention(q, k, v, causal=causal, block_q=32, block_k=32,
+    out = ops.attention(q, k, v, causal=causal, tuner=TUNER32,
                         use_kernel=True)
     exp = ref.attention(q, k, v, causal=causal)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp),

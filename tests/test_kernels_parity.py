@@ -6,14 +6,21 @@ explicit ``interpret=True`` CPU entry points.
 Unlike tests/test_kernels.py this file needs no ``hypothesis``: the parity
 matrix here must run on every environment (it is the ground truth for
 flipping the fused path on by default where kernels compile)."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, tuning
 
 KEYS = jax.random.split(jax.random.PRNGKey(42), 4)
+
+# tile sizes for tests come from the tuning seam (RL010): explicit tuner
+# overrides, not raw integers at the dispatch call sites
+TUNER32 = tuning.KernelTuner(overrides={"flash": {"block_q": 32,
+                                                  "block_k": 32}})
 
 
 @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
@@ -147,6 +154,8 @@ def test_parareal_residual_kernel_interpret_entry_point():
     """The raw 2D fused-residual kernel under explicit interpret=True."""
     from repro.kernels.elementwise import parareal_update_residual_pallas
     y, c, p, o = (jax.random.normal(k, (6, 128)) for k in KEYS)
+    # raw kernel entry point: the tile size IS the subject under test, so
+    # the literal is intentional  # reprolint: disable=RL010
     out, partials = parareal_update_residual_pallas(y, c, p, o,
                                                     block_rows=2,
                                                     interpret=True)
@@ -185,7 +194,7 @@ def test_flash_attention_interpret_parity(case, dtype):
     q = jax.random.normal(KEYS[0], (b, hq, sq, d), dt)
     k = jax.random.normal(KEYS[1], (b, hkv, sk, d), dt)
     v = jax.random.normal(KEYS[2], (b, hkv, sk, d), dt)
-    out = ops.attention(q, k, v, causal=causal, block_q=32, block_k=32,
+    out = ops.attention(q, k, v, causal=causal, tuner=TUNER32,
                         use_kernel=True)
     exp = ref.attention(q, k, v, causal=causal)
     assert out.shape == exp.shape and out.dtype == dt
@@ -196,14 +205,15 @@ def test_flash_attention_interpret_parity(case, dtype):
 
 
 def test_fused_default_resolution():
-    """fused_default is on only where compiled kernels exist (TPU) and
-    never under FORCE_REF; the tri-state resolver honors explicit bools."""
+    """fused_default is on exactly where compiled kernels exist (the
+    TPU/GPU capability set) and never under FORCE_REF; the tri-state
+    resolver honors explicit bools."""
     from repro.core.engine import resolve_fused
     # this test *is* the resolver's oracle, so the raw backend probe is
     # intentional here  # reprolint: disable=RL005
-    on_tpu = jax.default_backend() == "tpu"
-    assert ops.fused_default() == on_tpu
-    assert resolve_fused(None) == on_tpu
+    compiled = jax.default_backend() in ops._COMPILED_BACKENDS
+    assert ops.fused_default() == compiled
+    assert resolve_fused(None) == compiled
     assert resolve_fused(True) is True
     assert resolve_fused(False) is False
     saved = ops.FORCE_REF
@@ -212,3 +222,215 @@ def test_fused_default_resolution():
         assert ops.fused_default() is False
     finally:
         ops.FORCE_REF = saved
+
+
+@pytest.fixture
+def _fake_backend(monkeypatch):
+    """Monkeypatch jax.default_backend (what ops probes), reset the
+    one-shot warning latch, and pin FORCE_REF=False around each use —
+    other test modules flip it True process-wide for CPU speed, which
+    would mask the capability logic under test here."""
+    def set_backend(name):
+        monkeypatch.setattr(jax, "default_backend", lambda: name)
+    monkeypatch.setattr(ops, "_warned_degraded", False)
+    monkeypatch.setattr(ops, "FORCE_REF", False)
+    yield set_backend
+
+
+def test_fused_default_true_on_gpu(_fake_backend):
+    """GPU is in the compiled capability tier: fused on, no warning."""
+    _fake_backend("gpu")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert ops.fused_default() is True
+        assert ops._interpret() is False
+        assert ops._plat() == "gpu"
+
+
+@pytest.mark.parametrize("backend", ["tpu", "gpu", "cpu"])
+def test_fused_default_never_warns_on_known_tiers(_fake_backend, backend):
+    """The degrade warning must never fire on tpu/gpu (compiled) or cpu
+    (the known interpret-mode dev tier)."""
+    _fake_backend(backend)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        for _ in range(3):
+            ops.fused_default()
+
+
+def test_fused_default_warns_once_on_unsupported_backend(_fake_backend):
+    """A backend with no Pallas lowering gets exactly one structured
+    warning naming the knobs (including the tuning seam), then silence."""
+    _fake_backend("rocm")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert ops.fused_default() is False
+        assert ops.fused_default() is False      # second call: silent
+    msgs = [w for w in caught if issubclass(w.category, UserWarning)]
+    assert len(msgs) == 1
+    text = str(msgs[0].message)
+    assert "rocm" in text and "use_fused" in text and "FORCE_REF" in text
+    assert "repro.kernels.tuning" in text
+
+
+def test_fused_default_no_warning_under_force_ref(_fake_backend):
+    """FORCE_REF pins the reference path deliberately — no warning even
+    on an unsupported backend."""
+    _fake_backend("rocm")
+    saved = ops.FORCE_REF
+    try:
+        ops.FORCE_REF = True
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert ops.fused_default() is False
+    finally:
+        ops.FORCE_REF = saved
+
+
+# ---------------------------------------------------------------------------
+# Tuned-config parity matrix: (default | table-resolved | override) configs
+# x f32/bf16 x non-tile-multiple shapes, interpret mode (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def _table_for(kernel, dtype, shape, params):
+    """An in-memory one-entry tuning table hitting exactly this lookup."""
+    return tuning.KernelTuner(tables={"cpu": {
+        "version": tuning.TABLE_SCHEMA_VERSION, "backend": "cpu",
+        "entries": [{"kernel": kernel, "dtype": jnp.dtype(dtype).name,
+                     "bucket": list(tuning.bucket_for(kernel, shape)),
+                     "params": params}]}})
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("cfgname", ["default", "table", "override"])
+def test_elementwise_tuned_config_parity(dtype, cfgname):
+    """parareal_update_residual under all three tuner resolution tiers:
+    f32 main outputs are *bitwise* vs ref (same op order per element);
+    the reduction partials differ only in summation order (tolerance)."""
+    dt = jnp.dtype(dtype)
+    shape = (3, 129)                 # non-lane-multiple -> padding path
+    y, c, p, o = (jax.random.normal(k, shape, dt) for k in KEYS)
+    if cfgname == "default":
+        tuner = tuning.KernelTuner(table_dir="/nonexistent")
+        want_src = "heuristic"
+    elif cfgname == "table":
+        tuner = _table_for("elementwise", dt, shape, {"tile_rows": 2})
+        want_src = "table"
+    else:
+        tuner = tuning.KernelTuner(
+            overrides={"elementwise": {"tile_rows": 1}})
+        want_src = "override"
+    assert tuner.resolve("elementwise", backend="cpu", dtype=dt,
+                         shape=shape).source == want_src
+    out_k, r_k = ops.parareal_update_residual(y, c, p, o, tuner=tuner,
+                                              use_kernel=True)
+    out_r, r_r = ref.parareal_update_residual(y, c, p, o)
+    if dtype == "float32":
+        assert np.array_equal(np.asarray(out_k), np.asarray(out_r))
+    else:
+        np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                                   np.asarray(out_r, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(float(r_k), float(r_r),
+                               rtol=3e-2 if dtype == "bfloat16" else 1e-4)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("cfgname", ["default", "table", "override"])
+def test_flash_tuned_config_parity(dtype, cfgname):
+    """ops.attention under all three tuner resolution tiers on a
+    non-tile-multiple GQA case (boundary buckets)."""
+    b, hq, hkv, sq, sk, d, causal = 1, 4, 2, 33, 49, 16, True
+    dt = jnp.dtype(dtype)
+    q = jax.random.normal(KEYS[0], (b, hq, sq, d), dt)
+    k = jax.random.normal(KEYS[1], (b, hkv, sk, d), dt)
+    v = jax.random.normal(KEYS[2], (b, hkv, sk, d), dt)
+    if cfgname == "default":
+        tuner = tuning.KernelTuner(table_dir="/nonexistent")
+        want_src = "heuristic"
+    elif cfgname == "table":
+        tuner = _table_for("flash", dt, (sq, sk, d),
+                           {"block_q": 16, "block_k": 8})
+        want_src = "table"
+    else:
+        tuner = TUNER32
+        want_src = "override"
+    assert tuner.resolve("flash", backend="cpu", dtype=dt,
+                         shape=(sq, sk, d)).source == want_src
+    out = ops.attention(q, k, v, causal=causal, tuner=tuner,
+                        use_kernel=True)
+    exp = ref.attention(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == "bfloat16" else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# GPU (Triton-structured) kernel family, exercised via interpret=True
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize(
+    "case", FLASH_CASES,
+    ids=lambda c: f"B{c[0]}H{c[1]}-{c[2]}S{c[3]}x{c[4]}D{c[5]}c{int(c[6])}")
+def test_flash_gpu_family_interpret_parity(case, dtype):
+    """The Triton-structured flash kernels (in-kernel KV loop, register
+    carries) against the same oracle matrix as the TPU family — pinned on
+    CPU via interpret=True, plat="gpu"."""
+    b, hq, hkv, sq, sk, d, causal = case
+    dt = jnp.dtype(dtype)
+    q = jax.random.normal(KEYS[0], (b, hq, sq, d), dt)
+    k = jax.random.normal(KEYS[1], (b, hkv, sk, d), dt)
+    v = jax.random.normal(KEYS[2], (b, hkv, sk, d), dt)
+    out = ops.attention(q, k, v, causal=causal, tuner=TUNER32, plat="gpu",
+                        use_kernel=True)
+    exp = ref.attention(q, k, v, causal=causal)
+    assert out.shape == exp.shape and out.dtype == dt
+    tol = 2e-2 if dtype == "bfloat16" else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [None, 7])
+def test_flash_gpu_family_grads_and_window(window):
+    """Backward parity for the GPU family (dq/dkv kernels with in-kernel
+    loops), including the sliding-window live-tile loop bounds."""
+    b, hq, hkv, sq, sk, d = 1, 4, 2, 33, 33, 8
+    q = jax.random.normal(KEYS[0], (b, hq, sq, d))
+    k = jax.random.normal(KEYS[1], (b, hkv, sk, d))
+    v = jax.random.normal(KEYS[2], (b, hkv, sk, d))
+
+    def loss(fn):
+        return jax.grad(lambda q, k, v: jnp.sum(jnp.cos(fn(q, k, v))),
+                        argnums=(0, 1, 2))(q, k, v)
+
+    g_ref = loss(lambda q, k, v: ref.attention(q, k, v, causal=True,
+                                               window=window))
+    g_gpu = loss(lambda q, k, v: ops.attention(
+        q, k, v, causal=True, window=window, tuner=TUNER32, plat="gpu",
+        use_kernel=True))
+    for a, bb in zip(g_ref, g_gpu):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                   rtol=1e-4, atol=2e-5)
+
+
+def test_rwkv6_gpu_family_interpret_parity():
+    """The streaming GPU WKV kernel (single fori_loop, register-resident
+    state) vs the oracle — including a T that the TPU chunking would
+    split, which the GPU family ignores."""
+    bsz, h, t, dk, dv = 2, 2, 24, 8, 12
+    ks = jax.random.split(KEYS[3], 5)
+    r = jax.random.normal(ks[0], (bsz, h, t, dk))
+    k = jax.random.normal(ks[1], (bsz, h, t, dk))
+    v = jax.random.normal(ks[2], (bsz, h, t, dv))
+    w = jax.random.normal(ks[3], (bsz, h, t, dk))
+    u = jax.random.normal(ks[4], (h, dk))
+    out_k, s_k = ops.rwkv6_wkv(r, k, v, w, u, plat="gpu", use_kernel=True)
+    out_r, s_r = ref.rwkv6_wkv(r, k, v, w, u,
+                               jnp.zeros((bsz, h, dk, dv), jnp.float32))
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-5, atol=1e-5)

@@ -198,6 +198,43 @@ def test_rl009_scope_covers_drivers_and_serve_only():
     assert not _rl009_in_scope("benchmarks/table13_accel.py")
 
 
+# ---------------------------------------------------------------- RL010
+
+def test_rl010_fires_on_hardcoded_tile_literals():
+    report = lint_fixture("rl010_bad.py")
+    assert codes_and_lines(report) == [
+        ("RL010", 6),   # block_q=32
+        ("RL010", 6),   # block_k=32
+        ("RL010", 10),  # chunk=16
+        ("RL010", 14),  # block_rows=-8 (anchored at the call)
+    ]
+    for f in report.findings:
+        assert f.rule == "kernel-tile-literals"
+        assert "repro.kernels.tuning" in f.message
+
+
+def test_rl010_clean_on_tuner_routed_twin():
+    assert lint_fixture("rl010_good.py").findings == []
+
+
+def test_rl010_suppressions_are_recorded_not_discarded():
+    report = lint_fixture("rl010_suppressed.py")
+    assert report.findings == []
+    assert codes_and_lines(
+        LintReport(report.suppressed, [], 1, [])) == [("RL010", 7)]
+
+
+def test_rl010_kernel_package_owns_its_literals():
+    # the tile constants themselves live in repro.kernels — the seam's
+    # heuristics and wrapper defaults are the one legitimate home
+    from repro.analysis.rules import _rl010_exempt
+    assert _rl010_exempt("src/repro/kernels/ops.py")
+    assert _rl010_exempt("src/repro/kernels/tuning.py")
+    assert not _rl010_exempt("src/repro/core/engine.py")
+    assert not _rl010_exempt("benchmarks/table14_kernels.py")
+    assert not _rl010_exempt("tests/lint_fixtures/rl010_bad.py")
+
+
 # ---------------------------------------------------------------- RL007
 
 def test_rl007_pure_pattern_core():
@@ -273,7 +310,7 @@ def test_hot_loop_marker_is_a_noop():
 
 def test_rule_registry_is_complete_and_ordered():
     codes = [c for c, _, _ in rule_table()]
-    assert codes == [f"RL00{i}" for i in range(1, 10)]
+    assert codes == [f"RL00{i}" for i in range(1, 10)] + ["RL010"]
 
 
 def test_analysis_package_is_stdlib_only():
@@ -309,7 +346,7 @@ def test_cli_json_output_exit_code_and_artifact(tmp_path, capsys):
     assert payload["files_scanned"] == 1
     assert {f["code"] for f in payload["findings"]} == {"RL001"}
     assert {r["code"] for r in payload["rules"]} == \
-        {f"RL00{i}" for i in range(1, 10)}
+        {f"RL00{i}" for i in range(1, 10)} | {"RL010"}
     assert json.loads(out_file.read_text())["findings"] == payload["findings"]
 
 
